@@ -1,0 +1,133 @@
+"""Shared benchmark substrate.
+
+All paper-table benchmarks run against the same tiny-but-real LM: a 4-layer
+d=128 llama-style decoder *trained* on the synthetic Zipf-Markov corpus until
+it clearly beats the unigram floor, then PTQ'd by each method. Perplexities
+are therefore meaningful orderings (the paper's Wikitext2 protocol scaled to
+CPU): the "calib" split is the C4 stand-in, "valid" the Wikitext2 stand-in.
+
+The trained checkpoint is cached under experiments/bench_model/ so the whole
+suite trains exactly once.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.data import DataLoader, LoaderConfig, calibration_batch
+from repro.launch.steps import make_train_step
+from repro.models.loss import lm_loss, perplexity
+from repro.models.model import Model, build_model
+from repro.optim import AdamWConfig, adamw_init
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CACHE = os.path.join(ROOT, "experiments", "bench_model")
+
+# Deep-enough and hard-enough that binarization error is visible: with a
+# 4-layer model on an easy corpus even RTN-1bit barely degrades (no signal
+# for the paper's orderings); 8 layers + vocab 1024 + high-entropy chain put
+# 1-bit PTQ in the regime the paper studies.
+BENCH_CFG = ModelConfig(
+    arch_id="bench-20m", family="dense", n_layers=8, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=384, vocab=1024, head_dim=32)
+
+SEQ = 128
+TRAIN_STEPS = 600
+# high-entropy chain: more successors + flatter marginal = harder next-token
+LOADER_KW = dict(zipf_a=1.05, branch=48)
+
+
+def get_bench_model(cfg: ModelConfig = BENCH_CFG, steps: int = TRAIN_STEPS,
+                    tag: str = "default") -> tuple[Model, dict]:
+    """Train (or load the cached) benchmark model."""
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = os.path.join(CACHE, tag)
+    try:
+        params, _ = load_checkpoint(cache, params)
+        return model, params
+    except FileNotFoundError:
+        pass
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)),
+                      donate_argnums=(0, 1))
+    loader = DataLoader(LoaderConfig(
+        global_batch=16, seq_len=SEQ, vocab=cfg.vocab, split="train",
+        **LOADER_KW))
+    opt = adamw_init(params)
+    for i in range(steps):
+        b = next(loader)
+        params, opt, m = step_fn(
+            params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+    save_checkpoint(cache, steps, params)
+    return model, params
+
+
+def eval_ppl(model: Model, params, split: str = "valid", n_batches: int = 4,
+             batch: int = 8) -> float:
+    """Perplexity on a held-out split (the Wikitext2 protocol stand-in)."""
+    loader = DataLoader(LoaderConfig(
+        global_batch=batch, seq_len=SEQ, vocab=model.cfg.vocab, split=split,
+        **LOADER_KW))
+    fwd = jax.jit(lambda p, t: model.forward(p, t)[0])
+    tot, cnt = 0.0, 0
+    for _ in range(n_batches):
+        b = next(loader)
+        logits = fwd(params, jnp.asarray(b["tokens"]))
+        tot += float(lm_loss(logits, jnp.asarray(b["labels"]),
+                             model.cfg.vocab, z_loss=0.0))
+        cnt += 1
+    return perplexity(tot / cnt)
+
+
+def eval_top1(model: Model, params, split: str = "valid",
+              n_batches: int = 2) -> float:
+    """Next-token top-1 accuracy — the zero-shot-accuracy stand-in."""
+    loader = DataLoader(LoaderConfig(
+        global_batch=8, seq_len=SEQ, vocab=model.cfg.vocab, split=split,
+        **LOADER_KW))
+    fwd = jax.jit(lambda p, t: model.forward(p, t)[0])
+    hits, tot = 0, 0
+    for _ in range(n_batches):
+        b = next(loader)
+        logits = fwd(params, jnp.asarray(b["tokens"]))
+        pred = np.asarray(jnp.argmax(logits[..., :model.cfg.vocab], -1))
+        hits += int((pred == b["labels"]).sum())
+        tot += pred.size
+    return hits / tot
+
+
+def calib_tokens(n_samples: int = 8, split_seed: int = 1234) -> np.ndarray:
+    from repro.data import SyntheticCorpus, ZipfMarkovConfig
+    corpus = SyntheticCorpus(ZipfMarkovConfig(
+        vocab=BENCH_CFG.vocab, seed=split_seed, doc_len=SEQ, **LOADER_KW))
+    return np.stack([corpus.document(i, "calib") for i in range(n_samples)])
+
+
+def timeit(fn, *args, repeat: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of jax fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+class Row:
+    """CSV row collector: ``name,us_per_call,derived``."""
+
+    def __init__(self):
+        self.rows: list[tuple] = []
+
+    def add(self, name: str, us: float = 0.0, derived: str = ""):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,63 @@
+"""Fig 4 / Fig 9 / roofline-model benchmarks for the structured-binary GEMM.
+
+No GPU sparse tensor cores here, so three honest CPU-side measurements plus
+the TPU-v5e analytic roofline the kernel is designed against:
+
+  * wall time: dense fp32 matmul vs the dequantize-fused jnp path (what the
+    distributed serve path lowers) across sequence lengths (Fig 4a protocol);
+  * memory: packed-plane bytes vs fp16 dense bytes (Fig 9 protocol);
+  * analytic: arithmetic intensity and memory-bound speedup of the packed
+    format on v5e (Appendix C.2 roofline discussion, retargeted to TPU).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.analysis.roofline import HW_V5E
+from repro.core.stbllm import STBConfig, stbllm_quantize_layer
+from repro.kernels.ops import stb_matmul
+from repro.quant.packing import pack_quantized_layer, packed_format_bits
+
+
+def fig4_kernel(rows: Row):
+    k = n = 512
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    xq = jnp.asarray(rng.normal(size=(32, k)), jnp.float32)
+    q = stbllm_quantize_layer(w, xq, STBConfig(n=4, m=8))
+    p = pack_quantized_layer(q)
+    wd = jnp.asarray(q.deq).T               # dense dequantized [K, N]
+
+    dense = jax.jit(lambda x: x @ wd)
+    packed = jax.jit(lambda x: stb_matmul(x, p, impl="jnp"))
+
+    out = {}
+    for seq in (128, 512, 2048):
+        x = jnp.asarray(rng.normal(size=(seq, k)), jnp.float32)
+        t_d = timeit(dense, x)
+        t_p = timeit(packed, x)
+        flops = 2 * seq * k * n
+        rows.add(f"fig4/dense_matmul/seq{seq}", t_d,
+                 f"gflops={flops/t_d/1e3:.1f}")
+        rows.add(f"fig4/stb_jnp_fused/seq{seq}", t_p,
+                 f"gflops={flops/t_p/1e3:.1f} rel={t_p/t_d:.2f}x")
+        out[seq] = (t_d, t_p)
+
+    # memory footprint (Fig 9): packed vs fp16 dense
+    bits = packed_format_bits(p)
+    ratio = 16.0 / bits
+    rows.add("fig9/memory/packed_bits_per_weight", 0,
+             f"bits={bits:.2f} compression_vs_fp16={ratio:.2f}x")
+
+    # analytic v5e roofline (Appendix C.2 retargeted): decode is memory
+    # bound; weight-traffic speedup == byte ratio.
+    bw = HW_V5E.hbm_bw
+    t_dense = (k * n * 2) / bw        # fp16 weight read
+    t_pack = (k * n * bits / 8) / bw
+    rows.add("fig4/roofline/v5e_decode_speedup", 0,
+             f"analytic_speedup={t_dense/t_pack:.2f}x "
+             f"(weight-traffic-bound)")
+    return out

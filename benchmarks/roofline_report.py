@@ -1,0 +1,45 @@
+"""§Roofline report: assemble the per-(arch x shape) table from the dry-run
+JSON records under experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ROOT, Row
+
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if not fn.endswith(".json") or f"__{mesh}" not in fn:
+            continue
+        with open(os.path.join(DRYRUN_DIR, fn)) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(rows: Row, mesh: str = "16x16") -> list[dict]:
+    recs = load_records(mesh)
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("tag"):
+            name += f"/{r['tag']}"
+        if r["status"] == "skipped":
+            rows.add(name, 0, f"skipped: {r['reason']}")
+            continue
+        if r["status"] != "ok":
+            rows.add(name, 0, f"ERROR {r.get('error', '?')[:80]}")
+            continue
+        rf = r["roofline"]
+        rows.add(
+            name, 0,
+            f"tc={rf['t_compute']*1e3:.1f}ms tm={rf['t_memory']*1e3:.1f}ms "
+            f"tcoll={rf['t_collective']*1e3:.1f}ms "
+            f"bound={rf['bottleneck']} "
+            f"useful={rf['flops_ratio']*100:.0f}% "
+            f"roofline={rf['roofline_fraction']*100:.1f}%")
+    return recs

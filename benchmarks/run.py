@@ -1,0 +1,68 @@
+"""Benchmark driver: one function per paper table/figure + roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table2 fig4
+
+Prints ``name,us_per_call,derived`` CSV lines; the trained tiny-LM substrate
+is cached under experiments/bench_model/ (first run trains it, ~1 min CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import kernel_bench, roofline_report, tables
+from benchmarks.common import Row, get_bench_model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: table1 table2 table4 table5 table6 table8 "
+                         "table9 table10 table11 table13 fig4 roofline")
+    args = ap.parse_args(argv)
+
+    rows = Row()
+    print("name,us_per_call,derived")
+    want = lambda k: args.only is None or k in args.only
+
+    model = params = None
+    needs_model = [k for k in (
+        "table1", "table2", "table4", "table5", "table6", "table8",
+        "table9", "table10", "table11", "table13") if want(k)]
+    if needs_model:
+        t0 = time.time()
+        model, params = get_bench_model()
+        rows.add("setup/bench_model", (time.time() - t0) * 1e6,
+                 "trained 8L d128 v1024 LM (cached)")
+
+    if want("table1"):
+        tables.table1_average_bits(rows, model, params)
+    if want("table2"):
+        tables.table2_ptq_comparison(rows, model, params)
+    if want("table4"):
+        tables.table4_zero_shot(rows, model, params)
+    if want("table5"):
+        tables.table5_metric_ablation(rows, model, params)
+    if want("table6"):
+        tables.table6_allocation_ablation(rows, model, params)
+    if want("table8"):
+        tables.table8_strategy_ablation(rows, model, params)
+    if want("table9"):
+        tables.table9_group_size(rows, model, params)
+    if want("table10"):
+        tables.table10_module_ablation(rows, model, params)
+    if want("table11"):
+        tables.table11_calibration_ablation(rows, model, params)
+    if want("table13"):
+        tables.table13_flip_motivation(rows, model, params)
+    if want("fig4"):
+        kernel_bench.fig4_kernel(rows)
+    if want("roofline"):
+        roofline_report.roofline_table(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

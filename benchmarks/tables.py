@@ -1,0 +1,217 @@
+"""Paper-table benchmarks (Tables 1-13, Figs 1/2) on the trained tiny LM.
+
+Every function mirrors one table's protocol: calibrate on the 'calib' split
+(C4 stand-in), evaluate perplexity on 'valid' (Wikitext2 stand-in). Results
+are printed as CSV and returned as dicts so run.py can assemble the report.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BENCH_CFG, Row, calib_tokens, eval_ppl, eval_top1, get_bench_model,
+    timeit)
+from repro.core import STBConfig, average_bits, storage_bits
+from repro.core.baselines import baseline_quantizer
+from repro.core.pipeline import quantize_model
+from repro.core.flip import flip_signs
+from repro.utils.tree import flatten_with_names
+
+NM_SETTINGS = ((6, 8), (5, 8), (4, 8))
+
+
+def _ptq(model, params, method: str, n: int = 4, m: int = 8,
+         beta: int = 128, **kw):
+    calib = calib_tokens()
+    cfg = STBConfig(n=n, m=m, beta=min(beta, BENCH_CFG.d_model), **kw)
+    if method == "stbllm":
+        return quantize_model(model, params, calib, cfg)
+    return quantize_model(model, params, calib, cfg,
+                          quantizer=baseline_quantizer(method))
+
+
+# ------------------------------------------------------------------ Table 1
+def table1_average_bits(rows: Row, model, params):
+    """Average bits from structural search + residual binarization."""
+    out = {}
+    for n, m in NM_SETTINGS:
+        res = _ptq(model, params, "stbllm", n, m)
+        r_sal = float(np.mean([s["r_salient"] for s in res.stats.values()]))
+        out[f"{n}:{m}"] = res.avg_bits
+        rows.add(f"table1/avg_bits/stbllm_{n}:{m}", 0,
+                 f"avg_bits={res.avg_bits:.3f} r_salient={r_sal:.3f} "
+                 f"storage={res.storage_bits:.3f}")
+    rows.add("table1/avg_bits/billm", 0, "avg_bits=1.090 (paper accounting)")
+    return out
+
+
+# -------------------------------------------------------- Tables 2/3, Fig 2
+def table2_ptq_comparison(rows: Row, model, params):
+    """FP16 / RTN / GPTQ-1b / PB-LLM / BiLLM / BiLLM-N:M / STBLLM-N:M ppl."""
+    out = {"fp": eval_ppl(model, params)}
+    rows.add("table2/ppl/full_precision", 0, f"ppl={out['fp']:.2f} bits=16")
+    for method, bits in (("rtn", 1.0), ("gptq", 1.0), ("pbllm", 1.7),
+                         ("billm", 1.09)):
+        t0 = time.time()
+        res = _ptq(model, params, method)
+        ppl = eval_ppl(model, res.params)
+        out[method] = ppl
+        rows.add(f"table2/ppl/{method}", (time.time() - t0) * 1e6,
+                 f"ppl={ppl:.2f} bits={bits}")
+    for n, m in NM_SETTINGS:
+        for method in ("billm-nm", "stbllm"):
+            t0 = time.time()
+            res = _ptq(model, params, method, n, m)
+            ppl = eval_ppl(model, res.params)
+            out[f"{method}_{n}:{m}"] = ppl
+            rows.add(f"table2/ppl/{method}_{n}:{m}",
+                     (time.time() - t0) * 1e6,
+                     f"ppl={ppl:.2f} bits={res.avg_bits:.3f}")
+    return out
+
+
+# ------------------------------------------------------------------ Table 4
+def table4_zero_shot(rows: Row, model, params):
+    """Zero-shot stand-in: next-token top-1 accuracy on held-out splits."""
+    out = {"fp": eval_top1(model, params)}
+    rows.add("table4/top1/full_precision", 0, f"acc={out['fp']:.4f}")
+    for n, m in ((6, 8), (4, 8)):
+        for method in ("billm-nm", "stbllm"):
+            res = _ptq(model, params, method, n, m)
+            acc = eval_top1(model, res.params)
+            out[f"{method}_{n}:{m}"] = acc
+            rows.add(f"table4/top1/{method}_{n}:{m}", 0, f"acc={acc:.4f}")
+    return out
+
+
+# ------------------------------------------------------------------ Table 5
+def table5_metric_ablation(rows: Row, model, params):
+    out = {}
+    for metric in ("magnitude", "wanda", "sparsegpt", "si"):
+        res = _ptq(model, params, "stbllm", mask_metric=metric)
+        ppl = eval_ppl(model, res.params)
+        out[metric] = ppl
+        rows.add(f"table5/ppl/{metric}", 0, f"ppl={ppl:.2f}")
+    return out
+
+
+# ------------------------------------------------------------------ Table 6
+def table6_allocation_ablation(rows: Row, model, params):
+    out = {}
+    calib = calib_tokens()
+    for mode in ("uniform", "sin", "adaptive"):
+        res = quantize_model(
+            model, params, calib,
+            STBConfig(n=4, m=8, beta=BENCH_CFG.d_model), allocation=mode)
+        ppl = eval_ppl(model, res.params)
+        out[mode] = ppl
+        rows.add(f"table6/ppl/{mode}", 0, f"ppl={ppl:.2f}")
+    return out
+
+
+# ------------------------------------------------------------------ Table 8
+def table8_strategy_ablation(rows: Row, model, params):
+    out = {}
+    for strat in ("bell", "trisection"):
+        res = _ptq(model, params, "stbllm", strategy=strat)
+        ppl = eval_ppl(model, res.params)
+        out[strat] = ppl
+        rows.add(f"table8/ppl/{strat}", 0, f"ppl={ppl:.2f}")
+    return out
+
+
+# ------------------------------------------------- Tables 9/12: group size
+def table9_group_size(rows: Row, model, params):
+    out = {}
+    for beta in (32, 64, 128):
+        res = _ptq(model, params, "stbllm", beta=beta)
+        ppl = eval_ppl(model, res.params)
+        out[beta] = ppl
+        rows.add(f"table9/ppl/group{beta}", 0, f"ppl={ppl:.2f}")
+    return out
+
+
+# ----------------------------------------------------------------- Table 10
+def table10_module_ablation(rows: Row, model, params):
+    """Quant-only (binarize, no N:M) / structure-only (N:M prune, fp16
+    survivors) / combined."""
+    calib = calib_tokens()
+    out = {}
+    # quant-only: N == M (dense) STBLLM
+    res = _ptq(model, params, "stbllm", n=8, m=8)
+    out["quant_only"] = eval_ppl(model, res.params)
+    rows.add("table10/ppl/quant_only", 0, f"ppl={out['quant_only']:.2f}")
+
+    # structure-only: N:M mask with SI, survivors stay fp
+    class _Prune:
+        def __call__(self, w, x, cfg, name):
+            from repro.core.nm import nm_mask
+            from repro.core.si import input_feature_norm, \
+                standardized_importance
+            s = standardized_importance(w, input_feature_norm(x))
+            mask = nm_mask(s, cfg.n, cfg.m)
+
+            class R:
+                deq = w * mask.astype(w.dtype)
+                stats = {"avg_bits": 16.0 * cfg.n / cfg.m,
+                         "storage_bits": 16.0 * cfg.n / cfg.m,
+                         "r_salient": 0.0}
+            return R()
+
+    res = quantize_model(model, params, calib,
+                         STBConfig(n=4, m=8, beta=BENCH_CFG.d_model),
+                         quantizer=_Prune())
+    out["structure_only"] = eval_ppl(model, res.params)
+    rows.add("table10/ppl/structure_only", 0,
+             f"ppl={out['structure_only']:.2f}")
+
+    res = _ptq(model, params, "stbllm")
+    out["combined"] = eval_ppl(model, res.params)
+    rows.add("table10/ppl/combined_0.55bit", 0, f"ppl={out['combined']:.2f}")
+    return out
+
+
+# ----------------------------------------------------------------- Table 11
+def table11_calibration_ablation(rows: Row, model, params):
+    """Calibrate on each split, evaluate on each split (3x3 of the paper)."""
+    out = {}
+    for calib_split, seed in (("calib", 1234), ("train", 99), ("valid", 7)):
+        calib = calib_tokens(split_seed=seed)
+        res = quantize_model(model, params, calib,
+                             STBConfig(n=4, m=8, beta=BENCH_CFG.d_model))
+        for eval_split in ("valid", "train"):
+            ppl = eval_ppl(model, res.params, split=eval_split)
+            out[(calib_split, eval_split)] = ppl
+            rows.add(f"table11/ppl/calib_{calib_split}_eval_{eval_split}",
+                     0, f"ppl={ppl:.2f}")
+    return out
+
+
+# --------------------------------------------------------- Fig 1 / Table 13
+def table13_flip_motivation(rows: Row, model, params):
+    """Flip a fraction of binarized-LLM signs; ppl degrades gracefully at
+    small ratios — the redundancy motivating sub-1-bit compression."""
+    res = _ptq(model, params, "billm")  # 1-bit binarized model
+    base = eval_ppl(model, res.params)
+    rows.add("table13/ppl/flip_0.00", 0, f"ppl={base:.2f}")
+    out = {0.0: base}
+    flat = flatten_with_names(res.params)
+    key = jax.random.PRNGKey(0)
+    for ratio in (0.01, 0.05, 0.10, 0.16):
+        flipped = dict(flat)
+        for name, leaf in flat:
+            if name.startswith("blocks") and name.endswith("/w") \
+                    and leaf.ndim >= 2:
+                key, sub = jax.random.split(key)
+                flipped[name] = flip_signs(leaf, ratio, sub)
+        tree = jax.tree.unflatten(
+            jax.tree.structure(res.params), [flipped[n] for n, _ in flat])
+        ppl = eval_ppl(model, tree)
+        out[ratio] = ppl
+        rows.add(f"table13/ppl/flip_{ratio:.2f}", 0, f"ppl={ppl:.2f}")
+    return out

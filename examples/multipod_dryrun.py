@@ -1,0 +1,35 @@
+"""Lower + compile one production cell on the 512-chip multi-pod mesh.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        [--arch jamba-v0.1-52b] [--shape decode_32k]
+
+Shows the distribution API end-to-end: mesh construction, sharded
+ShapeDtypeStruct inputs, pjit lowering, memory & roofline analysis — exactly
+what launch/dryrun.py runs for all 40 (arch x shape) cells.
+"""
+# The XLA flag MUST precede any jax import.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch.dryrun import run_cell, save_rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape, multi_pod=True, costing=False)
+    print(f"status: {rec['status']}")
+    if rec["status"] == "ok":
+        mem = rec["memory"]
+        print(f"per-device bytes: args {mem['argument_bytes']/2**30:.2f} GiB, "
+              f"temp {mem['temp_bytes']/2**30:.2f} GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Reproduce the paper's Table-2 protocol on the CPU benchmark model:
+perplexity of RTN / GPTQ / PB-LLM / BiLLM / BiLLM-N:M / STBLLM across
+N:8 settings.
+
+    PYTHONPATH=src python examples/ptq_sweep.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import calib_tokens, eval_ppl, get_bench_model
+from repro.core import STBConfig
+from repro.core.baselines import baseline_quantizer
+from repro.core.pipeline import quantize_model
+
+
+def main():
+    model, params = get_bench_model()
+    calib = calib_tokens()
+    beta = model.cfg.d_model
+    print(f"{'method':>16s} {'bits':>6s} {'ppl':>8s}")
+    print(f"{'full-precision':>16s} {16.0:6.2f} {eval_ppl(model, params):8.2f}")
+
+    for method in ("rtn", "gptq", "pbllm", "billm"):
+        res = quantize_model(model, params, calib,
+                             STBConfig(n=8, m=8, beta=beta),
+                             quantizer=baseline_quantizer(method))
+        print(f"{method:>16s} {res.avg_bits:6.2f} "
+              f"{eval_ppl(model, res.params):8.2f}")
+
+    for n in (6, 5, 4):
+        for method, q in (("billm-" + f"{n}:8",
+                           baseline_quantizer("billm-nm")),
+                          (f"stbllm-{n}:8", None)):
+            res = quantize_model(model, params, calib,
+                                 STBConfig(n=n, m=8, beta=beta), quantizer=q)
+            print(f"{method:>16s} {res.avg_bits:6.2f} "
+                  f"{eval_ppl(model, res.params):8.2f}")
+
+
+if __name__ == "__main__":
+    main()

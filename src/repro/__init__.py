@@ -1,0 +1,10 @@
+"""repro: production-grade JAX framework implementing STBLLM (ICLR 2025).
+
+Structured sub-1-bit binarization for LLMs: N:M-sparse binary weights with
+Standardized Importance masking, Hessian-guided salient residual binarization,
+trisection non-salient quantization, block-wise OBC compensation, and a Pallas
+TPU decompress-fused GEMM kernel — wrapped in a multi-pod training/serving
+framework (DP/FSDP/TP/EP/SP/PP, checkpointing, elastic restart).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.analysis.roofline import (
+    HW_V5E,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline_from_lowered,
+)

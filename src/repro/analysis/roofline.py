@@ -1,0 +1,178 @@
+"""Roofline analysis from compiled dry-run artifacts (spec §ROOFLINE).
+
+  compute term    = HLO_FLOPs  / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes  / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the optimized HLO text (sum of operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in optimized HLO text.
+
+    Lines look like:  %x = bf16[8,128]{1,0} all-reduce(%y), replica_groups=...
+    We take the op's *result* shape (= payload moved per participating device,
+    up to the algorithm factor) per collective kind.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '<shape> <opname>(' with optional '%name = ' prefix
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]\S*))\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0
+    bytes_per_device: float = 0.0
+    hw: Hardware = HW_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.hw.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * self.hw.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound step time: how close the cell
+        is to the compute roofline if the dominant term were the only cost."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * self.hw.peak_flops)) / t
+
+    @property
+    def flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["hw"] = self.hw.name
+        d.update(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            flops_ratio=self.flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:>22s} {self.shape:>12s} {self.mesh:>9s} "
+            f"tc={self.t_compute*1e3:9.3f}ms tm={self.t_memory*1e3:9.3f}ms "
+            f"tcoll={self.t_collective*1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"useful={self.flops_ratio*100:5.1f}% "
+            f"roofline={self.roofline_fraction*100:5.1f}%"
+        )
+
+
+def roofline_from_lowered(lowered, compiled, *, arch: str, shape: str,
+                          mesh_name: str, chips: int, model_flops: float,
+                          hw: Hardware = HW_V5E) -> RooflineReport:
+    # cost_analysis() is computed on the SPMD-partitioned (per-device) module
+    # (verified empirically: an 8-way sharded matmul reports global/8 flops).
+    # The spec formulas take GLOBAL quantities, so scale by chip count.
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * chips
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    coll = {k: (v * chips if k != "count" else v) for k, v in coll.items()}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem["bytes_per_device"] = float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+        )
+    except Exception:
+        mem["bytes_per_device"] = 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        collective_bytes=float(coll["total"]), collective_breakdown=coll,
+        model_flops=model_flops, bytes_per_device=mem["bytes_per_device"],
+        hw=hw,
+    )
+
+
+def save_report(report: RooflineReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_dict(), f, indent=2)

@@ -1,0 +1,7 @@
+from repro.checkpoint.store import (
+    CheckpointManager, load_checkpoint, save_checkpoint, latest_step,
+)
+
+__all__ = [
+    "CheckpointManager", "save_checkpoint", "load_checkpoint", "latest_step",
+]

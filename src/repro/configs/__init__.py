@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, EncoderConfig, VisionConfig, SHAPES, ShapeConfig
+from repro.configs.registry import get_config, list_archs, get_smoke_config

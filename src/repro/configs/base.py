@@ -1,0 +1,154 @@
+"""Config system: ModelConfig (architecture) and ShapeConfig (workload).
+
+Every assigned architecture is one ``src/repro/configs/<id>.py`` exporting
+``CONFIG``; ``registry.get_config(arch)`` loads it, ``--arch <id>`` selects it
+in the launchers. ``smoke()`` derives the reduced same-family variant used by
+CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int = 12
+    n_frames: int = 1500     # whisper-small conv-frontend output length (stub)
+    d_frontend: int = 0      # frontend embedding width (0 = d_model)
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    n_tokens: int = 1601     # patch embeddings per image (stub frontend)
+    d_vision: int = 1280     # vision encoder output width
+    xattn_every: int = 5     # gated cross-attn layer cadence
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int = 16
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    every: int = 1           # MoE every k-th layer (jamba: 2), else dense FFN
+
+
+@dataclass(frozen=True)
+class SSMSpec:
+    kind: str = "mamba"      # mamba | xlstm
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    attn_every: int = 0      # hybrid: attention block cadence (jamba: 8)
+    slstm_every: int = 0     # xlstm: sLSTM block cadence (every 8th)
+    xlstm_heads: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str              # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0        # 0 -> d_model // n_heads
+    attn_type: str = "gqa"   # gqa | mla
+    norm: str = "rmsnorm"
+    mlp_type: str = "swiglu" # swiglu | gelu
+    rope_theta: float = 10000.0
+    moe: MoESpec | None = None
+    ssm: SSMSpec | None = None
+    encoder: EncoderConfig | None = None
+    vision: VisionConfig | None = None
+    # MLA dims (attn_type == "mla")
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    tie_embeddings: bool = False
+    notes: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding tables padded to a multiple of 256 so TP over 'model'
+        always divides the vocab dim (MaxText-style); logits over padded ids
+        are masked to -inf in the loss."""
+        return (self.vocab + 255) // 256 * 256
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM / hybrid families)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # all assigned archs are decoder-bearing
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        period = _pattern_period(self)
+        moe = replace(self.moe, n_experts=4, group_size=64) if self.moe else None
+        enc = replace(self.encoder, n_layers=2, n_frames=16) if self.encoder else None
+        vis = replace(self.vision, n_tokens=16, d_vision=64) if self.vision else None
+        return replace(
+            self,
+            arch_id=self.arch_id + "-smoke",
+            n_layers=max(period, 2) if period > 1 else 2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=512,
+            moe=moe,
+            encoder=enc,
+            vision=vis,
+            q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=8, qk_rope_dim=8,
+            v_head_dim=8,
+        )
+
+
+def _pattern_period(cfg: ModelConfig) -> int:
+    if cfg.ssm and cfg.ssm.attn_every:
+        return cfg.ssm.attn_every
+    if cfg.ssm and cfg.ssm.slstm_every:
+        return cfg.ssm.slstm_every
+    if cfg.vision:
+        return cfg.vision.xattn_every
+    if cfg.moe and cfg.moe.every > 1:
+        return cfg.moe.every
+    return 1
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,12 @@
+"""dbrx-132b [moe] — hf:databricks/dbrx-base (fine-grained 16e top-4).
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752/expert, 16 experts top-4."""
+from repro.configs.base import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    arch_id="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352,
+    moe=MoESpec(n_experts=16, top_k=4),
+    notes="largest assigned arch (132B total params)",
+)

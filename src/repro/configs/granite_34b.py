@@ -1,0 +1,11 @@
+"""granite-34b [dense, MQA code model] — arXiv:2405.04324.
+
+88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152, gpt-bigcode style."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+    d_ff=24576, vocab=49152, mlp_type="gelu", norm="layernorm",
+    notes="MQA single-kv head; deepest assigned arch (88L)",
+)

@@ -1,0 +1,15 @@
+"""jamba-v0.1-52b [hybrid] — arXiv:2403.19887.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336, Mamba:attn 7:1 interleave
+(attention at position 3 of each 8-block group), MoE 16e top-2 every other
+layer."""
+from repro.configs.base import ModelConfig, MoESpec, SSMSpec
+
+CONFIG = ModelConfig(
+    arch_id="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=65536,
+    moe=MoESpec(n_experts=16, top_k=2, every=2),
+    ssm=SSMSpec(kind="mamba", attn_every=8, d_state=16, d_conv=4, expand=2),
+    notes="beyond-paper on two axes (MoE + Mamba); runs long_500k",
+)

@@ -1,0 +1,12 @@
+"""llama-1-7b-class config — the paper's own primary eval family (Table 2).
+
+Used by the end-to-end PTQ examples/benchmarks at reduced size; full config
+kept for dry-run parity with the paper's setting."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama1-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab=32000,
+    notes="paper's Table 2 subject (LLaMA-1-7B)",
+)

@@ -1,0 +1,13 @@
+"""llama-3.2-vision-11b [vlm] — hf:meta-llama/Llama-3.2-11B-Vision.
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; gated cross-attn
+image layers every 5th block; patch-embedding frontend is a STUB."""
+from repro.configs.base import ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=128256,
+    vision=VisionConfig(n_tokens=1601, d_vision=1280, xattn_every=5),
+    notes="8 of 40 layers carry tanh-gated cross-attn to vision tokens",
+)

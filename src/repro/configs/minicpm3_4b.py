@@ -1,0 +1,15 @@
+"""minicpm3-4b [dense, MLA] — hf:openbmb/MiniCPM3-4B.
+
+62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448; multi-head latent
+attention (MLA) with latent KV cache. MLA low-rank dims follow the HF config
+family (q_lora 768, kv_lora 256, nope 64, rope 32, v 64)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab=73448, attn_type="mla",
+    q_lora_rank=768, kv_lora_rank=256, qk_nope_dim=64, qk_rope_dim=32,
+    v_head_dim=64,
+    notes="MLA; latent KV cache (rank 256 + rope 32) -> 8.9x smaller cache",
+)

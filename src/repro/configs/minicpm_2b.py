@@ -1,0 +1,11 @@
+"""minicpm-2b [dense, llama-like] — arXiv:2404.06395. WSD LR schedule.
+
+40L d_model=2304 36H (kv=36) d_ff=5760 vocab=122753."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab=122753,
+    notes="WSD schedule (repro.optim.schedules.wsd) wired in train launcher",
+)

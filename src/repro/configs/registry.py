@@ -1,0 +1,36 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "granite-34b": "repro.configs.granite_34b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "whisper-small": "repro.configs.whisper_small",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "llama1-7b": "repro.configs.llama1_7b",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "llama1-7b"]
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return get_config(arch).smoke()

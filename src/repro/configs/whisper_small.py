@@ -1,0 +1,13 @@
+"""whisper-small [audio enc-dec] — arXiv:2212.04356.
+
+12L enc + 12L dec, d_model=768 12H d_ff=3072 vocab=51865; conv frontend is a
+STUB (input_specs provides precomputed 1500-frame embeddings)."""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865, mlp_type="gelu", norm="layernorm",
+    encoder=EncoderConfig(n_layers=12, n_frames=1500),
+    notes="decoder shapes use assigned seq_len; encoder memory fixed 1500",
+)

@@ -1,0 +1,12 @@
+"""xlstm-350m [ssm] — arXiv:2405.04517 (sLSTM + mLSTM blocks, 7:1).
+
+24L d_model=1024 4H vocab=50304; blocks are self-contained (d_ff=0)."""
+from repro.configs.base import ModelConfig, SSMSpec
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304,
+    ssm=SSMSpec(kind="xlstm", slstm_every=8, xlstm_heads=4),
+    notes="mLSTM chunkwise-parallel; sLSTM recurrent; runs long_500k",
+)

@@ -1,0 +1,22 @@
+"""STBLLM core: the paper's contribution (Alg. 1/2) + baselines.
+
+Public API:
+  stbllm_quantize_layer  — structured sub-1-bit binarization of one linear
+  quantize_model         — whole-model PTQ driver (core.pipeline)
+  STBConfig              — knobs (N:M, block size, metric, trisection)
+  adaptive_allocation    — layer-wise N:M assignment
+  baselines              — RTN / GPTQ / PB-LLM / BiLLM(-N:M)
+"""
+from repro.core.stbllm import (
+    STBConfig,
+    QuantizedLayer,
+    stbllm_quantize_layer,
+    average_bits,
+    storage_bits,
+)
+from repro.core.allocate import adaptive_allocation, uniform_allocation, sin_allocation
+from repro.core.si import standardized_importance, input_feature_norm
+from repro.core.nm import nm_mask, check_nm, mask_density
+from repro.core.binary import binarize, residual_binarize, sign_pm1
+from repro.core.trisection import trisection_search, trisection_binarize
+from repro.core.flip import flip_signs

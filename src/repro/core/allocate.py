@@ -1,0 +1,108 @@
+"""Adaptive layer-wise N:M allocation (paper §3.3 "Layer-wise N:M Assignment").
+
+Per-layer ratio: N_i/M_i = alpha_i + (1 - alpha_i) * R_target, where
+alpha_i = ||W_i||_2 / sum_k ||W_k||_2 is the layer's relative importance.
+Ratios are snapped to N:8 grid points (DominoSearch-style mixed N:8) and then
+rebalanced (param-count-weighted) so the model-wide average keep-ratio meets
+R_target, as the paper requires.
+
+Also provides the Uniform and Sin-shaped baselines of Table 6.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LayerAlloc:
+    name: str
+    n: int
+    m: int
+    numel: int
+
+    @property
+    def ratio(self) -> float:
+        return self.n / self.m
+
+
+def _weighted_ratio(allocs: list[LayerAlloc]) -> float:
+    tot = sum(a.numel for a in allocs)
+    return sum(a.ratio * a.numel for a in allocs) / max(tot, 1)
+
+
+def adaptive_allocation(
+    layer_norms: dict[str, float],
+    layer_numels: dict[str, int],
+    r_target: float,
+    m: int = 8,
+) -> dict[str, tuple[int, int]]:
+    """Paper's allocation. Returns {layer_name: (N_i, M)}.
+
+    ``layer_norms``: L2 norm of each layer's weights. The weighted mean keep
+    ratio over all layers is rebalanced to be <= r_target (compression target
+    is met) while staying as close as possible to the importance-derived
+    ratios.
+    """
+    names = sorted(layer_norms)
+    total = sum(layer_norms[k] for k in names)
+    allocs: list[LayerAlloc] = []
+    for k in names:
+        alpha = layer_norms[k] / max(total, 1e-12)
+        ratio = alpha + (1.0 - alpha) * r_target
+        n = int(np.clip(round(ratio * m), 1, m))
+        allocs.append(LayerAlloc(k, n, m, layer_numels[k]))
+
+    # Rebalance: while the weighted average exceeds the target, decrement N of
+    # the least-important layer that is still above the floor; if it undershoots
+    # badly (> half a grid step), increment the most-important layer below m.
+    imp = {k: layer_norms[k] for k in names}
+    step = 1.0 / m
+    guard = 0
+    while _weighted_ratio(allocs) > r_target + 1e-9 and guard < 10 * len(allocs):
+        guard += 1
+        cands = [i for i, a in enumerate(allocs) if a.n > 1]
+        if not cands:
+            break
+        i = min(cands, key=lambda i: imp[allocs[i].name])
+        a = allocs[i]
+        allocs[i] = LayerAlloc(a.name, a.n - 1, a.m, a.numel)
+    while _weighted_ratio(allocs) < r_target - step / 2 and guard < 20 * len(allocs):
+        guard += 1
+        cands = [i for i, a in enumerate(allocs) if a.n < m]
+        if not cands:
+            break
+        i = max(cands, key=lambda i: imp[allocs[i].name])
+        a = allocs[i]
+        allocs[i] = LayerAlloc(a.name, a.n + 1, a.m, a.numel)
+    return {a.name: (a.n, a.m) for a in allocs}
+
+
+def uniform_allocation(
+    layer_names: list[str], r_target: float, m: int = 8
+) -> dict[str, tuple[int, int]]:
+    """Table 6 'Uniform' baseline: same N:M everywhere."""
+    n = int(np.clip(round(r_target * m), 1, m))
+    return {k: (n, m) for k in layer_names}
+
+
+def sin_allocation(
+    layer_depths: dict[str, int], r_target: float, m: int = 8
+) -> dict[str, tuple[int, int]]:
+    """Table 6 'Sin-shape' baseline: early layers less sparse, late layers more.
+
+    Keep-ratio follows a half sine over depth, normalized to average r_target.
+    """
+    depths = layer_depths
+    dmax = max(depths.values()) or 1
+    # raw ratio in [r_target - A, r_target + A], A chosen to stay in (1/m, 1)
+    amp = min(r_target - 1.0 / m, 1.0 - r_target, 0.25)
+    out = {}
+    for k, d in depths.items():
+        phase = math.sin(math.pi * d / dmax)  # 0 at ends, 1 mid
+        ratio = r_target + amp * (0.5 - phase)  # early/late denser, mid sparser
+        n = int(np.clip(round(ratio * m), 1, m))
+        out[k] = (n, m)
+    return out

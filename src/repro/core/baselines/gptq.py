@@ -1,0 +1,35 @@
+"""GPTQ baseline (Frantar et al. 2023) on the shared OBC loop (Table 2).
+
+Column-block error compensation with a per-row asymmetric uniform grid at
+arbitrary bit-width (1-bit for the paper's Table 2 row).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.obc import BlockCtx, obc_quantize
+
+
+def _uniform_quant(wb: jnp.ndarray, wmin, wmax, bits: int) -> jnp.ndarray:
+    levels = 2 ** bits - 1
+    scale = jnp.maximum(wmax - wmin, 1e-12) / levels
+    q = jnp.clip(jnp.round((wb - wmin) / scale), 0, levels)
+    return q * scale + wmin
+
+
+def gptq_quantize_layer(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    bits: int = 1,
+    beta: int = 128,
+    percdamp: float = 0.01,
+) -> jnp.ndarray:
+    w = jnp.asarray(w, jnp.float32)
+    # grid fixed from the *original* weights per GPTQ
+    wmin = jnp.min(w, axis=1, keepdims=True)
+    wmax = jnp.max(w, axis=1, keepdims=True)
+
+    def quantize_block(wb: jnp.ndarray, ctx: BlockCtx):
+        return _uniform_quant(wb, wmin, wmax, bits), {}
+
+    return obc_quantize(w, x, quantize_block, beta=beta, percdamp=percdamp).deq

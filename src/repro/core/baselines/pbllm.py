@@ -1,0 +1,50 @@
+"""PB-LLM baseline (Shang et al. 2024): partial binarization (Table 2).
+
+A small salient fraction (default 10%, by Hessian saliency) is kept at 8-bit
+per-row uniform precision; the remaining 90% is binarized with an optimal
+per-row scale. Runs on the shared OBC compensation loop. Average bits
+~ 0.1*8 + 0.9*1 = 1.7 — the paper's PB-LLM row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.binary import binarize
+from repro.core.obc import BlockCtx, obc_quantize
+
+
+def _row_uniform(wb: jnp.ndarray, mask: jnp.ndarray, bits: int) -> jnp.ndarray:
+    mf = mask.astype(wb.dtype)
+    big = 1e30
+    wmin = jnp.min(jnp.where(mask, wb, big), axis=1, keepdims=True)
+    wmax = jnp.max(jnp.where(mask, wb, -big), axis=1, keepdims=True)
+    has = jnp.any(mask, axis=1, keepdims=True)
+    wmin = jnp.where(has, wmin, 0.0)
+    wmax = jnp.where(has, wmax, 0.0)
+    levels = 2 ** bits - 1
+    scale = jnp.maximum(wmax - wmin, 1e-12) / levels
+    q = jnp.clip(jnp.round((wb - wmin) / scale), 0, levels)
+    return (q * scale + wmin) * mf
+
+
+def pbllm_quantize_layer(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    salient_frac: float = 0.1,
+    salient_bits: int = 8,
+    beta: int = 128,
+    percdamp: float = 0.01,
+) -> jnp.ndarray:
+    w = jnp.asarray(w, jnp.float32)
+
+    def quantize_block(wb: jnp.ndarray, ctx: BlockCtx):
+        d = jnp.maximum(ctx.hinv_chol_diag, 1e-12)
+        sal_score = (wb ** 2) / (d[None, :] ** 2)
+        k = max(1, int(salient_frac * wb.size))
+        thresh = jnp.sort(sal_score.reshape(-1))[-k]
+        msal = sal_score >= thresh
+        b_sal = _row_uniform(wb, msal, salient_bits)
+        b_bin, _, _ = binarize(wb, ~msal)
+        return b_sal + b_bin * (~msal).astype(wb.dtype), {}
+
+    return obc_quantize(w, x, quantize_block, beta=beta, percdamp=percdamp).deq

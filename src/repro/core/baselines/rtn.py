@@ -1,0 +1,19 @@
+"""Round-to-nearest (RTN) baseline at arbitrary bit-width (Table 2).
+
+Per-row asymmetric min/max uniform grid — the standard RTN recipe; at 1 bit
+the grid degenerates to {min, max}, which is exactly why the paper reports
+catastrophic perplexity (1e5-class) for RTN-1bit.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rtn_quantize_layer(w: jnp.ndarray, bits: int = 1) -> jnp.ndarray:
+    w = jnp.asarray(w, jnp.float32)
+    levels = 2 ** bits - 1
+    wmin = jnp.min(w, axis=1, keepdims=True)
+    wmax = jnp.max(w, axis=1, keepdims=True)
+    scale = jnp.maximum(wmax - wmin, 1e-12) / levels
+    q = jnp.round((w - wmin) / scale)
+    return q * scale + wmin

@@ -1,0 +1,63 @@
+"""Binarization primitives (paper §3.1, Eq. 1-2; Appendix Alg. 2 Binary/Res_Approx).
+
+Conventions: weight matrices are ``[n, m]`` = ``[out_features, in_features]``.
+Scales are channel-wise (per output row), computed over a *masked subset* of the
+row's entries — masks encode both the N:M pruning pattern and region membership.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def sign_pm1(w: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 2: sign with sign(0) := +1."""
+    return jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)
+
+
+def masked_alpha(w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Optimal per-row binary scale over masked entries: alpha = mean |w| on mask.
+
+    This is the closed-form argmin_alpha ||W - alpha*sign(W)||^2 restricted to
+    the mask (paper Eq. 1 generalized to a subset; Eq. 6 for regions).
+    Returns [n, 1].
+    """
+    mask = mask.astype(w.dtype)
+    num = jnp.sum(jnp.abs(w) * mask, axis=-1, keepdims=True)
+    den = jnp.sum(mask, axis=-1, keepdims=True)
+    return num / jnp.maximum(den, 1.0)
+
+
+def binarize(w: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Alg.2 Binary(): B = alpha * sign(W) on mask, 0 elsewhere.
+
+    Returns (b, alpha, signs): dequantized tensor, [n,1] scale, [n,m] signs.
+    """
+    if mask is None:
+        mask = jnp.ones_like(w, dtype=bool)
+    alpha = masked_alpha(w, mask)
+    signs = sign_pm1(w)
+    b = alpha * signs * mask.astype(w.dtype)
+    return b, alpha, signs
+
+
+def residual_binarize(w: jnp.ndarray, mask: jnp.ndarray | None = None):
+    """Alg.2 Res_Approx() / Eq. 4: two-plane residual binarization.
+
+    W ~ alpha_o * B_o + alpha_r * B_r  (on mask; 0 off-mask).
+    Returns (b, (alpha_o, alpha_r), (signs_o, signs_r)).
+    """
+    if mask is None:
+        mask = jnp.ones_like(w, dtype=bool)
+    b1, alpha_o, signs_o = binarize(w, mask)
+    resid = (w - b1) * mask.astype(w.dtype)
+    b2, alpha_r, signs_r = binarize(resid, mask)
+    return b1 + b2, (alpha_o, alpha_r), (signs_o, signs_r)
+
+
+def binarize_error(w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """||W - Binary(W)||^2 restricted to mask (scalar)."""
+    b, _, _ = binarize(w, mask)
+    m = mask.astype(w.dtype)
+    return jnp.sum(((w - b) * m) ** 2)

@@ -1,0 +1,34 @@
+"""Sign-flip motivation experiment (paper Fig. 1 / Table 13 / Alg. 3).
+
+Randomly (or least-significantly) flips the signs of a fraction of a binarized
+weight tensor — demonstrating redundancy in 1-bit LLMs, the paper's core
+motivation for pushing below 1 bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flip_signs(
+    w: jnp.ndarray,
+    ratio: float,
+    key: jax.Array,
+    criterion: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Alg. 3 FlipSignsEfficient.
+
+    ``criterion`` (same shape as w): if given, flip the ``ratio`` fraction of
+    elements with the *smallest* criterion (least significant); otherwise flip
+    uniformly at random.
+    """
+    n = w.size
+    k = int(n * ratio)
+    if k == 0:
+        return w
+    flat = w.reshape(-1)
+    if criterion is not None:
+        idx = jnp.argsort(criterion.reshape(-1))[:k]
+    else:
+        idx = jax.random.permutation(key, n)[:k]
+    return flat.at[idx].multiply(-1.0).reshape(w.shape)

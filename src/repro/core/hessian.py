@@ -1,0 +1,40 @@
+"""Hessian utilities shared by STBLLM / BiLLM / GPTQ / SparseGPT (Alg. 1 l.4-5).
+
+H = 2 X X^T over calibration activations; quantization uses the Cholesky factor
+of the damped inverse, exactly as GPTQ/OBC.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hessian_from_activations(x: jnp.ndarray) -> jnp.ndarray:
+    """H = 2 X^T X for X: [r, m] (rows = calibration samples). Returns [m, m]."""
+    x = x.astype(jnp.float32)
+    return 2.0 * (x.T @ x)
+
+
+def cholesky_inverse(h: jnp.ndarray, percdamp: float = 0.01) -> jnp.ndarray:
+    """Upper Cholesky factor of (H + lambda I)^-1 (GPTQ's ``Hinv``).
+
+    lambda = percdamp * mean(diag(H)) — the standard GPTQ damping; guards
+    against singular H from few calibration samples.
+    """
+    m = h.shape[0]
+    damp = percdamp * jnp.mean(jnp.diag(h)) + 1e-8
+    hd = h + damp * jnp.eye(m, dtype=h.dtype)
+    hinv = jnp.linalg.inv(hd)
+    # upper-triangular factor: Hinv = U^T U with U upper  => chol of Hinv,
+    # transposed (jnp.linalg.cholesky returns lower L with Hinv = L L^T).
+    l = jnp.linalg.cholesky(hinv)
+    return l.T  # upper
+
+
+def hessian_saliency(w: jnp.ndarray, hinv_chol_diag: jnp.ndarray) -> jnp.ndarray:
+    """Alg.2 Salient(): S = W^2 / [H^c]_diag^2  (broadcast over rows).
+
+    ``hinv_chol_diag``: [m] diagonal of the (block of the) upper Cholesky
+    factor of the damped inverse Hessian. Also the SparseGPT pruning metric.
+    """
+    d = jnp.maximum(hinv_chol_diag, 1e-12)
+    return (w.astype(jnp.float32) ** 2) / (d[None, :] ** 2)

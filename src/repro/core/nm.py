@@ -1,0 +1,39 @@
+"""N:M structured sparsity masks (paper §3.3).
+
+Groups of M consecutive weights along the *input* dimension; the N highest-
+importance weights in each group survive. Hardware-friendly (the Pallas kernel
+consumes the mask plane directly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nm_mask(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Boolean keep-mask [rows, cols] keeping top-``n`` of every ``m`` along cols.
+
+    ``cols`` must be divisible by ``m`` (framework pads layers to multiples of
+    8/128 by construction). ``n == m`` returns all-True (dense layer).
+    """
+    rows, cols = scores.shape
+    if cols % m != 0:
+        raise ValueError(f"cols={cols} not divisible by M={m}")
+    if n >= m:
+        return jnp.ones((rows, cols), dtype=bool)
+    g = scores.reshape(rows, cols // m, m)
+    # rank within each group: keep the n largest scores
+    order = jnp.argsort(g, axis=-1)  # ascending
+    ranks = jnp.argsort(order, axis=-1)  # rank of each element
+    keep = ranks >= (m - n)
+    return keep.reshape(rows, cols)
+
+
+def mask_density(mask: jnp.ndarray) -> float:
+    return float(jnp.mean(mask.astype(jnp.float32)))
+
+
+def check_nm(mask: jnp.ndarray, n: int, m: int) -> bool:
+    """Every group of M along the last dim has exactly min(n, m) kept."""
+    rows, cols = mask.shape
+    g = mask.reshape(rows, cols // m, m).sum(axis=-1)
+    return bool(jnp.all(g == min(n, m)))

@@ -1,0 +1,78 @@
+"""Block-wise OBC error compensation loop (Alg. 1 lines 7-18).
+
+Shared by STBLLM and every OBC-family baseline (GPTQ, PB-LLM, BiLLM): the
+method plugs in a ``quantize_block(wb, ctx) -> (bb, meta)`` callback; this
+module owns the Hessian, Cholesky factor, the column-block sweep and the
+compensation update  W[:, b+beta:] -= E @ Hc[b:b+beta, b+beta:].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol
+
+import jax.numpy as jnp
+
+from repro.core.hessian import cholesky_inverse, hessian_from_activations
+
+
+@dataclass
+class BlockCtx:
+    """Per-block context handed to the method callback."""
+    col_start: int
+    col_end: int
+    hinv_chol_diag: jnp.ndarray  # [beta] diag of the block's Cholesky factor
+    x_col_norm: jnp.ndarray      # [beta] calibration input feature norms
+    layer_name: str = ""
+    extras: dict[str, Any] = field(default_factory=dict)
+
+
+QuantizeBlockFn = Callable[[jnp.ndarray, BlockCtx], tuple[jnp.ndarray, dict]]
+
+
+@dataclass
+class OBCResult:
+    deq: jnp.ndarray          # [n, m] dequantized weights
+    block_meta: list[dict]    # per-block method metadata (packing planes etc.)
+    err: float                # total compensated reconstruction error
+
+
+def obc_quantize(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    quantize_block: QuantizeBlockFn,
+    beta: int = 128,
+    percdamp: float = 0.01,
+    layer_name: str = "",
+    x_col_norm: jnp.ndarray | None = None,
+) -> OBCResult:
+    """Run the block-wise OBC sweep over ``w`` [n, m] with activations ``x`` [r, m]."""
+    w = jnp.asarray(w, jnp.float32)
+    n, m = w.shape
+    h = hessian_from_activations(x)
+    hc = cholesky_inverse(h, percdamp)  # [m, m] upper
+    if x_col_norm is None:
+        x_col_norm = jnp.sqrt(jnp.sum(jnp.asarray(x, jnp.float32) ** 2, axis=0))
+
+    wq = w
+    b_out = jnp.zeros_like(w)
+    metas: list[dict] = []
+    for b0 in range(0, m, beta):
+        b1 = min(b0 + beta, m)
+        wb = wq[:, b0:b1]
+        hdiag = jnp.diag(hc)[b0:b1]
+        ctx = BlockCtx(
+            col_start=b0,
+            col_end=b1,
+            hinv_chol_diag=hdiag,
+            x_col_norm=x_col_norm[b0:b1],
+            layer_name=layer_name,
+        )
+        bb, meta = quantize_block(wb, ctx)
+        b_out = b_out.at[:, b0:b1].set(bb)
+        metas.append(meta)
+        # Alg. 1 l.16-17: normalized error, propagate to untouched columns.
+        err = (wb - bb) / jnp.maximum(hdiag, 1e-12)[None, :]
+        if b1 < m:
+            wq = wq.at[:, b1:].add(-(err @ hc[b0:b1, b1:]))
+    total_err = float(jnp.sum((w - b_out) ** 2))
+    return OBCResult(deq=b_out, block_meta=metas, err=total_err)

@@ -1,0 +1,201 @@
+"""Whole-model PTQ driver: calibrate -> allocate -> quantize every linear.
+
+Faithful to the paper's workflow (Alg. 1 applied to all FFN + MHSA weights):
+
+  1. Run calibration tokens through the *unrolled* model with the activation
+     tape on — this records the input matrix X of every dense() call, per
+     depth group (the scan-stacked [G, ...] weights produce G tape entries).
+  2. Compute the adaptive layer-wise N:M allocation (§3.3) from per-layer
+     L2 norms at the target keep ratio.
+  3. Quantize each weight with Alg. 1 (SI mask -> salient residual
+     binarization -> trisection non-salient -> block OBC), or a baseline
+     (rtn / gptq / pbllm / billm) for comparisons.
+  4. Return (a) a params pytree with dequantized weights — drop-in for
+     forward/serve eval, the paper's perplexity protocol — and/or (b) packed
+     sub-1-bit planes (PackedLinear) that dense() routes through the Pallas
+     kernel, plus per-layer stats for the average-bits accounting (Table 1).
+
+Embeddings / lm_head / norms / 1-D params stay full precision, matching the
+paper (and BiLLM/GPTQ), which quantize only the transformer linears.
+MoE expert weights [G, E, din, dout] are calibrated with their block's FFN
+input (router-independent approximation; noted in DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocate import (
+    adaptive_allocation, sin_allocation, uniform_allocation)
+from repro.core.stbllm import STBConfig, stbllm_quantize_layer
+from repro.models.modules import calibration_tape
+from repro.utils.tree import flatten_with_names
+
+# params that are never quantized (paper quantizes FFN+MHSA linears only)
+_SKIP = re.compile(r"(embed|lm_head|norm|bias|scale|router|a_log|conv|gate_b"
+                   r"|d_skip|/b$)")
+
+
+@dataclass
+class ModelPTQResult:
+    params: Any                     # dequantized params (drop-in)
+    packed: dict[str, Any]          # path -> PackedLinear (packable layers)
+    stats: dict[str, dict]          # path[g] -> layer stats
+    allocation: dict[str, tuple[int, int]]
+    avg_bits: float                 # param-count-weighted Table-1 bits
+    storage_bits: float
+
+
+def _quantizable(name: str, leaf) -> bool:
+    return (hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and not _SKIP.search(name)
+            and name.endswith("/w"))
+
+
+def collect_calibration(model, params, tokens: np.ndarray,
+                        memory=None) -> dict[str, list]:
+    """Tape of dense() inputs per path (one entry per depth group)."""
+    unrolled = replace(model, unroll=True)
+    tape: dict[str, list] = {}
+    with calibration_tape(tape):
+        unrolled.forward(params, jnp.asarray(tokens), memory)
+    return tape
+
+
+def _layer_iter(name: str, leaf):
+    """Yield (sub_name, [out, in] weight, restore_fn) for 2/3/4-D weights.
+
+    dense() computes y = x @ W with W [..., d_in, d_out]; Alg. 1 wants
+    [out, in] — transpose both ways. Stacked dims (group, expert) unroll.
+    """
+    arr = np.asarray(leaf, np.float32)
+    if arr.ndim == 2:
+        yield name, arr.T, (lambda q, _a=arr: q.T)
+    elif arr.ndim == 3:
+        for g in range(arr.shape[0]):
+            yield f"{name}[{g}]", arr[g].T, None
+    elif arr.ndim == 4:
+        for g in range(arr.shape[0]):
+            for e in range(arr.shape[1]):
+                yield f"{name}[{g},{e}]", arr[g, e].T, None
+
+
+def quantize_model(
+    model, params, calib_tokens: np.ndarray, cfg: STBConfig = STBConfig(),
+    memory=None,
+    allocation: str = "adaptive",          # adaptive | uniform | sin (Table 6)
+    quantizer: Callable | None = None,     # override: baselines
+    pack: bool = False,
+    progress: Callable[[str], None] | None = None,
+) -> ModelPTQResult:
+    tape = collect_calibration(model, params, calib_tokens, memory)
+    flat = flatten_with_names(params)
+    targets = [(n, l) for n, l in flat if _quantizable(n, l)]
+
+    # ---- layer-wise N:M allocation (§3.3) over quantizable layers ----------
+    norms = {n: float(jnp.linalg.norm(l.astype(jnp.float32)))
+             for n, l in targets}
+    numels = {n: int(np.prod(l.shape)) for n, l in targets}
+    r_target = cfg.n / cfg.m
+    if allocation == "adaptive":
+        alloc = adaptive_allocation(norms, numels, r_target, cfg.m)
+    elif allocation == "uniform":
+        alloc = uniform_allocation(list(norms), r_target, cfg.m)
+    else:
+        depths = {n: i for i, n in enumerate(sorted(norms))}
+        alloc = sin_allocation(depths, r_target, cfg.m)
+
+    quantizer = quantizer or (
+        lambda w, x, c, name: stbllm_quantize_layer(w, x, c, name))
+
+    new_leaves = dict(flat)
+    packed: dict[str, Any] = {}
+    stats: dict[str, dict] = {}
+    for name, leaf in targets:
+        n_i, m_i = alloc[name]
+        lcfg = replace(cfg, n=n_i, m=m_i)
+        xs = _calib_for(tape, name, d_in=int(leaf.shape[-2]))
+        arr = np.asarray(leaf, np.float32)
+        deqs = []
+        for i, (sub, w_oi, _) in enumerate(_layer_iter(name, leaf)):
+            x = xs[min(i if arr.ndim == 3 else i // max(arr.shape[1], 1), len(xs) - 1)] \
+                if xs else np.ones((8, w_oi.shape[1]), np.float32)
+            q = quantizer(jnp.asarray(w_oi), jnp.asarray(x), lcfg, sub)
+            deqs.append(np.asarray(q.deq).T)          # back to [in, out]
+            stats[sub] = dict(q.stats)
+            stats[sub].pop("block_meta", None)
+            if pack and hasattr(q, "mask"):
+                from repro.quant.packing import pack_quantized_layer
+                packed[sub] = pack_quantized_layer(q)
+            if progress:
+                progress(sub)
+        new = np.stack(deqs).reshape(arr.shape) if arr.ndim > 2 else deqs[0]
+        new_leaves[name] = jnp.asarray(new, leaf.dtype)
+
+    new_flat = [new_leaves[n] for n, _ in flat]
+    new_params = jax.tree.unflatten(jax.tree.structure(params), new_flat)
+
+    tot = sum(numels.values())
+    avg = sum(s.get("avg_bits", 0.0) * numels.get(_base(n), 0) /
+              max(_n_subs(n, stats), 1)
+              for n, s in stats.items()) / max(tot, 1)
+    sto = sum(s.get("storage_bits", 0.0) * numels.get(_base(n), 0) /
+              max(_n_subs(n, stats), 1)
+              for n, s in stats.items()) / max(tot, 1)
+    return ModelPTQResult(params=new_params, packed=packed, stats=stats,
+                          allocation=alloc, avg_bits=avg, storage_bits=sto)
+
+
+def _base(sub: str) -> str:
+    return sub.split("[", 1)[0]
+
+
+def _n_subs(sub: str, stats: dict) -> int:
+    b = _base(sub)
+    return sum(1 for k in stats if _base(k) == b)
+
+
+# param-tree group names vs forward-scope names (they intentionally differ:
+# the tree is structural, the scopes are semantic)
+_SYNONYM = {
+    "mixer": {"attn", "mla", "mamba", "mlstm", "slstm"},
+    "ffn": {"mlp", "moe"},
+    "xattn": {"xattn"},
+    "encoder": {"encoder"},
+}
+
+
+def _calib_for(tape: dict[str, list], param_name: str,
+               d_in: int | None = None) -> list[np.ndarray]:
+    """Match a param path to its taped dense() inputs.
+
+    Param paths look like ``blocks/0/mixer/wq/w``; tape keys like
+    ``block0/attn/wq`` (scope names, one entry per unrolled group). Match on
+    the leaf name + a synonym class for the parent; validate input dims.
+    """
+    want = param_name[:-2] if param_name.endswith("/w") else param_name
+    parts = [p for p in want.split("/") if not p.isdigit() and p != "blocks"]
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    ok_parents = _SYNONYM.get(parent, {parent})
+    best: list | None = None
+    for key, entries in tape.items():
+        kp = key.split("/")
+        if kp[-1] != leaf:
+            continue
+        kparent = kp[-2] if len(kp) > 1 else ""
+        kparent = re.sub(r"^block\d+$", "", kparent)
+        if kparent and ok_parents and kparent not in ok_parents:
+            continue
+        if d_in is not None and entries and entries[0].shape[-1] != d_in:
+            continue
+        best = entries
+        break
+    if best is None:
+        return []
+    return [np.asarray(e, np.float32) for e in best]

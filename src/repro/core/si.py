@@ -1,0 +1,46 @@
+"""Standardized Importance metric (paper §3.2, Eq. 3).
+
+S_ij = sigma(mu(|W_ij|)) * ||X_:,j||_2
+
+  mu(|W_ij|) = |W_ij| / sum_j |W_ij|  +  |W_ij| / sum_i |W_ij|
+               (L1-normalized magnitude across input dim j and output dim i)
+  sigma(.)   = (x - mean_W) / std_W   (standardization over the whole layer,
+               neutralizing extreme values that would distort a Hessian metric —
+               paper Appendix D)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def normalized_magnitude(w: jnp.ndarray) -> jnp.ndarray:
+    """mu(|W|): row- and column-L1-normalized magnitude, summed."""
+    aw = jnp.abs(w)
+    row_l1 = jnp.sum(aw, axis=1, keepdims=True)  # sum over input dim j
+    col_l1 = jnp.sum(aw, axis=0, keepdims=True)  # sum over output dim i
+    return aw / jnp.maximum(row_l1, _EPS) + aw / jnp.maximum(col_l1, _EPS)
+
+
+def standardize(x: jnp.ndarray) -> jnp.ndarray:
+    """sigma(.): zero-mean unit-std over the full layer."""
+    mu = jnp.mean(x)
+    sd = jnp.std(x)
+    return (x - mu) / jnp.maximum(sd, _EPS)
+
+
+def standardized_importance(w: jnp.ndarray, x_col_norm: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3. ``w``: [n, m]; ``x_col_norm``: [m] = ||X_:,j||_2 per input feature.
+
+    Note: the standardized magnitude can be negative (it is zero-mean); the
+    *ranking* it induces is what drives the N:M mask, matching the paper's
+    use ("rank all the weights based on their importance scores").
+    """
+    si = standardize(normalized_magnitude(w)) * x_col_norm[None, :]
+    return si
+
+
+def input_feature_norm(x: jnp.ndarray) -> jnp.ndarray:
+    """||X_:,j||_2 for calibration activations X: [r, m] (r samples)."""
+    return jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=0))

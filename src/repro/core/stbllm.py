@@ -1,0 +1,215 @@
+"""STBLLM per-layer structured binarization (paper Alg. 1 + §3).
+
+Pipeline per column block (width beta = group size 128):
+  1. Standardized Importance on the block (Eq. 3)           -> N:M keep mask
+  2. Hessian salient-column search (Alg. 2 Salient)         -> salient cols
+  3. Residual binarization of salient weights (Eq. 4)
+  4. Trisection search + 3-region binarization of the rest  (Eq. 5-6)
+  5. Block-wise OBC compensation                            (Alg. 1 l.16-17)
+
+The per-block quantizer is a single jit-compiled pure function; the OBC sweep
+and packing-plane assembly live outside. Emits both the dequantized tensor
+(for eval / dense serving) and the packed-format planes consumed by
+``repro.quant.packing`` / the Pallas kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trisection as tri
+from repro.core.binary import residual_binarize, sign_pm1
+from repro.core.nm import nm_mask
+from repro.core.obc import BlockCtx, OBCResult, obc_quantize
+from repro.core.salient import salient_column_ranks, candidate_counts, split_error
+from repro.core.si import standardized_importance
+
+
+@dataclass(frozen=True)
+class STBConfig:
+    n: int = 4                     # N of N:M (keep N of every M)
+    m: int = 8                     # M of N:M
+    beta: int = 128                # OBC block size == scale group size (Table 9)
+    percdamp: float = 0.01         # Hessian damping (lambda)
+    salient_max_frac: float = 0.1  # cap for salient-column search (-> ~0.55b @ 4:8)
+    salient_candidates: int = 16
+    tri_sigma: float = 2.0         # p2 = sigma * p1
+    tri_points: int = 160
+    mask_metric: str = "si"        # si | magnitude | wanda | sparsegpt (Table 5)
+    strategy: str = "trisection"   # trisection | bell (Table 8 ablation)
+
+
+@dataclass
+class QuantizedLayer:
+    """Everything needed to eval, pack, and account a quantized layer."""
+    deq: jnp.ndarray              # [n, m] float32 dequantized weights
+    mask: np.ndarray              # [n, m] bool N:M keep mask
+    regions: np.ndarray           # [n, m] uint8: 0 dense /1 inter /2 sparse /3 salient
+    signs: np.ndarray             # [n, m] int8 primary sign plane (+-1)
+    signs_res: np.ndarray         # [n, m] int8 residual sign plane (salient cols)
+    scales: np.ndarray            # [n, nblocks, 5] f32: a_d, a_i, a_s, a_o, a_r
+    n_m: tuple[int, int]
+    stats: dict = field(default_factory=dict)
+
+
+def _mask_scores(wb, x_col_norm, hinv_chol_diag, metric: str):
+    """Importance scores driving the N:M mask (Table 5 ablation surface)."""
+    if metric == "si":
+        return standardized_importance(wb, x_col_norm)
+    if metric == "magnitude":
+        return jnp.abs(wb)
+    if metric == "wanda":
+        return jnp.abs(wb) * x_col_norm[None, :]
+    if metric == "sparsegpt":
+        d = jnp.maximum(hinv_chol_diag, 1e-12)
+        return (wb ** 2) / (d[None, :] ** 2)
+    raise ValueError(f"unknown mask metric {metric!r}")
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "n", "m", "cands", "tri_points", "tri_sigma", "metric", "strategy",
+    ),
+)
+def _stb_block(
+    wb: jnp.ndarray,
+    x_col_norm: jnp.ndarray,
+    hdiag: jnp.ndarray,
+    *,
+    n: int,
+    m: int,
+    cands: tuple[int, ...],
+    tri_points: int,
+    tri_sigma: float,
+    metric: str,
+    strategy: str,
+):
+    """One column block of Alg. 1 (lines 8-15), fully on-device."""
+    scores = _mask_scores(wb, x_col_norm, hdiag, metric)
+    maskb = nm_mask(scores, n, m)
+    ws = wb * maskb.astype(wb.dtype)
+
+    # salient-column search (Alg. 2 Salient) on the masked block
+    ranks = salient_column_ranks(wb, hdiag)
+    cand_arr = jnp.asarray(cands)
+    errs = jax.vmap(lambda k: split_error(ws, maskb, ranks, k))(cand_arr)
+    k_star = cand_arr[jnp.argmin(errs)]
+    sal_cols = ranks < k_star
+    msal = maskb & sal_cols[None, :]
+    mnon = maskb & ~sal_cols[None, :]
+
+    # residual binarization for salient weights (Eq. 4)
+    b_sal, (a_o, a_r), (s_o, s_r) = residual_binarize(ws, msal)
+
+    # non-salient: trisection (paper) or BiLLM bell split (Table 8 ablation)
+    if strategy == "trisection":
+        p1, p2 = tri.trisection_search(
+            ws, mnon, sigma=tri_sigma, num_points=tri_points
+        )
+    else:  # "bell": single break-point -> dense/sparse only (no intermediate)
+        from repro.core.baselines.billm import bell_split_search
+        p2 = bell_split_search(ws, mnon, num_points=tri_points)
+        p1 = p2  # empty intermediate region
+    b_non, tri_scales, tri_regions = tri.trisection_binarize(ws, mnon, p1, p2)
+
+    bb = b_sal * msal.astype(wb.dtype) + b_non  # b_non already 0 off-mask
+
+    regions = jnp.where(sal_cols[None, :], tri.REGION_SALIENT, tri_regions)
+    signs = sign_pm1(jnp.where(msal, s_o, ws))
+    signs_res = jnp.where(msal, s_r, 1.0)
+    scales = jnp.concatenate(
+        [
+            tri_scales[tri.REGION_DENSE],
+            tri_scales[tri.REGION_INTER],
+            tri_scales[tri.REGION_SPARSE],
+            a_o,
+            a_r,
+        ],
+        axis=1,
+    )  # [rows, 5]
+    return bb, maskb, regions, signs, signs_res, scales, k_star, p1, p2
+
+
+def stbllm_quantize_layer(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    cfg: STBConfig = STBConfig(),
+    layer_name: str = "",
+) -> QuantizedLayer:
+    """Alg. 1 STRUCTUREDBINARYLLM for one linear layer.
+
+    ``w``: [out, in] float weights; ``x``: [samples, in] calibration inputs.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    n_rows, m_cols = w.shape
+    if m_cols % cfg.m != 0:
+        raise ValueError(f"in_features={m_cols} must be divisible by M={cfg.m}")
+
+    nblocks = (m_cols + cfg.beta - 1) // cfg.beta
+    mask_p = np.zeros((n_rows, m_cols), dtype=bool)
+    regions_p = np.zeros((n_rows, m_cols), dtype=np.uint8)
+    signs_p = np.zeros((n_rows, m_cols), dtype=np.int8)
+    signs_res_p = np.zeros((n_rows, m_cols), dtype=np.int8)
+    scales_p = np.zeros((n_rows, nblocks, 5), dtype=np.float32)
+    salient_cols_total = 0
+    block_meta: list[dict] = []
+
+    def quantize_block(wb: jnp.ndarray, ctx: BlockCtx):
+        width = ctx.col_end - ctx.col_start
+        cands = candidate_counts(width, cfg.salient_max_frac, cfg.salient_candidates)
+        bb, maskb, regions, signs, signs_res, scales, k_star, p1, p2 = _stb_block(
+            wb, ctx.x_col_norm, ctx.hinv_chol_diag,
+            n=cfg.n, m=cfg.m, cands=cands, tri_points=cfg.tri_points,
+            tri_sigma=cfg.tri_sigma, metric=cfg.mask_metric, strategy=cfg.strategy,
+        )
+        bi = ctx.col_start // cfg.beta
+        sl = slice(ctx.col_start, ctx.col_end)
+        mask_p[:, sl] = np.asarray(maskb)
+        regions_p[:, sl] = np.asarray(regions).astype(np.uint8)
+        signs_p[:, sl] = np.asarray(signs).astype(np.int8)
+        signs_res_p[:, sl] = np.asarray(signs_res).astype(np.int8)
+        scales_p[:, bi, :] = np.asarray(scales)
+        nonlocal salient_cols_total
+        salient_cols_total += int(k_star)
+        meta = {"n_star": int(k_star), "p1": float(p1), "p2": float(p2)}
+        block_meta.append(meta)
+        return bb, meta
+
+    res: OBCResult = obc_quantize(
+        w, x, quantize_block, beta=cfg.beta, percdamp=cfg.percdamp,
+        layer_name=layer_name,
+    )
+
+    r_sal = salient_cols_total / m_cols
+    stats = {
+        "recon_err": res.err,
+        "r_salient": r_sal,
+        "keep_ratio": cfg.n / cfg.m,
+        "avg_bits": average_bits(cfg.n, cfg.m, r_sal),
+        "storage_bits": storage_bits(cfg.n, cfg.m, r_sal, cfg.beta),
+        "block_meta": block_meta,
+    }
+    return QuantizedLayer(
+        deq=res.deq, mask=mask_p, regions=regions_p, signs=signs_p,
+        signs_res=signs_res_p, scales=scales_p, n_m=(cfg.n, cfg.m), stats=stats,
+    )
+
+
+def average_bits(n: int, m: int, r_salient: float) -> float:
+    """Paper §3.4 'Average Bits' (Table 1 semantics — value bits per position).
+
+    N_param = 2*r_salient + 1*(1-r_salient) bits per retained weight;
+    retained fraction N/M.
+    """
+    n_param = 2.0 * r_salient + 1.0 * (1.0 - r_salient)
+    return n_param * n / m
+
+
+def storage_bits(n: int, m: int, r_salient: float, b_size: int = 128) -> float:
+    """Paper's N_storing overhead (2 + 1/b_size bits) added per retained weight."""
+    return average_bits(n, m, r_salient) + (2.0 + 1.0 / b_size) * n / m

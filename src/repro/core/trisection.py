@@ -1,0 +1,91 @@
+"""Non-salient Aware Quantization: trisection search (paper §3.4, Alg. 2).
+
+Partitions the symmetric distribution of non-salient weight magnitudes into
+dense [0, p1], intermediate (p1, p2], sparse (p2, max] regions; each region is
+binarized with its own per-row scale (Eq. 5-6). The O(N) search couples the
+break-points with p2 = sigma * p1 (sigma = 2 in the paper) over a 160-point
+linspace of p1 in [0.1, 0.9] * max|W|, skipping p2 > 0.9 * max|W|.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binary import binarize, sign_pm1
+
+SIGMA = 2.0  # p2 = SIGMA * p1 (paper Appendix A)
+NUM_POINTS = 160  # paper: np.linspace(0.1, 0.9, 160)
+
+# region codes shared with the packed format (repro.quant.packing)
+REGION_DENSE = 0
+REGION_INTER = 1
+REGION_SPARSE = 2
+REGION_SALIENT = 3
+
+
+def region_masks(w_abs: jnp.ndarray, p1, p2):
+    """(dense, intermediate, sparse) boolean masks from |W| and break-points."""
+    dense = w_abs <= p1
+    inter = (w_abs > p1) & (w_abs <= p2)
+    sparse = w_abs > p2
+    return dense, inter, sparse
+
+
+def _tri_error(w: jnp.ndarray, mask: jnp.ndarray, p1, p2) -> jnp.ndarray:
+    """Eq. 5: sum of the three regions' binarization residuals (on mask)."""
+    aw = jnp.abs(w)
+    dense, inter, sparse = region_masks(aw, p1, p2)
+    err = jnp.asarray(0.0, jnp.float32)
+    for region in (dense, inter, sparse):
+        rmask = mask & region
+        b, _, _ = binarize(w, rmask)
+        err += jnp.sum(((w - b) * rmask.astype(w.dtype)) ** 2)
+    return err
+
+
+def trisection_search(w: jnp.ndarray, mask: jnp.ndarray, sigma: float = SIGMA,
+                      num_points: int = NUM_POINTS):
+    """Alg. 2 NonSalientAwareQuant: returns (p1*, p2*) as jnp scalars.
+
+    ``w``: non-salient weight block; ``mask``: N:M-kept & non-salient entries.
+    Vectorized over candidates with lax.map (memory-bounded on CPU).
+    """
+    wmax = jnp.maximum(jnp.max(jnp.abs(w) * mask.astype(w.dtype)), 1e-12)
+    fracs = jnp.linspace(0.1, 0.9, num_points)
+
+    def eval_cand(frac):
+        p1 = frac * wmax
+        p2 = sigma * p1
+        err = _tri_error(w, mask, p1, p2)
+        # skip (infinite error) when p2 exceeds 0.9 * max — paper's continue
+        return jnp.where(p2 > 0.9 * wmax, jnp.inf, err)
+
+    errs = jax.lax.map(eval_cand, fracs)
+    best = jnp.argmin(errs)
+    p1 = fracs[best] * wmax
+    return p1, sigma * p1
+
+
+def trisection_binarize(w: jnp.ndarray, mask: jnp.ndarray, p1, p2):
+    """Alg. 2 Trisection(): binarize the three regions separately.
+
+    Returns (b, scales, regions):
+      b       — dequantized tensor (0 off-mask),
+      scales  — dict region-code -> [n,1] per-row alpha,
+      regions — int8 [n, m] region code per element (only meaningful on mask).
+    """
+    aw = jnp.abs(w)
+    dense, inter, sparse = region_masks(aw, p1, p2)
+    b = jnp.zeros_like(w)
+    scales = {}
+    for code, region in ((REGION_DENSE, dense), (REGION_INTER, inter),
+                         (REGION_SPARSE, sparse)):
+        rmask = mask & region
+        br, alpha, _ = binarize(w, rmask)
+        b = b + br * rmask.astype(w.dtype)
+        scales[code] = alpha
+    regions = (
+        jnp.where(sparse, REGION_SPARSE, jnp.where(inter, REGION_INTER, REGION_DENSE))
+        .astype(jnp.int8)
+    )
+    return b, scales, regions

@@ -1,0 +1,7 @@
+from repro.data.synthetic import SyntheticCorpus, ZipfMarkovConfig
+from repro.data.loader import DataLoader, LoaderConfig, calibration_batch
+
+__all__ = [
+    "SyntheticCorpus", "ZipfMarkovConfig", "DataLoader", "LoaderConfig",
+    "calibration_batch",
+]

@@ -1,0 +1,75 @@
+"""Deterministic synthetic corpus: a Zipf-marginal Markov chain over tokens.
+
+The paper's calibration sets (C4 / Wikitext2 / PTB) are not available offline;
+what the PTQ pipeline actually needs from them is *statistically plausible
+token streams* — a heavy-tailed unigram distribution with local transition
+structure, so layer input activations have realistic column norms for the SI
+metric and a non-degenerate Hessian ``H = 2XX^T`` for OBC. The Zipf-Markov
+chain below delivers both and is exactly reproducible from a seed, so every
+test/benchmark is hermetic.
+
+Each "document" is a seeded chain; three named splits (train/valid/calib)
+use disjoint seed ranges, standing in for the paper's C4-calibrate /
+Wikitext2-evaluate protocol.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ZipfMarkovConfig:
+    vocab: int = 512
+    zipf_a: float = 1.2          # Zipf exponent for the marginal
+    branch: int = 16             # candidate successors per state
+    doc_len: int = 1024
+    seed: int = 1234
+
+
+class SyntheticCorpus:
+    """Deterministic stream of token documents.
+
+    The chain: state s transitions to one of ``branch`` successors chosen
+    (per s, seeded) from the Zipf marginal; successor probabilities are a
+    renormalized slice of the marginal. Mixing a 10% restart to the marginal
+    keeps the chain ergodic over the full vocab.
+    """
+
+    def __init__(self, cfg: ZipfMarkovConfig = ZipfMarkovConfig()):
+        self.cfg = cfg
+        r = np.random.default_rng(cfg.seed)
+        ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+        self.marginal = ranks ** -cfg.zipf_a
+        self.marginal /= self.marginal.sum()
+        # per-state successor table [V, branch] + per-state probs
+        self.succ = r.choice(
+            cfg.vocab, size=(cfg.vocab, cfg.branch), p=self.marginal)
+        w = self.marginal[self.succ]
+        self.succ_p = w / w.sum(axis=1, keepdims=True)
+
+    def document(self, doc_id: int, split: str = "train") -> np.ndarray:
+        base = {"train": 0, "valid": 1 << 28, "calib": 1 << 29}[split]
+        r = np.random.default_rng(self.cfg.seed * 7919 + base + doc_id)
+        toks = np.empty(self.cfg.doc_len, dtype=np.int32)
+        s = int(r.choice(self.cfg.vocab, p=self.marginal))
+        for i in range(self.cfg.doc_len):
+            toks[i] = s
+            if r.random() < 0.1:   # restart: sample the marginal
+                s = int(r.choice(self.cfg.vocab, p=self.marginal))
+            else:
+                s = int(r.choice(self.succ[s], p=self.succ_p[s]))
+        return toks
+
+    def tokens(self, n_tokens: int, split: str = "train",
+               start_doc: int = 0) -> np.ndarray:
+        """Concatenate documents until ``n_tokens`` (exact length)."""
+        out, doc = [], start_doc
+        have = 0
+        while have < n_tokens:
+            d = self.document(doc, split)
+            out.append(d)
+            have += len(d)
+            doc += 1
+        return np.concatenate(out)[:n_tokens]

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused int8-KV decode attention.
+
+One new token attends a long quantized KV cache. HBM traffic per (batch,
+kv-head) is the int8 cache + f32 scales (~half of bf16, ~quarter of f32);
+dequantization, the online softmax, and the PV accumulation all happen in
+VMEM — the HLO path materializes a dequantized cache in HBM, this kernel
+never does. This is the serving-side hot spot of long_500k / decode_32k.
+
+Layout: q [B, KH, G, D] (GQA groups folded), k/v int8 [B, S, KH, D],
+scales f32 [B, S, KH]. Grid (B, KH, S/bs): the S axis is innermost and
+"arbitrary" (sequential) so the online-softmax scratch carries across chunks.
+
+Validated against ref.py's pure-jnp oracle in interpret mode (tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BS = 512
+
+
+def _decode_attn_kernel(qref, kref, kscale, vref, vscale, lenref, oref,
+                        m_ref, l_ref, acc_ref, *, bs: int, ns: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = qref[0, 0]                                     # [G, D] f32
+    k = kref[0, :, 0].astype(jnp.float32)              # [bs, D] int8 -> f32
+    ks = kscale[0, :, 0]                               # [bs]
+    v = vref[0, :, 0].astype(jnp.float32)
+    vs = vscale[0, :, 0]
+
+    # dequantize in VMEM; scores with f32 accumulation on the MXU
+    kd = k * ks[:, None]
+    scores = jax.lax.dot_general(
+        q, kd, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [G, bs]
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < lenref[0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)                        # [G, bs]
+    corr = jnp.exp(m_prev - m_new)                     # [G, 1]
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    vd = v * vs[:, None]                               # [bs, D]
+    pv = jax.lax.dot_general(
+        p, vd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [G, D]
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _store():
+        oref[0, 0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(oref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_int8(
+    q: jnp.ndarray,        # [B, KH, G, D] f32/bf16 (pre-scaled by D**-0.5)
+    k_q: jnp.ndarray,      # [B, S, KH, D] int8
+    k_scale: jnp.ndarray,  # [B, S, KH] f32
+    v_q: jnp.ndarray,      # [B, S, KH, D] int8
+    v_scale: jnp.ndarray,  # [B, S, KH] f32
+    cache_len: jnp.ndarray,  # [] or [B] int32
+    *,
+    bs: int = DEFAULT_BS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, KH, G, D] attention output."""
+    b, kh, g, d = q.shape
+    s = k_q.shape[1]
+    bs = min(bs, s)
+    if s % bs:
+        raise ValueError(f"cache length {s} not divisible by block {bs}")
+    ns = s // bs
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+
+    kernel = functools.partial(_decode_attn_kernel, bs=bs, ns=ns)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, ss: (i, j, 0, 0)),  # q
+            pl.BlockSpec((1, bs, 1, d), lambda i, j, ss: (i, ss, j, 0)),  # k
+            pl.BlockSpec((1, bs, 1), lambda i, j, ss: (i, ss, j)),     # ks
+            pl.BlockSpec((1, bs, 1, d), lambda i, j, ss: (i, ss, j, 0)),  # v
+            pl.BlockSpec((1, bs, 1), lambda i, j, ss: (i, ss, j)),     # vs
+            pl.BlockSpec((1,), lambda i, j, ss: (i,)),                 # len
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, ss: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max
+            pltpu.VMEM((g, 1), jnp.float32),   # running denom
+            pltpu.VMEM((g, d), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k_q, k_scale, v_q, v_scale, lens)
+
+
+def decode_attention_int8_ref(q, k_q, k_scale, v_q, v_scale, cache_len):
+    """Pure-jnp oracle: dequantize then masked softmax attention."""
+    b, kh, g, d = q.shape
+    s = k_q.shape[1]
+    kd = k_q.astype(jnp.float32) * k_scale[..., None]     # [B, S, KH, D]
+    vd = v_q.astype(jnp.float32) * v_scale[..., None]
+    scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), kd)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (b,))
+    valid = jnp.arange(s)[None, :] < lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vd)
+    return out.astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Public jit'd entry points for structured-binary matmul.
+
+``stb_matmul(x, packed, impl=...)`` dispatches between:
+  * "pallas"      — the TPU kernel (compiled on TPU, interpret=True elsewhere)
+  * "jnp"         — dequantize-in-HLO + dense matmul; this is what the
+                    distributed serve path lowers on any backend (the decode
+                    ops appear in the HLO, so dry-run byte counts reflect the
+                    packed HBM traffic)
+  * "ref"         — alias of the oracle in ref.py
+  * None          — auto: pallas on TPU, jnp otherwise
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import stb_matmul_ref
+from repro.kernels.stb_gemm import stb_gemm_packed
+from repro.quant.packing import PackedLinear
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
+               **kw) -> jnp.ndarray:
+    """y = x @ decode(W).  x: [..., K] -> [..., N]."""
+    if impl is None:
+        impl = "pallas" if _platform() == "tpu" else "jnp"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "pallas":
+        y = stb_gemm_packed(x2, p, interpret=_platform() != "tpu", **kw)
+    elif impl in ("jnp", "ref"):
+        y = stb_matmul_ref(x2, p)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, p.n)

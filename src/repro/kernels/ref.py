@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the structured-binary GEMM kernel.
+
+``stb_matmul_ref(x, packed)`` == dequantize-to-dense then matmul. This is the
+ground truth every Pallas kernel variant is asserted against (shape/dtype
+sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.packing import PackedLinear, unpack_to_dense
+
+
+def stb_matmul_ref(x: jnp.ndarray, p: PackedLinear,
+                   out_dtype=None) -> jnp.ndarray:
+    """y = x @ dequant(W).  x: [..., K];  returns [..., N]."""
+    w = unpack_to_dense(p, dtype=x.dtype)
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)

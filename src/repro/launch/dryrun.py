@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run driver (spec §MULTI-POD DRY-RUN).
+
+For every (architecture x input shape) cell, lower + compile the appropriate
+step (train_step / prefill_step / serve_step) on the production mesh —
+16x16 single-pod and 2x16x16 multi-pod — and record memory_analysis(),
+cost_analysis() and the collective schedule for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells, 1 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis.roofline import roofline_from_lowered
+from repro.configs import SHAPES
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_bundle, lower_bundle
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def cell_is_applicable(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: O(S^2) at 524k skipped per spec"
+    return True, ""
+
+
+def model_flops_for(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_token = 6 * n_active if shape.kind == "train" else 2 * n_active
+    return float(per_token) * tokens
+
+
+def extrapolated_costs(cfg, shape, mesh, model_kw, n_groups_full: int,
+                       packed: bool = False,
+                       serve_replicated: bool = False) -> dict:
+    """Full-depth HLO flops/bytes/collective-bytes via unrolled g=1/g=2.
+
+    HloCostAnalysis visits a while-loop (lax.scan) body once regardless of
+    trip count, so the scanned program under-reports depth-proportional costs
+    by ~G. We lower *unrolled* reduced-depth variants instead:
+        cost(g) = c0 + g * c_layer   (c0 = embed/head/encoder fixed part)
+    and extrapolate cost(G) = cost(1) + (G-1) * (cost(2) - cost(1)).
+    """
+    from repro.analysis.roofline import collective_bytes_from_hlo
+
+    kw = dict(model_kw or {})
+    kw["unroll"] = True
+
+    def costs_at(g: int) -> tuple[float, float, float]:
+        bundle = build_bundle(cfg, shape, mesh, model_kw=kw, n_groups=g,
+                              packed=packed,
+                              serve_replicated=serve_replicated)
+        lowered = lower_bundle(bundle, mesh)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                float(coll["total"]))
+
+    f1, b1, c1 = costs_at(1)
+    if n_groups_full == 1:
+        return {"flops": f1, "bytes": b1, "collective_bytes": c1,
+                "method": "unrolled-exact"}
+    f2, b2, c2 = costs_at(2)
+    g = n_groups_full
+    return {
+        "flops": f1 + (g - 1) * (f2 - f1),
+        "bytes": b1 + (g - 1) * (b2 - b1),
+        "collective_bytes": c1 + (g - 1) * (c2 - c1),
+        "per_layer": {"flops": f2 - f1, "bytes": b2 - b1,
+                      "collective_bytes": c2 - c1},
+        "method": f"unrolled-extrapolated g=1,2 -> G={g}",
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             model_kw: dict | None = None, tag: str = "",
+             costing: bool = True, packed: bool = False,
+             serve_replicated: bool = False,
+             mesh_shape: tuple[int, ...] | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    mesh_name = ("x".join(map(str, mesh_shape)) if mesh_shape
+                 else ("2x16x16" if multi_pod else "16x16"))
+    chips = 512 if multi_pod else 256
+    ok, why = cell_is_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    t0 = time.time()
+    try:
+        bundle = build_bundle(cfg, shape, mesh, model_kw=model_kw,
+                              packed=packed, serve_replicated=serve_replicated)
+        lowered = lower_bundle(bundle, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        report = roofline_from_lowered(
+            lowered, compiled, arch=arch, shape=shape_name,
+            mesh_name=mesh_name, chips=chips,
+            model_flops=model_flops_for(cfg, shape))
+        if costing:
+            from repro.models.model import derive_pattern
+            g_full = cfg.n_layers // len(derive_pattern(cfg))
+            extr = extrapolated_costs(cfg, shape, mesh, model_kw, g_full,
+                                      packed=packed,
+                                      serve_replicated=serve_replicated)
+            rec["scan_body_costs"] = {
+                "flops": report.hlo_flops, "bytes": report.hlo_bytes,
+                "collective_bytes": report.collective_bytes}
+            rec["extrapolation"] = {k: v for k, v in extr.items()
+                                    if k in ("per_layer", "method")}
+            # extrapolated costs are per-device (SPMD module) -> global
+            report.hlo_flops = extr["flops"] * chips
+            report.hlo_bytes = extr["bytes"] * chips
+            report.collective_bytes = extr["collective_bytes"] * chips
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(mem, "peak_buffer_size_in_bytes", 0) or 0),
+            },
+            roofline=report.to_dict(),
+        )
+        print(report.summary(), flush=True)
+        print(f"  mem/device: args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    except Exception as e:  # a failing cell is a bug — surface it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"FAIL {arch} {shape_name} {mesh_name}: {e}", flush=True)
+    return rec
+
+
+def save_rec(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve with structured-binary packed weights")
+    ap.add_argument("--serve-replicated", action="store_true",
+                    help="weight-stationary serving (replicate weights over "
+                         "the data axis; right for batched decode, wrong for "
+                         "B=1 long-context — see EXPERIMENTS §Perf)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (decode shapes)")
+    ap.add_argument("--recipe", action="store_true",
+                    help="apply the measured per-family winning recipe "
+                         "(launch.recipes) instead of baseline sharding")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            # multi-pod pass proves the 'pod' axis shards; roofline costing
+            # (extra unrolled lowers) is single-pod only per spec.
+            if args.recipe:
+                from repro.launch.recipes import serving_recipe
+                r = serving_recipe(get_config(arch), SHAPES[shape])
+                rec = run_cell(arch, shape, args.multi_pod,
+                               costing=not args.multi_pod, packed=r.packed,
+                               serve_replicated=r.serve_replicated,
+                               model_kw=r.model_kw() or None,
+                               mesh_shape=r.mesh_shape,
+                               tag=args.tag or "recipe")
+            else:
+                rec = run_cell(arch, shape, args.multi_pod,
+                               costing=not args.multi_pod, packed=args.packed,
+                               serve_replicated=args.serve_replicated,
+                               model_kw={"kv_quant": True} if args.kv_quant
+                               else None,
+                               tag=args.tag or
+                               ("packed" if args.packed else ""))
+            save_rec(rec, args.out)
+            failures += rec["status"] == "error"
+    print(f"done: {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

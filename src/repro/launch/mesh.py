@@ -1,0 +1,34 @@
+"""Production meshes. 16x16 = one v5e pod slice (256 chips); the multi-pod
+mesh adds a leading 'pod' axis (2 pods = 512 chips).
+
+A function (not a module constant) so importing never touches jax device
+state — the dry-run must set XLA_FLAGS before the first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None):
+    """256-chip single-pod / 512-chip two-pod mesh.
+
+    ``shape`` refactorizes the same physical chips into a different logical
+    mesh (e.g. (32, 8): more DP, narrower TP) — a per-workload sharding
+    choice §Perf explores for prefill, where wide TP inflates the per-device
+    all-gather payload.
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / single host)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,67 @@
+"""Per-family serving/sharding recipes — the §Perf sweep winners.
+
+The EXPERIMENTS §Perf sweep showed the optimization set is family-dependent:
+dense-GQA decode wants TP-only replicated packed weights + int8 KV; MoE must
+keep EP placement; B=1 long-context wants FSDP + dense weights; MLA gains
+little from packing (latent cache already compact); cross-attention archs
+regress under the dense recipes. This module encodes those outcomes so
+launchers and the dry-run pick the measured winner by default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class ServingRecipe:
+    packed: bool = False            # structured-binary packed weights
+    serve_replicated: bool = False  # weight-stationary (strip FSDP axis)
+    kv_quant: bool = False          # int8 KV cache
+    act_seq_axis: bool = False      # sequence-parallel activations
+    mesh_shape: tuple | None = None # logical refactorization of the pod
+    why: str = ""
+
+    def model_kw(self) -> dict:
+        kw = {}
+        if self.kv_quant:
+            kw["kv_quant"] = True
+        if self.act_seq_axis:
+            kw["act_seq_axis"] = True
+        return kw
+
+
+def serving_recipe(cfg: ModelConfig, shape: ShapeConfig) -> ServingRecipe:
+    """Measured-winner defaults per (family, workload). See EXPERIMENTS §Perf."""
+    fam = cfg.family
+    if shape.kind == "train":
+        return ServingRecipe(why="training: FSDP x TP baseline; remat knobs "
+                                 "via Model(remat_policy=...)")
+    long_ctx = shape.name == "long_500k" or shape.global_batch == 1
+    if shape.kind == "decode":
+        if long_ctx:
+            # B=1: FSDP spreads the per-token weight read across all chips;
+            # packed-HLO materialization regresses (kernel needed to win)
+            return ServingRecipe(kv_quant=True,
+                                 why="B=1 long ctx: keep FSDP, dense weights")
+        if fam in ("audio", "vlm"):
+            # xattn memory re-projection dominates; dense recipes regress
+            return ServingRecipe(why="xattn arch: baseline sharding")
+        if fam == "dense" and cfg.attn_type == "mla":
+            return ServingRecipe(kv_quant=False, serve_replicated=True,
+                                 packed=True,
+                                 why="MLA: latent cache already compact; "
+                                     "packed weights + TP-only")
+        # dense GQA / MoE / SSM / hybrid batched decode: cell-A recipe
+        return ServingRecipe(packed=True, serve_replicated=True,
+                             kv_quant=True,
+                             why="batched decode: packed + int8 KV + TP-only "
+                                 "(EP kept for experts by sharding rules)")
+    # prefill
+    if fam == "dense" and cfg.attn_type != "mla":
+        return ServingRecipe(serve_replicated=True, act_seq_axis=True,
+                             why="dense GQA prefill: SP + weight-stationary "
+                                 "(cell-C recipe; consider mesh (32,8))")
+    return ServingRecipe(why="MLA/MoE/xattn prefill: baseline (SP regresses "
+                             "their collective patterns)")

@@ -1,0 +1,191 @@
+"""Step functions: train_step / prefill_step / serve_step + input_specs.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the launchers jit for real runs. ``input_specs(cfg, shape, mesh)``
+returns sharded ShapeDtypeStruct stand-ins for every input — weak-type
+correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.loss import lm_loss
+from repro.models.model import Model, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.sharding.rules import (
+    attach_sharding,
+    batch_spec,
+    cache_specs,
+    dp_axes,
+    named_shardings,
+    param_specs,
+)
+
+AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_compression: bool = False):
+    """``grad_compression``: int8 error-feedback quantization of gradients
+    before the optimizer — the payload that crosses the DP axis is 8-bit
+    (4x less than fp32 wire format); the residual is carried in opt_state
+    so the update stays unbiased (repro.optim.compression)."""
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = model.forward(p, batch["tokens"], batch.get("memory"))
+            loss = lm_loss(logits, batch["labels"], cfg.vocab)
+            return loss + AUX_WEIGHT * aux, (loss, aux)
+
+        grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        if grad_compression:
+            from repro.optim import compress_gradients, decompress_gradients
+            q, scales, residuals = compress_gradients(
+                grads, opt_state["ef_residual"])
+            grads = decompress_gradients(q, scales, grads)
+            opt_state = dict(opt_state, ef_residual=residuals)
+        inner = {k: v for k, v in opt_state.items() if k != "ef_residual"}
+        params, inner = adamw_update(params, grads, inner, opt_cfg)
+        if grad_compression:
+            inner["ef_residual"] = opt_state["ef_residual"]
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return params, inner, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch["tokens"], batch.get("memory"))
+        # serving returns only the last-position logits
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, caches, batch):
+        logits, caches = model.decode_step(
+            params, caches, batch["token"], batch["pos"], batch.get("memory"))
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_token, caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def _memory_sds(cfg: ModelConfig, batch: int, dtype, mesh) -> Any:
+    bs = batch_spec(mesh, batch)
+    if cfg.encoder is not None:
+        d = cfg.encoder.d_frontend or cfg.d_model
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.n_frames, d), dtype,
+            sharding=NamedSharding(mesh, P(*bs, None, None)))
+    if cfg.vision is not None:
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.vision.n_tokens, cfg.vision.d_vision), dtype,
+            sharding=NamedSharding(mesh, P(*bs, None, None)))
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                dtype=jnp.bfloat16) -> dict:
+    """Batch input stand-ins for the given workload shape."""
+    b, s = shape.global_batch, shape.seq_len
+    bs = batch_spec(mesh, b)
+    tok = lambda shp: jax.ShapeDtypeStruct(
+        shp, jnp.int32, sharding=NamedSharding(mesh, P(*bs, *(None,) * (len(shp) - 1))))
+    mem = _memory_sds(cfg, b, dtype, mesh)
+    if shape.kind == "train":
+        batch = {"tokens": tok((b, s)), "labels": tok((b, s))}
+    elif shape.kind == "prefill":
+        batch = {"tokens": tok((b, s))}
+    else:  # decode
+        batch = {
+            "token": tok((b, 1)),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if mem is not None:
+        batch["memory"] = mem
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# full lowering bundles (params/opt/caches as sharded SDS)
+# ---------------------------------------------------------------------------
+@dataclass
+class LoweringBundle:
+    fn: Any                  # the step function
+    args: tuple              # sharded ShapeDtypeStruct args
+    donate: tuple = ()
+
+
+def build_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 dtype=jnp.bfloat16, remat: bool = True,
+                 model_kw: dict | None = None,
+                 n_groups: int | None = None,
+                 packed: bool = False,
+                 serve_replicated: bool = False) -> LoweringBundle:
+    if n_groups is not None:
+        # reduced-depth variant (same pattern) for scan-aware cost extrapolation
+        from dataclasses import replace
+        from repro.models.model import derive_pattern
+        period = len(derive_pattern(cfg))
+        cfg = replace(cfg, n_layers=period * n_groups)
+    kw = dict(model_kw or {})
+    ndp = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    if shape.global_batch % ndp == 0:
+        kw.setdefault("batch_axes", dp_axes(mesh))
+    model = build_model(cfg, dtype=dtype, remat=remat, **kw)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if packed:
+        # serve with structured-binary packed weights (the paper's format):
+        # dense() dispatches on the PackedLinear leaves, so the lowered HLO
+        # streams ~6-bit planes from HBM and decodes on-chip.
+        from repro.quant.packing import abstract_pack_params
+        assert shape.kind != "train", "packed weights are a serving format"
+        p_shapes = abstract_pack_params(p_shapes)
+    # NB: packed decode usually wants serve_replicated=True too (TP-only
+    # weight-stationary serving) — but not at B=1 long-context, where FSDP
+    # spreads the per-token weight read across all chips (§Perf).
+    p_spec = param_specs(p_shapes, mesh, serve_replicated=serve_replicated)
+    p_sds = attach_sharding(p_shapes, named_shardings(p_spec, mesh))
+    batch = input_specs(cfg, shape, mesh, dtype)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_spec = param_specs(opt_shapes, mesh)  # moments mirror params; step P()
+        o_sds = attach_sharding(opt_shapes, named_shardings(o_spec, mesh))
+        step = make_train_step(model, AdamWConfig())
+        return LoweringBundle(step, (p_sds, o_sds, batch), donate=(0, 1))
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        return LoweringBundle(step, (p_sds, batch))
+    # decode
+    c_shapes = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    c_spec = cache_specs(c_shapes, mesh, shape.global_batch)
+    c_sds = attach_sharding(c_shapes, named_shardings(c_spec, mesh))
+    step = make_serve_step(model)
+    return LoweringBundle(step, (p_sds, c_sds, batch), donate=(1,))
+
+
+def lower_bundle(bundle: LoweringBundle, mesh):
+    jitted = jax.jit(bundle.fn, donate_argnums=bundle.donate)
+    with mesh:
+        return jitted.lower(*bundle.args)

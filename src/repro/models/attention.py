@@ -1,0 +1,123 @@
+"""Attention: chunked (flash-style) softmax attention in pure JAX.
+
+Never materializes the [Sq, Sk] score matrix for full sequences — an online-
+softmax scan over KV chunks (and a map over Q chunks) keeps live buffers at
+O(S * chunk), which is what makes the 32k-prefill cells fit HBM. GQA/MQA are
+handled by folding heads into [K, G] groups (no kv repeat materialized).
+
+Decode (single query vs. a long cache) uses a direct masked softmax — scores
+are [B, H, Sk], small even at 32k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fit_chunk(s: int, c: int) -> int:
+    """Largest divisor of ``s`` that is <= the requested chunk (whisper's
+    1500-frame encoder is not a power of two)."""
+    c = min(c, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _chunked(x: jnp.ndarray, c: int) -> jnp.ndarray:
+    """[B, S, ...] -> [S/c, B, c, ...] (scan-major chunks)."""
+    b, s = x.shape[:2]
+    return x.reshape(b, s // c, c, *x.shape[2:]).swapaxes(0, 1)
+
+
+def flash_attention(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Sk, K, D]
+    v: jnp.ndarray,            # [B, Sk, K, D]
+    *,
+    causal: bool = True,
+    q_offset: int | jnp.ndarray = 0,   # absolute position of q[0] (prefill=0)
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+) -> jnp.ndarray:
+    """Returns [B, Sq, H, D]. H must be a multiple of K (GQA groups)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    cq = _fit_chunk(sq, q_chunk)
+    ck = _fit_chunk(sk, kv_chunk)
+
+    scale = d ** -0.5
+    qg = (q * scale).reshape(b, sq, kh, g, d)
+    q_chunks = _chunked(qg, cq)                      # [nq, B, cq, K, G, D]
+    k_chunks = _chunked(k, ck)                       # [nk, B, ck, K, D]
+    v_chunks = _chunked(v, ck)
+    kpos = jnp.arange(sk).reshape(sk // ck, ck)      # [nk, ck]
+
+    def one_q_chunk(args):
+        qi, qc = args                                # qc: [B, cq, K, G, D]
+        qpos = q_offset + qi * cq + jnp.arange(cq)   # [cq]
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kc, vc, kp = blk
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qc, kc, preferred_element_type=jnp.float32
+            )                                        # [B, K, G, cq, ck]
+            if causal:
+                keep = kp[None, None, None, None, :] <= qpos[None, None, None, :, None]
+                s = jnp.where(keep, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, d), jnp.float32)
+        # remat each KV step: the [cq, ck] score tiles are recomputed in the
+        # backward pass instead of being stored for every chunk pair.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            (m0, l0, a0), (k_chunks, v_chunks, kpos)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B, K, G, cq, D]
+        return out.transpose(0, 3, 1, 2, 4)           # [B, cq, K, G, D]
+
+    nq = sq // cq
+    outs = jax.lax.map(
+        one_q_chunk, (jnp.arange(nq), q_chunks)
+    )                                                 # [nq, B, cq, K, G, D]
+    out = outs.swapaxes(0, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # [B, 1, H, D]  (one new token)
+    k_cache: jnp.ndarray,      # [B, Sk, K, D]
+    v_cache: jnp.ndarray,      # [B, Sk, K, D]
+    cache_len,                 # scalar or [B]: number of valid cache entries
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    _, sk, kh, _ = k_cache.shape
+    g = h // kh
+    qg = (q[:, 0] * (d ** -0.5)).reshape(b, kh, g, d)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )                                                 # [B, K, G, Sk]
+    valid = jnp.arange(sk)[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)

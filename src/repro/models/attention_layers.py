@@ -1,0 +1,305 @@
+"""Attention layer modules: GQA/MQA self-attention, MLA (multi-head latent
+attention, MiniCPM3/DeepSeek style), and cross-attention (Whisper decoder,
+Llama-3.2-Vision gated cross-attn layers).
+
+Each exposes: ``*_init``, ``*_apply`` (full sequence), ``*_decode`` (one token
++ cache), ``*_init_cache``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.modules import KeyGen, dense, dense_init, rmsnorm, rmsnorm_init, scope
+from repro.models.rope import apply_rope
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA / MHA
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GQAConfig:
+    d: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d // self.n_heads
+
+
+def gqa_init(kg: KeyGen, cfg: GQAConfig, dtype=jnp.float32) -> dict:
+    dh = cfg.head_dim_
+    return {
+        "wq": dense_init(kg, cfg.d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kg, cfg.d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(kg, cfg.d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(kg, cfg.n_heads * dh, cfg.d, dtype),
+    }
+
+
+def _qkv(params, x, cfg: GQAConfig, positions):
+    b, s, _ = x.shape
+    dh = cfg.head_dim_
+    q = dense(params["wq"], x, "wq").reshape(b, s, cfg.n_heads, dh)
+    k = dense(params["wk"], x, "wk").reshape(b, s, cfg.n_kv_heads, dh)
+    v = dense(params["wv"], x, "wv").reshape(b, s, cfg.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(params: dict, x: jnp.ndarray, cfg: GQAConfig,
+              q_chunk: int = 2048, kv_chunk: int = 2048) -> jnp.ndarray:
+    b, s, _ = x.shape
+    with scope("attn"):
+        positions = jnp.arange(s)[None, :]
+        q, k, v = _qkv(params, x, cfg, positions)
+        o = flash_attention(q, k, v, causal=cfg.causal,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        return dense(params["wo"], o.reshape(b, s, -1), "wo")
+
+
+def gqa_init_cache(cfg: GQAConfig, batch: int, max_len: int, dtype,
+                   kv_quant: bool = False) -> dict:
+    dh = cfg.head_dim_
+    shape = (batch, max_len, cfg.n_kv_heads, dh)
+    if kv_quant:
+        # int8 KV with per-(token, head) scales: halves the decode-dominant
+        # cache traffic vs bf16 (beyond-paper optimization, EXPERIMENTS §Perf)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def _kv_quantize(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, S, K, D] -> (int8 values, [B, S, K] f32 scales)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(t.astype(jnp.float32) / jnp.maximum(scale, 1e-8)[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig):
+    """x: [B,1,D]; ``pos``: scalar index of this token. Returns (y, cache)."""
+    b = x.shape[0]
+    with scope("attn"):
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = _qkv(params, x, cfg, positions)
+        upd = lambda c, new: jax.lax.dynamic_update_slice_in_dim(
+            c, new.astype(c.dtype), pos, axis=1)
+        if "k_scale" in cache:  # int8 KV path
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            cache = {
+                "k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, pos, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, pos, axis=1),
+            }
+            if jax.devices()[0].platform == "tpu":
+                # fused Pallas path: int8 cache never dequantized in HBM
+                from repro.kernels.decode_attn import decode_attention_int8
+                b_, _, h, dh = q.shape
+                kh = cache["k"].shape[2]
+                qg = (q[:, 0] * (dh ** -0.5)).reshape(b_, kh, h // kh, dh)
+                o = decode_attention_int8(
+                    qg, cache["k"], cache["k_scale"], cache["v"],
+                    cache["v_scale"], pos + 1)
+                y = dense(params["wo"], o.reshape(b_, 1, -1), "wo")
+                return y, cache
+            kc = _kv_dequantize(cache["k"], cache["k_scale"], q.dtype)
+            vc = _kv_dequantize(cache["v"], cache["v_scale"], q.dtype)
+        else:
+            kc = upd(cache["k"], k)
+            vc = upd(cache["v"], v)
+            cache = {"k": kc, "v": vc}
+        o = decode_attention(q, kc, vc, cache_len=pos + 1)
+        y = dense(params["wo"], o.reshape(b, 1, -1), "wo")
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MLAConfig:
+    d: int = 0
+    n_heads: int = 0
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_dim: int = 64
+    rope_theta: float = 10000.0
+
+
+def mla_init(kg: KeyGen, cfg: MLAConfig, dtype=jnp.float32) -> dict:
+    h = cfg.n_heads
+    return {
+        "wq_a": dense_init(kg, cfg.d, cfg.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wq_b": dense_init(kg, cfg.q_lora_rank,
+                           h * (cfg.qk_nope_dim + cfg.qk_rope_dim), dtype),
+        "wkv_a": dense_init(kg, cfg.d, cfg.kv_lora_rank, dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wk_rope": dense_init(kg, cfg.d, cfg.qk_rope_dim, dtype),
+        "wkv_b": dense_init(kg, cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_dim + cfg.v_dim), dtype),
+        "wo": dense_init(kg, h * cfg.v_dim, cfg.d, dtype),
+    }
+
+
+def _mla_q(params, x, cfg: MLAConfig, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(params["q_norm"], dense(params["wq_a"], x, "wq_a"))
+    q = dense(params["wq_b"], cq, "wq_b").reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim
+    )
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(params: dict, x: jnp.ndarray, cfg: MLAConfig,
+              q_chunk: int = 2048, kv_chunk: int = 2048) -> jnp.ndarray:
+    """Training/prefill path: up-project latent, run standard flash attention."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    with scope("mla"):
+        positions = jnp.arange(s)[None, :]
+        q_nope, q_rope = _mla_q(params, x, cfg, positions)
+        ckv = rmsnorm(params["kv_norm"], dense(params["wkv_a"], x, "wkv_a"))
+        k_rope = dense(params["wk_rope"], x, "wk_rope")         # [B,S,rope]
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+        kv = dense(params["wkv_b"], ckv, "wkv_b").reshape(
+            b, s, h, cfg.qk_nope_dim + cfg.v_dim
+        )
+        k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, cfg.qk_rope_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v head dim up to qk dim for the shared flash kernel, then slice
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_dim)))
+        o = flash_attention(q, k, v_pad, causal=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        o = o[..., : cfg.v_dim].reshape(b, s, h * cfg.v_dim)
+        return dense(params["wo"], o, "wo")
+
+
+def mla_init_cache(cfg: MLAConfig, batch: int, max_len: int, dtype) -> dict:
+    """MLA's whole point: cache the *latent* (rank + rope), not full K/V."""
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
+    """Absorbed decode: attention runs in the latent space (DeepSeek-V2 style)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    with scope("mla"):
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q_nope, q_rope = _mla_q(params, x, cfg, positions)      # [B,1,H,*]
+        ckv_t = rmsnorm(params["kv_norm"], dense(params["wkv_a"], x, "wkv_a"))
+        k_rope_t = apply_rope(
+            dense(params["wk_rope"], x, "wk_rope"), positions, cfg.rope_theta
+        )
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), pos, axis=1)
+
+        # absorb W_ukv's key half into q: q_abs [B,1,H,rank]
+        wkv_b = params["wkv_b"]["w"].reshape(
+            cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_dim
+        )
+        w_uk = wkv_b[..., : cfg.qk_nope_dim]                    # [rank,H,nope]
+        w_uv = wkv_b[..., cfg.qk_nope_dim:]                     # [rank,H,v]
+        q_abs = jnp.einsum("bohd,rhd->bohr", q_nope, w_uk.astype(x.dtype))
+        scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+        s_lat = jnp.einsum("bohr,bsr->bohs", q_abs, ckv,
+                           preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bohd,bsd->bohs", q_rope, k_rope,
+                            preferred_element_type=jnp.float32)
+        s = (s_lat + s_rope) * scale                            # [B,1,H,S]
+        valid = jnp.arange(ckv.shape[1])[None, None, None, :] <= pos
+        s = jnp.where(valid, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bohs,bsr->bohr", p.astype(x.dtype), ckv)
+        o = jnp.einsum("bohr,rhd->bohd", ctx, w_uv.astype(x.dtype))
+        y = dense(params["wo"], o.reshape(b, 1, h * cfg.v_dim), "wo")
+    return y, {"ckv": ckv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec / VLM)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CrossAttnConfig:
+    d: int = 0
+    d_mem: int = 0       # memory (encoder / vision) width
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d // self.n_heads
+
+
+def xattn_init(kg: KeyGen, cfg: CrossAttnConfig, dtype=jnp.float32) -> dict:
+    dh = cfg.head_dim_
+    return {
+        "wq": dense_init(kg, cfg.d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kg, cfg.d_mem, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(kg, cfg.d_mem, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(kg, cfg.n_heads * dh, cfg.d, dtype),
+        "gate": jnp.zeros((), jnp.float32),   # tanh-gated (Llama-vision style)
+    }
+
+
+def xattn_memory(params: dict, memory: jnp.ndarray, cfg: CrossAttnConfig) -> dict:
+    """Precompute K/V over the encoder/vision memory (once per request)."""
+    b, sm, _ = memory.shape
+    dh = cfg.head_dim_
+    with scope("xattn"):
+        k = dense(params["wk"], memory, "wk").reshape(b, sm, cfg.n_kv_heads, dh)
+        v = dense(params["wv"], memory, "wv").reshape(b, sm, cfg.n_kv_heads, dh)
+    return {"k": k, "v": v}
+
+
+def xattn_apply(params: dict, x: jnp.ndarray, mem_kv: dict,
+                cfg: CrossAttnConfig) -> jnp.ndarray:
+    b, s, _ = x.shape
+    dh = cfg.head_dim_
+    with scope("xattn"):
+        q = dense(params["wq"], x, "wq").reshape(b, s, cfg.n_heads, dh)
+        o = flash_attention(q, mem_kv["k"], mem_kv["v"], causal=False,
+                            q_chunk=2048, kv_chunk=2048)
+        y = dense(params["wo"], o.reshape(b, s, -1), "wo")
+        # gate is a f32 scalar; keep the residual dtype stable under scan
+        return (jnp.tanh(params["gate"]) * y).astype(x.dtype)

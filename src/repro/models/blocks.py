@@ -1,0 +1,206 @@
+"""Block assembly: every architecture is a repeating *pattern* of blocks.
+
+A pattern is a tuple of BlockSpecs of period P; the model is L/P groups, each
+group applying the pattern once. Parameters for pattern position p are
+stacked over groups ([G, ...] leading dim) so the whole depth is a single
+lax.scan — HLO size is O(P), independent of L (critical for compiling the
+62-layer / 88-layer archs with 512 host devices on one CPU core).
+
+Block kinds: attn (GQA/MQA), mla, mamba, mlstm, slstm. Optional per-block
+cross-attention (whisper decoder, llama-vision gated xattn) and FFN choice
+(swiglu / gelu / moe / none).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models import attention_layers as al
+from repro.models import mamba as mb
+from repro.models import xlstm as xl
+from repro.models.mlp import gelu_mlp, gelu_mlp_init, swiglu, swiglu_init
+from repro.models.modules import KeyGen, rmsnorm, rmsnorm_init, layernorm, layernorm_init, scope
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    mixer: str                  # attn | mla | mamba | mlstm | slstm
+    ffn: str | None = "swiglu"  # swiglu | gelu | moe | None
+    xattn: bool = False
+    causal: bool = True
+
+
+@dataclass(frozen=True)
+class BlockDims:
+    """Everything a block needs to size itself (derived from ModelConfig)."""
+    d: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    rope_theta: float
+    norm: str = "rmsnorm"
+    moe: MoEConfig | None = None
+    mla: al.MLAConfig | None = None
+    mamba: mb.MambaConfig | None = None
+    xlstm: xl.XLSTMConfig | None = None
+    d_mem: int = 0  # cross-attn memory width (post-projection)
+
+    @property
+    def gqa(self) -> al.GQAConfig:
+        return al.GQAConfig(
+            d=self.d, n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim, rope_theta=self.rope_theta,
+        )
+
+    @property
+    def xattn_cfg(self) -> al.CrossAttnConfig:
+        return al.CrossAttnConfig(
+            d=self.d, d_mem=self.d_mem or self.d, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+        )
+
+
+def _norm_init(dims: BlockDims, dtype):
+    return rmsnorm_init(dims.d, dtype) if dims.norm == "rmsnorm" else layernorm_init(dims.d, dtype)
+
+
+def _norm(dims: BlockDims, p, x):
+    return rmsnorm(p, x) if dims.norm == "rmsnorm" else layernorm(p, x)
+
+
+def block_init(kg: KeyGen, spec: BlockSpec, dims: BlockDims, dtype) -> dict:
+    p: dict[str, Any] = {"norm1": _norm_init(dims, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = al.gqa_init(kg, dims.gqa, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = al.mla_init(kg, dims.mla, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mb.mamba_init(kg, dims.mamba, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xl.mlstm_init(kg, dims.xlstm, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xl.slstm_init(kg, dims.xlstm, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.xattn:
+        p["xattn_norm"] = _norm_init(dims, dtype)
+        p["xattn"] = al.xattn_init(kg, dims.xattn_cfg, dtype)
+    if spec.ffn is not None:
+        p["norm2"] = _norm_init(dims, dtype)
+        if spec.ffn == "swiglu":
+            p["ffn"] = swiglu_init(kg, dims.d, dims.d_ff, dtype)
+        elif spec.ffn == "gelu":
+            p["ffn"] = gelu_mlp_init(kg, dims.d, dims.d_ff, dtype)
+        elif spec.ffn == "moe":
+            p["ffn"] = moe_init(kg, dims.moe, dtype)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def block_apply(
+    params: dict,
+    x: jnp.ndarray,
+    spec: BlockSpec,
+    dims: BlockDims,
+    *,
+    mem_kv_src: jnp.ndarray | None = None,   # memory embeddings for xattn
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+):
+    """Full-sequence forward. Returns (y, aux_loss)."""
+    aux = jnp.asarray(0.0, jnp.float32)
+    h = _norm(dims, params["norm1"], x)
+    if spec.mixer == "attn":
+        cfg = al.GQAConfig(
+            d=dims.d, n_heads=dims.n_heads, n_kv_heads=dims.n_kv_heads,
+            head_dim=dims.head_dim, rope_theta=dims.rope_theta,
+            causal=spec.causal,
+        )
+        h = al.gqa_apply(params["mixer"], h, cfg, q_chunk, kv_chunk)
+    elif spec.mixer == "mla":
+        h = al.mla_apply(params["mixer"], h, dims.mla, q_chunk, kv_chunk)
+    elif spec.mixer == "mamba":
+        h = mb.mamba_apply(params["mixer"], h, dims.mamba)
+    elif spec.mixer == "mlstm":
+        h = xl.mlstm_apply(params["mixer"], h, dims.xlstm)
+    elif spec.mixer == "slstm":
+        h = xl.slstm_apply(params["mixer"], h, dims.xlstm)
+    x = x + h
+    if spec.xattn:
+        assert mem_kv_src is not None, "xattn block needs memory"
+        hx = _norm(dims, params["xattn_norm"], x)
+        mem_kv = al.xattn_memory(params["xattn"], mem_kv_src, dims.xattn_cfg)
+        x = x + al.xattn_apply(params["xattn"], hx, mem_kv, dims.xattn_cfg)
+    if spec.ffn is not None:
+        h2 = _norm(dims, params["norm2"], x)
+        if spec.ffn == "swiglu":
+            h2 = swiglu(params["ffn"], h2)
+        elif spec.ffn == "gelu":
+            h2 = gelu_mlp(params["ffn"], h2)
+        else:
+            h2, aux = moe_apply(params["ffn"], h2, dims.moe)
+        x = x + h2
+    return x, aux
+
+
+def block_init_cache(spec: BlockSpec, dims: BlockDims, batch: int,
+                     max_len: int, dtype, kv_quant: bool = False) -> dict:
+    if spec.mixer == "attn":
+        c = al.gqa_init_cache(dims.gqa, batch, max_len, dtype,
+                              kv_quant=kv_quant)
+    elif spec.mixer == "mla":
+        c = al.mla_init_cache(dims.mla, batch, max_len, dtype)
+    elif spec.mixer == "mamba":
+        c = mb.mamba_init_state(dims.mamba, batch, dtype)
+    elif spec.mixer == "mlstm":
+        c = xl.mlstm_init_state(dims.xlstm, batch)
+    elif spec.mixer == "slstm":
+        c = xl.slstm_init_state(dims.xlstm, batch)
+    else:
+        raise ValueError(spec.mixer)
+    return {"mixer": c}
+
+
+def block_decode(
+    params: dict,
+    x: jnp.ndarray,             # [B, 1, D]
+    cache: dict,
+    pos,
+    spec: BlockSpec,
+    dims: BlockDims,
+    *,
+    mem_kv_src: jnp.ndarray | None = None,
+):
+    h = _norm(dims, params["norm1"], x)
+    if spec.mixer == "attn":
+        h, c = al.gqa_decode(params["mixer"], h, cache["mixer"], pos, dims.gqa)
+    elif spec.mixer == "mla":
+        h, c = al.mla_decode(params["mixer"], h, cache["mixer"], pos, dims.mla)
+    elif spec.mixer == "mamba":
+        h, c = mb.mamba_decode(params["mixer"], h, cache["mixer"], dims.mamba)
+    elif spec.mixer == "mlstm":
+        h, c = xl.mlstm_decode(params["mixer"], h, cache["mixer"], dims.xlstm)
+    elif spec.mixer == "slstm":
+        h, c = xl.slstm_decode(params["mixer"], h, cache["mixer"], dims.xlstm)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    if spec.xattn:
+        hx = _norm(dims, params["xattn_norm"], x)
+        mem_kv = al.xattn_memory(params["xattn"], mem_kv_src, dims.xattn_cfg)
+        x = x + al.xattn_apply(params["xattn"], hx, mem_kv, dims.xattn_cfg)
+    if spec.ffn is not None:
+        h2 = _norm(dims, params["norm2"], x)
+        if spec.ffn == "swiglu":
+            h2 = swiglu(params["ffn"], h2)
+        elif spec.ffn == "gelu":
+            h2 = gelu_mlp(params["ffn"], h2)
+        else:
+            h2, _ = moe_apply(params["ffn"], h2, dims.moe)
+        x = x + h2
+    return x, {"mixer": c}

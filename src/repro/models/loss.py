@@ -1,0 +1,27 @@
+"""Cross-entropy LM loss (fp32 log-softmax, padded-vocab masking, z-loss)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int,
+            z_loss: float = 1e-4):
+    """logits: [B, S, Vp] (Vp >= vocab, padded ids masked); labels: [B, S]."""
+    logits = logits.astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vp > vocab:
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse ** 2)
+    return loss
+
+
+def perplexity(loss: float) -> float:
+    import math
+    return math.exp(min(loss, 30.0))

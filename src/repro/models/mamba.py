@@ -1,0 +1,152 @@
+"""Mamba (selective SSM) layer with chunked associative-scan training path.
+
+Training/prefill uses a lax.scan over sequence chunks with an inner
+associative scan — live state tensors stay at O(B * chunk * d_in * N) and the
+carried state is [B, d_in, N], which is what makes jamba's long_500k cell
+feasible. Decode is the single-step recurrence (constant memory — the reason
+the hybrid archs run the 500k cell at all).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import KeyGen, dense, dense_init, scope
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d: int = 0
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0  # 0 -> ceil(d/16)
+
+    @property
+    def d_in(self) -> int:
+        return self.expand * self.d
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, (self.d + 15) // 16)
+
+
+def mamba_init(kg: KeyGen, cfg: MambaConfig, dtype=jnp.float32) -> dict:
+    d, din, n = cfg.d, cfg.d_in, cfg.d_state
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(kg, d, 2 * din, dtype),
+        "conv_w": (jax.random.normal(kg(), (cfg.d_conv, din)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype=dtype),
+        "x_proj": dense_init(kg, din, cfg.dt_rank_ + 2 * n, dtype),
+        "dt_proj": dense_init(kg, cfg.dt_rank_, din, dtype),
+        "dt_bias": jnp.zeros((din,), dtype=jnp.float32),
+        "a_log": jnp.log(a),                       # fp32 SSM params (tiny)
+        "d_skip": jnp.ones((din,), dtype=jnp.float32),
+        "out_proj": dense_init(kg, din, d, dtype),
+    }
+
+
+def _ssm_chunk(h_in, delta, bmat, cmat, xs, a_log):
+    """One chunk of the selective scan.
+
+    h_in: [B, din, N]; delta/xs: [B, c, din]; bmat/cmat: [B, c, N].
+    Returns (y [B, c, din], h_out).
+    """
+    a_bar = jnp.exp(delta[..., None] * (-jnp.exp(a_log))[None, None])
+    b_bar = (delta * xs)[..., None] * bmat[:, :, None, :]   # [B,c,din,N]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h0 = jax.lax.associative_scan(combine, (a_bar, b_bar), axis=1)
+    h_all = h0 + a_cum * h_in[:, None]                       # [B,c,din,N]
+    y = jnp.einsum("bcdn,bcn->bcd", h_all, cmat)
+    return y, h_all[:, -1]
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, cfg: MambaConfig,
+                chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence path. x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    din, n, rank = cfg.d_in, cfg.d_state, cfg.dt_rank_
+    with scope("mamba"):
+        xz = dense(params["in_proj"], x, "in_proj")
+        xs, z = jnp.split(xz, 2, axis=-1)                    # [B,S,din]
+        # depthwise causal conv along S
+        k = cfg.d_conv
+        xpad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(
+            xpad[:, i:i + s, :] * params["conv_w"][i][None, None, :]
+            for i in range(k)
+        ) + params["conv_b"][None, None, :]
+        xs = jax.nn.silu(conv)
+
+        proj = dense(params["x_proj"], xs, "x_proj").astype(jnp.float32)
+        dt, bmat, cmat = jnp.split(proj, [rank, rank + n], axis=-1)
+        delta = jax.nn.softplus(
+            dense(params["dt_proj"], dt.astype(x.dtype), "dt_proj").astype(jnp.float32)
+            + params["dt_bias"][None, None, :]
+        )                                                    # [B,S,din]
+
+        c = min(chunk, s)
+        assert s % c == 0
+
+        def step(h, blk):
+            dl, bm, cm, xv = blk
+            y, h2 = _ssm_chunk(h, dl, bm, cm, xv, params["a_log"])
+            return h2, y
+
+        def chunked(t):  # [B,S,...] -> [S/c, B, c, ...]
+            return t.reshape(b, s // c, c, *t.shape[2:]).swapaxes(0, 1)
+
+        h0 = jnp.zeros((b, din, n), jnp.float32)
+        _, ys = jax.lax.scan(
+            step, h0,
+            (chunked(delta), chunked(bmat), chunked(cmat),
+             chunked(xs.astype(jnp.float32))),
+        )
+        y = ys.swapaxes(0, 1).reshape(b, s, din)
+        y = y + params["d_skip"][None, None, :] * xs.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        return dense(params["out_proj"], y, "out_proj")
+
+
+def mamba_init_state(cfg: MambaConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_in, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_in), dtype),
+    }
+
+
+def mamba_decode(params: dict, x: jnp.ndarray, state: dict, cfg: MambaConfig):
+    """One-token step. x: [B, 1, D] -> ([B, 1, D], new state)."""
+    b = x.shape[0]
+    din, n, rank = cfg.d_in, cfg.d_state, cfg.dt_rank_
+    with scope("mamba"):
+        xz = dense(params["in_proj"], x, "in_proj")
+        xs, z = jnp.split(xz, 2, axis=-1)                    # [B,1,din]
+        hist = jnp.concatenate([state["conv"], xs], axis=1)  # [B,k,din]
+        conv = (
+            jnp.einsum("bkd,kd->bd", hist, params["conv_w"].astype(x.dtype))
+            + params["conv_b"][None, :]
+        )[:, None, :]
+        xs = jax.nn.silu(conv)
+        proj = dense(params["x_proj"], xs, "x_proj").astype(jnp.float32)
+        dt, bmat, cmat = jnp.split(proj, [rank, rank + n], axis=-1)
+        delta = jax.nn.softplus(
+            dense(params["dt_proj"], dt.astype(x.dtype), "dt_proj").astype(jnp.float32)
+            + params["dt_bias"][None, None, :]
+        )[:, 0]                                              # [B,din]
+        a_bar = jnp.exp(delta[..., None] * (-jnp.exp(params["a_log"]))[None])
+        b_bar = (delta * xs.astype(jnp.float32)[:, 0])[..., None] * bmat[:, 0, None, :]
+        h = a_bar * state["h"] + b_bar                       # [B,din,N]
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])
+        y = y + params["d_skip"][None, :] * xs.astype(jnp.float32)[:, 0]
+        y = (y[:, None, :]).astype(x.dtype) * jax.nn.silu(z)
+        out = dense(params["out_proj"], y, "out_proj")
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,35 @@
+"""Feed-forward variants: SwiGLU (llama family) and GeLU (whisper/gpt style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import KeyGen, dense, dense_init, scope
+
+
+def swiglu_init(kg: KeyGen, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "wi_gate": dense_init(kg, d, d_ff, dtype),
+        "wi_up": dense_init(kg, d, d_ff, dtype),
+        "wo": dense_init(kg, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    with scope("mlp"):
+        gate = dense(params["wi_gate"], x, "wi_gate")
+        up = dense(params["wi_up"], x, "wi_up")
+        return dense(params["wo"], jax.nn.silu(gate) * up, "wo")
+
+
+def gelu_mlp_init(kg: KeyGen, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "wi": dense_init(kg, d, d_ff, dtype),
+        "wo": dense_init(kg, d_ff, d, dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    with scope("mlp"):
+        h = jax.nn.gelu(dense(params["wi"], x, "wi"))
+        return dense(params["wo"], h, "wo")

@@ -1,0 +1,352 @@
+"""Model: pattern-scanned LM covering all 10 assigned architectures.
+
+``build_model(cfg)`` returns a Model with pure functions:
+  init(key)                     -> params
+  forward(params, tokens, mem)  -> (logits, aux)   # train / prefill
+  init_cache(batch, max_len)    -> caches (stacked per pattern position)
+  decode_step(params, caches, token, pos, mem) -> (logits, caches)
+
+Depth is one lax.scan over L/P groups (P = pattern period), with the pattern
+unrolled inside the body; block params/caches are stacked [G, ...] pytrees.
+jax.checkpoint (remat) wraps the scan body for training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention_layers as al
+from repro.models import mamba as mb
+from repro.models import xlstm as xl
+from repro.models.blocks import (
+    BlockDims,
+    BlockSpec,
+    block_apply,
+    block_decode,
+    block_init,
+    block_init_cache,
+)
+from repro.models.modules import (
+    KeyGen,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    scope,
+    unembed,
+)
+from repro.models.moe import MoEConfig
+
+
+def derive_pattern(cfg: ModelConfig) -> tuple[BlockSpec, ...]:
+    """Architecture family -> repeating block pattern (DESIGN.md §2)."""
+    ffn = cfg.mlp_type
+    if cfg.family in ("dense",):
+        mixer = "mla" if cfg.attn_type == "mla" else "attn"
+        return (BlockSpec(mixer, ffn=ffn),)
+    if cfg.family == "moe":
+        return (BlockSpec("attn", ffn="moe"),)
+    if cfg.family == "ssm":  # xlstm: mLSTM x7 + sLSTM (self-contained blocks)
+        p = cfg.ssm.slstm_every
+        return tuple(
+            BlockSpec("slstm" if i == p - 1 else "mlstm", ffn=None)
+            for i in range(p)
+        )
+    if cfg.family == "hybrid":  # jamba: attn at pos 3 of 8; MoE every other
+        p = cfg.ssm.attn_every
+        specs = []
+        for i in range(p):
+            mixer = "attn" if i == p // 2 - 1 else "mamba"
+            f = "moe" if (cfg.moe and i % cfg.moe.every == cfg.moe.every - 1) else ffn
+            specs.append(BlockSpec(mixer, ffn=f))
+        return tuple(specs)
+    if cfg.family == "audio":  # whisper decoder: self-attn + cross-attn
+        return (BlockSpec("attn", ffn=ffn, xattn=True),)
+    if cfg.family == "vlm":  # llama-3.2-vision: gated xattn every 5th
+        p = cfg.vision.xattn_every
+        return tuple(
+            BlockSpec("attn", ffn=ffn, xattn=(i == p - 1)) for i in range(p)
+        )
+    raise ValueError(cfg.family)
+
+
+def derive_dims(cfg: ModelConfig) -> BlockDims:
+    moe = (
+        MoEConfig(
+            n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            group_size=cfg.moe.group_size, d=cfg.d_model, d_ff=cfg.d_ff,
+        )
+        if cfg.moe
+        else None
+    )
+    mla = (
+        al.MLAConfig(
+            d=cfg.d_model, n_heads=cfg.n_heads,
+            q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+            qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta,
+        )
+        if cfg.attn_type == "mla"
+        else None
+    )
+    mamba = (
+        mb.MambaConfig(d=cfg.d_model, expand=cfg.ssm.expand,
+                       d_state=cfg.ssm.d_state, d_conv=cfg.ssm.d_conv)
+        if cfg.ssm and cfg.ssm.kind == "mamba"
+        else None
+    )
+    xlstm = (
+        xl.XLSTMConfig(d=cfg.d_model, n_heads=cfg.ssm.xlstm_heads)
+        if cfg.ssm and cfg.ssm.kind == "xlstm"
+        else None
+    )
+    d_mem = cfg.d_model  # memory is projected to d_model before xattn
+    return BlockDims(
+        d=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, d_ff=cfg.d_ff, rope_theta=cfg.rope_theta,
+        norm=cfg.norm, moe=moe, mla=mla, mamba=mamba, xlstm=xlstm, d_mem=d_mem,
+    )
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # distribution: mesh axis names carrying the batch dim (None = no
+    # constraints, e.g. single-device tests). Set by launch.steps.
+    batch_axes: tuple | None = None
+    act_model_axis: bool = False   # also shard activations' d_model over 'model'
+    act_seq_axis: bool = False     # sequence parallelism: shard S over 'model'
+    # remat policy for the depth scan: "nothing" recomputes the whole block
+    # in backward (min memory, +flops/bytes); "dots" saves matmul outputs and
+    # recomputes only elementwise chains (the MaxText-style compromise).
+    remat_policy: str = "nothing"
+    # int8 KV cache with per-(token, head) scales — halves the cache traffic
+    # that dominates long-context decode (serving option; EXPERIMENTS §Perf).
+    kv_quant: bool = False
+    # unroll=True replaces the depth lax.scan with a Python loop. Costing only:
+    # XLA's HloCostAnalysis visits a while-loop body ONCE regardless of trip
+    # count, so scanned programs under-report flops/bytes/collectives by ~G.
+    # The dry-run lowers unrolled reduced-depth variants (n_groups=1,2) and
+    # extrapolates linearly to full depth (launch/dryrun.py).
+    unroll: bool = False
+
+    def _constrain(self, x, *, vocab_dim: bool = False):
+        if self.batch_axes is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        tail = ["model" if (vocab_dim or self.act_model_axis) else None]
+        mid = [None] * (x.ndim - 2)
+        if mid and self.act_seq_axis and not vocab_dim \
+                and not self.act_model_axis:
+            mid[0] = "model"   # [B, S, D]: SP on the sequence dim
+        spec = P(self.batch_axes, *mid, *tail)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    @cached_property
+    def pattern(self) -> tuple[BlockSpec, ...]:
+        return derive_pattern(self.cfg)
+
+    @cached_property
+    def dims(self) -> BlockDims:
+        return derive_dims(self.cfg)
+
+    @property
+    def n_groups(self) -> int:
+        p = len(self.pattern)
+        assert self.cfg.n_layers % p == 0, (self.cfg.n_layers, p)
+        return self.cfg.n_layers // p
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        cfg, dims = self.cfg, self.dims
+        kg = KeyGen(key)
+        params: dict[str, Any] = {
+            "embed": embed_init(kg, cfg.vocab_padded, cfg.d_model, self.dtype),
+            "lm_head": embed_init(kg, cfg.vocab_padded, cfg.d_model, self.dtype),
+            "final_norm": self._norm_init(cfg.d_model),
+        }
+
+        def stacked(spec: BlockSpec, keys):
+            return jax.vmap(
+                lambda k: block_init(KeyGen(k), spec, dims, self.dtype)
+            )(keys)
+
+        params["blocks"] = tuple(
+            stacked(spec, jax.random.split(kg(), self.n_groups))
+            for spec in self.pattern
+        )
+        if cfg.encoder is not None:
+            enc_spec = BlockSpec("attn", ffn=cfg.mlp_type, causal=False)
+            params["encoder"] = {
+                "in_proj": dense_init(
+                    kg, cfg.encoder.d_frontend or cfg.d_model, cfg.d_model,
+                    self.dtype),
+                "blocks": stacked(
+                    enc_spec, jax.random.split(kg(), cfg.encoder.n_layers)),
+                "final_norm": self._norm_init(cfg.d_model),
+            }
+        if cfg.vision is not None:
+            params["vision_proj"] = dense_init(
+                kg, cfg.vision.d_vision, cfg.d_model, self.dtype)
+        return params
+
+    def _norm_init(self, d):
+        return (rmsnorm_init(d, self.dtype) if self.cfg.norm == "rmsnorm"
+                else layernorm_init(d, self.dtype))
+
+    def _norm(self, p, x):
+        return rmsnorm(p, x) if self.cfg.norm == "rmsnorm" else layernorm(p, x)
+
+    # --------------------------------------------------------------- memory
+    def _memory(self, params: dict, memory: jnp.ndarray | None):
+        """Project the modality frontend stub to d_model / run the encoder."""
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            assert memory is not None, "whisper needs frame embeddings"
+            with scope("encoder"):
+                h = dense(params["encoder"]["in_proj"],
+                          memory.astype(self.dtype), "in_proj")
+                enc_spec = BlockSpec("attn", ffn=cfg.mlp_type, causal=False)
+
+                def body(x, layer_params):
+                    y, _ = block_apply(
+                        layer_params, x, enc_spec, self.dims,
+                        q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+                    return y, None
+
+                if self.unroll:
+                    for li in range(cfg.encoder.n_layers):
+                        lp = jax.tree.map(
+                            lambda a: a[li], params["encoder"]["blocks"])
+                        h, _ = body(h, lp)
+                else:
+                    h, _ = jax.lax.scan(body, h, params["encoder"]["blocks"])
+                return self._norm(params["encoder"]["final_norm"], h)
+        if cfg.vision is not None:
+            assert memory is not None, "vlm needs patch embeddings"
+            with scope("vision"):
+                return dense(params["vision_proj"],
+                             memory.astype(self.dtype), "vision_proj")
+        return None
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params: dict, tokens: jnp.ndarray,
+                memory: jnp.ndarray | None = None):
+        """tokens: [B, S] -> (logits [B, S, V] fp32, aux scalar)."""
+        mem = self._memory(params, memory)
+        x = embed(params["embed"], tokens).astype(self.dtype)
+        x = self._constrain(x)
+
+        def body(carry, layer_params):
+            x, aux = carry
+            for p, spec in enumerate(self.pattern):
+                with scope(f"block{p}"):
+                    x, a = block_apply(
+                        layer_params[p], x, spec, self.dims, mem_kv_src=mem,
+                        q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+                x = self._constrain(x)
+                aux = aux + a
+            return (x, aux), None
+
+        if self.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if self.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        carry = (x, jnp.asarray(0.0, jnp.float32))
+        if self.unroll:
+            for g in range(self.n_groups):
+                layer_params = jax.tree.map(lambda a: a[g], params["blocks"])
+                carry, _ = body(carry, layer_params)
+            (x, aux) = carry
+        else:
+            (x, aux), _ = jax.lax.scan(body, carry, params["blocks"])
+        x = self._norm(params["final_norm"], x)
+        logits = unembed(params["lm_head"], x)
+        logits = self._constrain(logits, vocab_dim=True)
+        return logits, aux
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int) -> tuple:
+        def one(spec):
+            c = block_init_cache(spec, self.dims, batch, max_len, self.dtype,
+                                 kv_quant=self.kv_quant)
+            # stack over groups
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), c)
+
+        return tuple(one(spec) for spec in self.pattern)
+
+    def decode_step(self, params: dict, caches: tuple, token: jnp.ndarray,
+                    pos, memory: jnp.ndarray | None = None):
+        """token: [B, 1] -> (logits [B, 1, V], new caches)."""
+        mem = self._memory(params, memory)
+        x = embed(params["embed"], token).astype(self.dtype)
+        x = self._constrain(x)
+
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            new_cache = []
+            for p, spec in enumerate(self.pattern):
+                with scope(f"block{p}"):
+                    x, c = block_decode(
+                        layer_params[p], x, layer_cache[p], pos, spec,
+                        self.dims, mem_kv_src=mem)
+                new_cache.append(c)
+            return x, tuple(new_cache)
+
+        if self.unroll:
+            per_group = []
+            for g in range(self.n_groups):
+                xs = jax.tree.map(lambda a: a[g], (params["blocks"], caches))
+                x, c = body(x, xs)
+                per_group.append(c)
+            new_caches = jax.tree.map(
+                lambda *cs: jnp.stack(cs), *per_group)
+        else:
+            x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        x = self._norm(params["final_norm"], x)
+        logits = unembed(params["lm_head"], x)
+        logits = self._constrain(logits, vocab_dim=True)
+        return logits, new_caches
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16, remat: bool = True,
+                **kw) -> Model:
+    return Model(cfg=cfg, dtype=dtype, remat=remat, **kw)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+    return build_model(cfg, dtype).init(key)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count from abstract init (no allocation). MoE active counts
+    scale expert weights by top_k/E (MODEL_FLOPS = 6*N_active*D)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    from repro.utils.tree import flatten_with_names
+    for name, leaf in flatten_with_names(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active_only and cfg.moe and "/ffn/" in f"/{name}/" and leaf.ndim == 4:
+            # stacked expert weight [G, E, d_in, d_out]
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total

@@ -1,0 +1,134 @@
+"""Minimal pure-JAX module toolkit (no flax): params are nested dicts.
+
+Design points:
+  * ``dense()`` is the single choke point for every weight matmul. It
+    dispatches on the param type — a plain array does a dense matmul; a
+    ``PackedLinear`` (structured-binary quantized) routes through
+    ``repro.kernels.ops.stb_matmul``. Swapping a trained model to sub-1-bit
+    serving is a pytree substitution, no model code changes.
+  * ``Tape`` records layer *inputs* during an (unjitted) calibration forward —
+    the X in Alg. 1 — keyed by the layer's param path.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.packing import PackedLinear
+
+
+class KeyGen:
+    """Deterministic sequential PRNG key dispenser for param init."""
+
+    def __init__(self, seed: int | jax.Array = 0):
+        self._key = jax.random.PRNGKey(seed) if isinstance(seed, int) else seed
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# calibration tape
+# ---------------------------------------------------------------------------
+class _TapeState(threading.local):
+    def __init__(self):
+        self.tape: dict[str, list] | None = None
+        self.prefix: list[str] = []
+
+
+_TAPE = _TapeState()
+
+
+@contextmanager
+def calibration_tape(tape: dict[str, list]):
+    """Record every dense() input into ``tape`` (run the forward unjitted)."""
+    prev = _TAPE.tape
+    _TAPE.tape = tape
+    try:
+        yield tape
+    finally:
+        _TAPE.tape = prev
+
+
+@contextmanager
+def scope(name: str):
+    """Name scope so taped activations carry their param path."""
+    _TAPE.prefix.append(name)
+    try:
+        yield
+    finally:
+        _TAPE.prefix.pop()
+
+
+def _record(name: str, x: jnp.ndarray) -> None:
+    if _TAPE.tape is not None and not isinstance(x, jax.core.Tracer):
+        path = "/".join(_TAPE.prefix + [name])
+        _TAPE.tape.setdefault(path, []).append(
+            jnp.reshape(x, (-1, x.shape[-1]))
+        )
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+def dense_init(kg: KeyGen, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(kg(), (d_in, d_out), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense(params: dict, x: jnp.ndarray, name: str = "dense") -> jnp.ndarray:
+    """y = x @ W — dense or structured-binary depending on the param leaf."""
+    w = params["w"]
+    if isinstance(w, PackedLinear):
+        from repro.kernels.ops import stb_matmul
+        return stb_matmul(x, w)
+    _record(name, x)
+    return jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(kg: KeyGen, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    w = jax.random.normal(kg(), (vocab, d), dtype=jnp.float32) * (d ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["w"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits head. params['w']: [vocab, d]; x: [..., d] -> [..., vocab]."""
+    _record("unembed", x)
+    return jnp.einsum(
+        "...d,vd->...v", x, params["w"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )

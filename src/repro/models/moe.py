@@ -1,0 +1,105 @@
+"""Top-k Mixture-of-Experts with grouped capacity dispatch (GShard style).
+
+Tokens are routed in independent groups of ``group_size`` so the dispatch
+one-hot is [G_groups, G, E, C] with C = ceil(topk*G*cf/E) — total dispatch
+footprint O(T * topk * G * cf), independent of sequence length. The
+dispatch/combine einsums are exactly what GSPMD turns into all-to-alls when
+the expert dimension is sharded (EP over 'data', TP inside experts over
+'model'). Overflowed tokens are dropped (combine weight 0); a Switch-style
+aux load-balancing loss is returned for training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import KeyGen, dense_init, scope, _record
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 16
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    d: int = 0
+    d_ff: int = 0
+
+
+def moe_init(kg: KeyGen, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    e, d, f = cfg.n_experts, cfg.d, cfg.d_ff
+
+    def ew(d_in, d_out):
+        w = (
+            jax.random.normal(kg(), (e, d_in, d_out), dtype=jnp.float32)
+            * (d_in ** -0.5)
+        )
+        return w.astype(dtype)
+
+    return {
+        "router": dense_init(kg, d, e, jnp.float32),  # router kept fp32
+        "wi_gate": ew(d, f),
+        "wi_up": ew(d, f),
+        "wo": ew(f, d),
+    }
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig):
+    """x: [B, S, D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = min(cfg.group_size, t)
+    # pad token count to a multiple of the group size
+    t_pad = ((t + g - 1) // g) * g
+    xt = x.reshape(t, d)
+    if t_pad != t:
+        xt = jnp.pad(xt, ((0, t_pad - t), (0, 0)))
+    ng = t_pad // g
+    xg = xt.reshape(ng, g, d)
+    # decode-sized groups are dropless (cap = g*k covers the worst case);
+    # training groups use the usual capacity factor.
+    if g * k <= 128:
+        cap = g * k
+    else:
+        cap = max(1, int(cfg.capacity_factor * k * g / e))
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), params["router"]["w"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                     # [G,T,E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [G,T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, choice) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)     # [G,T,k,E]
+    flat = onehot.reshape(ng, g * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1).reshape(ng, g, k, e)) * onehot - 1.0
+    within = (pos_in_expert >= 0) & (pos_in_expert < cap)
+    pos_oh = jax.nn.one_hot(pos_in_expert, cap, dtype=jnp.float32)  # [G,T,k,E,C]
+    sel = onehot * within
+    dispatch = jnp.einsum("gtke,gtkec->gtec", sel, pos_oh)      # [G,T,E,C]
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", gate_vals, sel, pos_oh)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xg, dispatch.astype(x.dtype))  # [G,E,C,D]
+    with scope("moe"):
+        _record("wi", xe)
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"].astype(x.dtype))
+        up = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+        _record("wo", h)
+        ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(x.dtype))
+    yg = jnp.einsum("gecd,gtec->gtd", ye, combine.astype(x.dtype))
+
+    y = yg.reshape(t_pad, d)[:t].reshape(b, s, d)
+
+    # load-balance aux loss (Switch-style) over real tokens
+    me = jnp.mean(probs, axis=(0, 1))                           # [E]
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx[..., 0], e), axis=1) / g,
+                  axis=0)
+    aux = e * jnp.sum(me * ce)
+    return y.astype(x.dtype), aux

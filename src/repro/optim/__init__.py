@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import wsd_schedule, cosine_schedule, linear_schedule
+from repro.optim.clipping import clip_by_global_norm
+from repro.optim.compression import compress_gradients, decompress_gradients

@@ -1,0 +1,58 @@
+"""int8 error-feedback gradient compression for DP all-reduces.
+
+At 1000+-node scale the data-parallel all-reduce of bf16 gradients is the
+dominant cross-pod collective; quantizing to int8 with a per-chunk scale
+halves it (4x vs fp32), and the error-feedback residual keeps convergence
+unbiased (1-bit-Adam / PowerSGD lineage).
+
+Usage inside a shard_map'd train step:
+    g_q, scales = compress_gradients(grads, residual)
+    g_q = jax.lax.psum(g_q_int32_view, 'data')    # 8-bit payload on the wire
+    grads, residual = decompress_gradients(...)
+The jit path in launch/train.py wires this behind ``--grad-compression``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048
+
+
+def _quantize_leaf(g: jnp.ndarray, r: jnp.ndarray):
+    gf = g.astype(jnp.float32) + r
+    flat = gf.reshape(-1)
+    pad = (-flat.size) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(chunks / jnp.maximum(scale, 1e-12)), -127, 127)
+    deq = (q * scale).reshape(-1)[: gf.size].reshape(gf.shape)
+    residual = gf - deq
+    return q.astype(jnp.int8), scale[:, 0], residual
+
+
+def compress_gradients(grads, residuals):
+    """Returns (int8 pytree, scales pytree, new residuals pytree)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, r2 = _quantize_leaf(g, r)
+        qs.append(q), ss.append(s), rs.append(r2)
+    return tdef.unflatten(qs), tdef.unflatten(ss), tdef.unflatten(rs)
+
+
+def decompress_gradients(qs, scales, like):
+    flat_q, tdef = jax.tree.flatten(qs, is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    flat_s = tdef.flatten_up_to(scales)
+    flat_l = tdef.flatten_up_to(like)
+    outs = []
+    for q, s, l in zip(flat_q, flat_s, flat_l):
+        deq = (q.astype(jnp.float32).reshape(-1, CHUNK) * s[:, None]).reshape(-1)
+        outs.append(deq[: l.size].reshape(l.shape).astype(jnp.float32))
+    return tdef.unflatten(outs)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,42 @@
+"""LR schedules. WSD (warmup-stable-decay) is the MiniCPM schedule the
+minicpm-2b assignment calls out (arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """Warmup -> stable plateau -> exponential-ish decay to final_frac*peak."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        dec_t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (final_frac ** dec_t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak_lr, dec))
+
+    return sched
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return sched
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, peak_lr * (1 - t))
+
+    return sched

@@ -1,0 +1,6 @@
+from repro.quant.packing import (
+    PackedLinear,
+    pack_quantized_layer,
+    packed_format_bits,
+    unpack_to_dense,
+)

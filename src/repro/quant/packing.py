@@ -1,0 +1,200 @@
+"""Packed storage format for structured-binary weights (DESIGN.md §4).
+
+TPU adaptation of the paper's 6-bit/4-group Ampere encoding: bit-planes that a
+Pallas kernel can decode with shift/mask ALU ops while streaming HBM->VMEM.
+
+Layout for a weight used as ``y = x @ W`` with ``W: [K, N]`` (K = in features,
+N = out features); K-groups of 8 (the paper's M), scale groups of 128 (beta):
+
+  mask_bits     uint8 [K/8, N]    N:M keep mask, bit g = K position 8k+g
+  sign_bits     uint8 [K/8, N]    primary sign plane (1 -> +1, 0 -> -1)
+  sign_res_bits uint8 [K/8, N]    residual sign plane (salient columns)
+  region_bits   uint8 [K/4, N]    2-bit region codes, 4 positions per byte
+                                  (0 dense / 1 intermediate / 2 sparse / 3 salient)
+  scales        f32   [K/128, N, 5]  (a_dense, a_inter, a_sparse, a_o, a_r)
+
+Effective stored bits per weight position in this baseline format =
+  1 (mask) + 1 (sign) + 1 (res sign) + 2 (region) + 5*32/128 (scales) = 6.25
+-> 2.56x less HBM weight traffic than bf16. The §Perf hillclimb shrinks this:
+bf16 scales (-0.625), dropping the dense residual plane for non-salient
+columns and K-condensing survivors at 4:8 reach ~2.6 bits (6.2x). The paper's
+Table-1 "average bits" counts value bits only (0.55 at 4:8) — both
+accountings are reported side by side in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP_M = 8          # N:M group length along K
+SCALE_GROUP = 128    # beta / Table 9 group size
+NUM_SCALES = 5
+
+
+@dataclass
+class PackedLinear:
+    """Packed structured-binary weight for ``y = x @ W``, W logically [K, N]."""
+    mask_bits: jnp.ndarray      # uint8 [K/8, N]
+    sign_bits: jnp.ndarray      # uint8 [K/8, N]
+    sign_res_bits: jnp.ndarray  # uint8 [K/8, N]
+    region_bits: jnp.ndarray    # uint8 [K/4, N]
+    scales: jnp.ndarray         # f32  [K/128, N, 5]
+    k: int
+    n: int
+    n_m: tuple[int, int]
+
+    _FIELDS = ("mask_bits", "sign_bits", "sign_res_bits", "region_bits",
+               "scales")
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, f) for f in self._FIELDS)
+        return leaves, (self.k, self.n, self.n_m)
+
+    def tree_flatten_with_keys(self):
+        import jax.tree_util as jtu
+        leaves = [(jtu.GetAttrKey(f), getattr(self, f)) for f in self._FIELDS]
+        return leaves, (self.k, self.n, self.n_m)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, k=aux[0], n=aux[1], n_m=aux[2])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            int(np.prod(a.shape)) * a.dtype.itemsize
+            for a in (self.mask_bits, self.sign_bits, self.sign_res_bits,
+                      self.region_bits, self.scales)
+        )
+
+
+import jax.tree_util
+
+jax.tree_util.register_pytree_with_keys(
+    PackedLinear,
+    lambda p: p.tree_flatten_with_keys(),
+    PackedLinear.tree_unflatten,
+)
+
+
+def abstract_pack_params(shapes_tree, skip=("embed", "lm_head", "vision_proj",
+                                            "in_proj", "router", "wkv_b")):
+    # skipped on purpose: router (saliency-critical, used via raw einsum),
+    # wkv_b (MLA absorbs it into q at decode — needs the raw matrix),
+    # embeddings/frontends (paper quantizes transformer linears only).
+    """Replace eligible weight leaves with abstract PackedLinear planes.
+
+    For the dry-run serving cells: lowering against these ShapeDtypeStruct
+    planes makes the compiled HLO read ~6.25-bit packed weights (and decode
+    them on-chip) instead of 16-bit dense — the paper's memory-roofline win,
+    measurable in cost_analysis() bytes.
+
+    A leaf qualifies if it is a matmul weight [..., K, N] with K % 128 == 0
+    and N % 8 == 0 (scale-group and byte alignment); others stay dense.
+    Stacked leading dims (depth group / expert) are preserved on every plane.
+    """
+    from repro.utils.tree import tree_map_with_path
+
+    def transform(path, leaf):
+        if not path.endswith("/w") or any(s in path for s in skip):
+            return leaf
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        *lead, k, n = leaf.shape
+        if k % SCALE_GROUP or n % 8:
+            return leaf
+        lead = tuple(lead)
+        sds = jax.ShapeDtypeStruct
+        return PackedLinear(
+            mask_bits=sds(lead + (k // 8, n), jnp.uint8),
+            sign_bits=sds(lead + (k // 8, n), jnp.uint8),
+            sign_res_bits=sds(lead + (k // 8, n), jnp.uint8),
+            region_bits=sds(lead + (k // 4, n), jnp.uint8),
+            scales=sds(lead + (k // SCALE_GROUP, n, NUM_SCALES), jnp.float32),
+            k=k, n=n, n_m=(4, 8),
+        )
+
+    return tree_map_with_path(transform, shapes_tree)
+
+
+def _pack_bitplane(bits: np.ndarray) -> np.ndarray:
+    """[K, N] {0,1} -> uint8 [K/8, N], bit g of byte r = position 8r+g."""
+    k, n = bits.shape
+    assert k % 8 == 0, k
+    b = bits.reshape(k // 8, 8, n).astype(np.uint8)
+    shifts = (1 << np.arange(8, dtype=np.uint8))[None, :, None]
+    return (b * shifts).sum(axis=1).astype(np.uint8)
+
+
+def _pack_2bit(codes: np.ndarray) -> np.ndarray:
+    """[K, N] {0..3} -> uint8 [K/4, N], 2 bits per position, little-endian."""
+    k, n = codes.shape
+    assert k % 4 == 0, k
+    c = codes.reshape(k // 4, 4, n).astype(np.uint8)
+    shifts = np.uint8(2) * np.arange(4, dtype=np.uint8)[None, :, None]
+    return np.bitwise_or.reduce(c << shifts, axis=1).astype(np.uint8)
+
+
+def pack_quantized_layer(ql) -> PackedLinear:
+    """Pack a ``repro.core.QuantizedLayer`` (planes are [out, in] = [N, K])."""
+    # transpose to kernel layout [K, N]
+    mask = np.asarray(ql.mask).T
+    signs = (np.asarray(ql.signs).T > 0).astype(np.uint8)
+    signs_res = (np.asarray(ql.signs_res).T > 0).astype(np.uint8)
+    regions = np.asarray(ql.regions).T.astype(np.uint8)
+    k, n = mask.shape
+    if k % SCALE_GROUP != 0:
+        raise ValueError(f"K={k} must be a multiple of {SCALE_GROUP}")
+    # scales come as [N, K/128, 5] -> [K/128, N, 5]
+    scales = np.asarray(ql.scales).transpose(1, 0, 2).astype(np.float32)
+    return PackedLinear(
+        mask_bits=jnp.asarray(_pack_bitplane(mask.astype(np.uint8))),
+        sign_bits=jnp.asarray(_pack_bitplane(signs)),
+        sign_res_bits=jnp.asarray(_pack_bitplane(signs_res)),
+        region_bits=jnp.asarray(_pack_2bit(regions)),
+        scales=jnp.asarray(scales),
+        k=k, n=n, n_m=tuple(ql.n_m),
+    )
+
+
+def unpack_to_dense(p: PackedLinear, dtype=jnp.float32) -> jnp.ndarray:
+    """Reference dequantization to a dense [K, N] matrix (pure jnp).
+
+    Mirrors exactly what the Pallas kernel decodes in VMEM; also the oracle
+    used by kernel tests and the jnp fallback path for non-TPU serving.
+    """
+    kg = p.k // 8
+    byte_idx = jnp.arange(p.k) // 8
+    bit_idx = (jnp.arange(p.k) % 8).astype(jnp.uint8)
+
+    def unpack_bits(plane):  # [K/8, N] uint8 -> [K, N] {0,1}
+        rows = plane[byte_idx, :]                       # [K, N]
+        return (rows >> bit_idx[:, None]) & jnp.uint8(1)
+
+    mask = unpack_bits(p.mask_bits).astype(dtype)
+    sign = unpack_bits(p.sign_bits).astype(jnp.int8)
+    sign = (2 * sign.astype(jnp.int32) - 1).astype(dtype)
+    sign_r = unpack_bits(p.sign_res_bits).astype(jnp.int8)
+    sign_r = (2 * sign_r.astype(jnp.int32) - 1).astype(dtype)
+
+    rbyte = p.region_bits[jnp.arange(p.k) // 4, :]      # [K, N]
+    rshift = ((jnp.arange(p.k) % 4) * 2).astype(jnp.uint8)
+    region = (rbyte >> rshift[:, None]) & jnp.uint8(3)  # [K, N] {0..3}
+
+    sg = jnp.arange(p.k) // SCALE_GROUP
+    sc = p.scales[sg, :, :].astype(dtype)               # [K, N, 5]
+    a_d, a_i, a_s, a_o, a_r = (sc[..., j] for j in range(5))
+    base = jnp.where(
+        region == 0, a_d,
+        jnp.where(region == 1, a_i, jnp.where(region == 2, a_s, a_o)),
+    )
+    w = mask * sign * base + mask * (region == 3).astype(dtype) * a_r * sign_r
+    return w.astype(dtype)
+
+
+def packed_format_bits(p: PackedLinear) -> float:
+    """Honest stored bits per logical weight position (DESIGN.md §4)."""
+    return p.nbytes * 8.0 / (p.k * p.n)

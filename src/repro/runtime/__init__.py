@@ -1,0 +1,6 @@
+from repro.runtime.health import HeartbeatMonitor, StragglerDetector
+from repro.runtime.elastic import elastic_restore, remesh_plan
+
+__all__ = [
+    "HeartbeatMonitor", "StragglerDetector", "elastic_restore", "remesh_plan",
+]

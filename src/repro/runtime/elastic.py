@@ -1,0 +1,54 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints are saved unsharded (repro.checkpoint gathers leaves), so elastic
+restore is a re-placement problem, not a resharding problem:
+
+  1. ``remesh_plan(n_devices)`` picks the new mesh shape — keep 'model' = 16
+     (TP degree is an architectural choice: it must divide heads/ffn and
+     changing it changes per-op shapes), absorb device-count changes into the
+     'data' (and 'pod') axes, and shrink TP only when the device count forces
+     it.
+  2. ``elastic_restore`` computes fresh PartitionSpecs for the new mesh via
+     the same rules the original run used and device_puts each leaf.
+
+The global batch stays fixed (it is part of the training recipe); per-device
+batch changes instead. When the new DP degree does not divide the global
+batch, the loader falls back to replicated batches (batch_spec handles it).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import load_checkpoint
+from repro.sharding.rules import named_shardings, param_specs
+
+
+def remesh_plan(n_devices: int, model_axis: int = 16,
+                pod_size: int = 256) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Mesh (shape, axes) for an arbitrary surviving-device count."""
+    while model_axis > 1 and n_devices % model_axis:
+        model_axis //= 2
+    rest = n_devices // model_axis
+    if n_devices > pod_size and rest % (n_devices // pod_size) == 0:
+        pods = n_devices // pod_size
+        return (pods, rest // pods, model_axis), ("pod", "data", "model")
+    return (rest, model_axis), ("data", "model")
+
+
+def make_mesh_for(n_devices: int, **kw) -> Mesh:
+    shape, axes = remesh_plan(n_devices, **kw)
+    devs = np.asarray(jax.devices()[:n_devices]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def elastic_restore(directory: str, tree_like: Any, mesh: Mesh,
+                    step: int | None = None) -> tuple[Any, dict]:
+    """Load the newest complete checkpoint onto ``mesh``."""
+    specs = param_specs(tree_like, mesh)
+    shardings = named_shardings(specs, mesh)
+    return load_checkpoint(directory, tree_like, step=step,
+                           shardings=shardings)

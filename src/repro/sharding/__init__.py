@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    param_specs,
+    cache_specs,
+    batch_spec,
+    dp_axes,
+    named_shardings,
+    attach_sharding,
+)

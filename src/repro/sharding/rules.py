@@ -1,0 +1,161 @@
+"""Logical sharding rules: param path + shape -> PartitionSpec (DESIGN.md §5).
+
+Meshes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+  * DP/FSDP: batch over ('pod','data'); 2-D weights additionally sharded over
+    'data' on their non-TP dimension (2-D FSDP x TP).
+  * TP over 'model': attention head projections, FFN hidden, vocab.
+  * EP: stacked expert weights [G, E, din, dout] shard E over 'data'.
+  * SP: decode KV caches shard sequence over 'model' (and batch over 'data'
+    when divisible; long-context batch=1 shards sequence over both axes).
+
+Divisibility notes: vocab dims are padded to a multiple of 256 by the model
+(ModelConfig.vocab is logical; embed tables use vocab_padded), so 'model'=16
+always divides the sharded dims of every assigned arch.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path
+
+# params that stay replicated: norms, biases, scalar gates, small SSM tensors.
+# NB: no bare "gate$" — it would catch MoE expert in-projections (wi_gate),
+# replicating the largest tensors in the model (28 GiB/device on jamba).
+_REPLICATED = re.compile(
+    r"(norm|bias|scale|^gate$|/gate$|fgate_b|a_log|d_skip|conv_w|conv_b"
+    r"|/b$|/r$|router)"
+)
+# output-projection-like matrices: contract dim is TP ('model'), out is FSDP
+_OUT_PROJ = re.compile(r"(wo|out_proj|down_proj|ffn_down)(/w)?$")
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _divisible(shape_dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return shape_dim % n == 0
+
+
+def _guard(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any axis assignment that does not divide its dim evenly."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        out.append(axes if _divisible(dim, mesh, axes) else None)
+    return P(*out)
+
+
+_PACKED_PLANE = re.compile(
+    r"/(mask_bits|sign_bits|sign_res_bits|region_bits|scales)$")
+
+
+def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    if _PACKED_PLANE.search(path):
+        # packed sub-1-bit weight planes [..., K', N(, 5)]: serving is
+        # weight-stationary — replicate over 'data'/'pod' (no per-token FSDP
+        # gather), TP over N. Each device then reads only its packed bytes,
+        # which is the paper's memory-roofline win.
+        tail = 1 if path.endswith("/scales") else 0
+        ndims = len(shape)
+        spec = [None] * ndims
+        spec[ndims - 1 - tail] = "model"
+        return _guard(P(*spec), shape, mesh)
+    if _REPLICATED.search(path):
+        return P()
+    if path.endswith(("embed/w", "lm_head/w")):
+        # [V, D]: vocab over 'model' (TP softmax), D over 'data' (FSDP)
+        return _guard(P("model", "data"), shape, mesh)
+    if len(shape) == 4:
+        # stacked expert weights [G, E, din, dout]: EP over 'data', TP on ffn dim
+        if _OUT_PROJ.search(path):
+            return _guard(P(None, "data", "model", None), shape, mesh)
+        return _guard(P(None, "data", None, "model"), shape, mesh)
+    if len(shape) == 3:
+        # stacked [G, din, dout]
+        if _OUT_PROJ.search(path):
+            return _guard(P(None, "model", "data"), shape, mesh)
+        return _guard(P(None, "data", "model"), shape, mesh)
+    if len(shape) == 2:
+        # unstacked (encoder in_proj / vision_proj)
+        if _OUT_PROJ.search(path):
+            return _guard(P("model", "data"), shape, mesh)
+        return _guard(P("data", "model"), shape, mesh)
+    return P()
+
+
+def param_specs(params_shapes: Any, mesh: Mesh,
+                serve_replicated: bool = False) -> Any:
+    """Pytree of PartitionSpec matching a pytree of ShapeDtypeStruct/arrays.
+
+    ``serve_replicated``: weight-stationary serving — strip the FSDP 'data'
+    axis from weight specs (weights replicated across the batch axis, TP
+    only), killing the per-layer all-gathers that dominate decode latency.
+    """
+    def spec(path, leaf):
+        s = param_spec_for(path, tuple(leaf.shape), mesh)
+        if serve_replicated and len(leaf.shape) < 4:
+            # 4-D leaves are stacked experts: EP over 'data' is placement,
+            # not FSDP — replicating 100B+ of experts would blow HBM.
+            s = P(*(None if e == "data" else e for e in s))
+        return s
+
+    return tree_map_with_path(spec, params_shapes)
+
+
+def cache_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh,
+                   batch: int) -> P:
+    """Decode caches: stacked [G, B, ...]. Shard batch over DP when divisible,
+    sequence (KV caches) over 'model' (or everything when batch=1)."""
+    dp = dp_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ax = dp if batch % ndp == 0 else None
+    if len(shape) >= 3 and ("/k" in path or "/v" in path or "ckv" in path
+                            or "k_rope" in path):
+        # [G, B, S, ...]: KV cache — SP on sequence
+        seq_ax = ("data", "model") if batch_ax is None else "model"
+        spec = [None, batch_ax, seq_ax] + [None] * (len(shape) - 3)
+        return _guard(P(*spec), shape, mesh)
+    if len(shape) >= 3:
+        # SSM/conv states [G, B, din, ...] — shard din over 'model'
+        spec = [None, batch_ax, "model"] + [None] * (len(shape) - 3)
+        return _guard(P(*spec), shape, mesh)
+    spec = [None, batch_ax] + [None] * (len(shape) - 2)
+    return _guard(P(*spec), shape, mesh)
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
+    return tree_map_with_path(
+        lambda path, leaf: cache_spec_for(path, tuple(leaf.shape), mesh, batch),
+        cache_shapes,
+    )
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    dp = dp_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in dp]))
+    return P(dp) if batch % ndp == 0 else P()
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def attach_sharding(shapes: Any, shardings: Any) -> Any:
+    """ShapeDtypeStruct pytree + sharding pytree -> sharded SDS pytree."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shapes, shardings,
+    )

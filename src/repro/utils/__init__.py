@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    tree_map_with_path,
+    tree_size_bytes,
+    tree_num_params,
+    flatten_with_names,
+)
+from repro.utils.logging import get_logger

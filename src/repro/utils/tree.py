@@ -1,0 +1,50 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_str, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )
+
+
+def flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree to ``[(path_str, leaf), ...]``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "size")
+    )
+
+
+def tree_num_params(tree: Any) -> int:
+    return sum(
+        int(np.prod(leaf.shape)) if leaf.shape else 1
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "shape")
+    )

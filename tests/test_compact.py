@@ -1,0 +1,59 @@
+"""Compact (survivor-condensed) format + kernel vs oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stbllm import STBConfig, stbllm_quantize_layer
+from repro.kernels.stb_gemm import stb_gemm_compact, stb_gemm_packed
+from repro.quant.compact import pack_compact, unpack_compact_to_dense
+from repro.quant.packing import pack_quantized_layer, unpack_to_dense
+
+
+@pytest.fixture(scope="module")
+def qlayer():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    return stbllm_quantize_layer(w, x, STBConfig(n=4, m=8))
+
+
+def test_compact_decodes_to_same_dense(qlayer):
+    """Compact and baseline formats decode to the same matrix, except bf16
+    scale rounding."""
+    base = unpack_to_dense(pack_quantized_layer(qlayer))
+    comp = unpack_compact_to_dense(pack_compact(qlayer))
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(base),
+                               rtol=1e-2, atol=1e-3)   # bf16 scales
+
+
+def test_compact_matches_deq(qlayer):
+    comp = unpack_compact_to_dense(pack_compact(qlayer))
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(qlayer.deq).T,
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_compact_bits_accounting(qlayer):
+    p = pack_compact(qlayer)
+    # 1 (mask) + 0.5 (signs) + 0.5 (res) + 1 (regions) + 0.625 (bf16 scales)
+    assert p.bits_per_weight == pytest.approx(3.625, abs=0.01)
+    base = pack_quantized_layer(qlayer)
+    assert p.nbytes < base.nbytes * 0.75   # 37,888 vs 51,200 bytes
+
+
+def test_compact_kernel_matches_oracle(qlayer):
+    rng = np.random.default_rng(1)
+    p = pack_compact(qlayer)
+    x = jnp.asarray(rng.normal(size=(16, 256)), jnp.float32)
+    y_k = stb_gemm_compact(x, p, interpret=True)
+    y_ref = x @ unpack_compact_to_dense(p)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_compact_rejects_dense_groups():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    q = stbllm_quantize_layer(w, x, STBConfig(n=6, m=8))  # 6 survivors
+    with pytest.raises(ValueError):
+        pack_compact(q)

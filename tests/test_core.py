@@ -1,0 +1,300 @@
+"""Unit tests for the paper's core algorithms (Alg. 1/2, Eq. 1-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocate import (
+    adaptive_allocation, sin_allocation, uniform_allocation)
+from repro.core.binary import (
+    binarize, binarize_error, masked_alpha, residual_binarize, sign_pm1)
+from repro.core.flip import flip_signs
+from repro.core.hessian import (
+    cholesky_inverse, hessian_from_activations, hessian_saliency)
+from repro.core.nm import check_nm, mask_density, nm_mask
+from repro.core.obc import obc_quantize
+from repro.core.salient import candidate_counts, search_salient_split
+from repro.core.si import (
+    input_feature_norm, normalized_magnitude, standardized_importance)
+from repro.core.stbllm import (
+    STBConfig, average_bits, stbllm_quantize_layer, storage_bits)
+from repro.core.trisection import (
+    REGION_DENSE, REGION_INTER, REGION_SPARSE, region_masks,
+    trisection_binarize, trisection_search)
+
+
+# ---------------------------------------------------------------------- SI
+def test_si_shapes_and_scale_invariance(rng):
+    w = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    xn = jnp.asarray(rng.uniform(1, 2, size=(32,)), jnp.float32)
+    s = standardized_importance(w, xn)
+    assert s.shape == w.shape
+    # Eq. 3 standardization: ranking is invariant to global weight rescale
+    s2 = standardized_importance(w * 7.3, xn)
+    assert np.array_equal(np.argsort(np.asarray(s), axis=None),
+                          np.argsort(np.asarray(s2), axis=None))
+
+
+def test_si_extreme_value_robustness(rng):
+    """Appendix D motivation: one extreme weight shouldn't dominate scoring
+    after standardization the way it does for raw magnitude^2/hessian."""
+    w = rng.normal(size=(8, 16)).astype(np.float32)
+    w[0, 0] = 1000.0
+    s = standardized_importance(jnp.asarray(w), jnp.ones((16,)))
+    frac = float(jnp.abs(s[0, 0]) / jnp.sum(jnp.abs(s)))
+    raw = w ** 2
+    frac_raw = raw[0, 0] / raw.sum()
+    assert frac < frac_raw  # standardization shrinks the outlier's share
+
+
+def test_input_feature_norm(rng):
+    x = rng.normal(size=(5, 7)).astype(np.float32)
+    got = np.asarray(input_feature_norm(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.linalg.norm(x, axis=0), rtol=1e-5)
+
+
+def test_normalized_magnitude_row_col_sums(rng):
+    w = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    mu = normalized_magnitude(w)
+    # each row's first term sums to 1; columns' second term sums to 1
+    aw = jnp.abs(w)
+    t1 = aw / jnp.sum(aw, axis=1, keepdims=True)
+    t2 = aw / jnp.sum(aw, axis=0, keepdims=True)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(t1 + t2), rtol=1e-5)
+
+
+# --------------------------------------------------------------------- N:M
+@pytest.mark.parametrize("n,m", [(4, 8), (5, 8), (6, 8), (2, 4), (1, 8)])
+def test_nm_mask_keeps_exactly_n(rng, n, m):
+    scores = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    mask = nm_mask(scores, n, m)
+    assert check_nm(mask, n, m)
+    assert abs(mask_density(mask) - n / m) < 1e-6
+
+
+def test_nm_mask_keeps_top_scores(rng):
+    scores = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    mask = np.asarray(nm_mask(scores, 2, 4))
+    s = np.asarray(scores).reshape(4, 4, 4)
+    m = mask.reshape(4, 4, 4)
+    for i in range(4):
+        for g in range(4):
+            kept = set(np.flatnonzero(m[i, g]))
+            top = set(np.argsort(-s[i, g])[:2])
+            assert kept == top
+
+
+def test_nm_mask_dense_when_n_ge_m(rng):
+    scores = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    assert bool(nm_mask(scores, 8, 8).all())
+
+
+# ----------------------------------------------------------------- binarize
+def test_sign_pm1_zero_positive():
+    w = jnp.asarray([-1.0, 0.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(sign_pm1(w)), [-1.0, 1.0, 1.0])
+
+
+def test_binarize_alpha_optimal(rng):
+    """alpha = mean|w| minimizes ||w - a*sign(w)||^2 — check by perturbation."""
+    w = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    mask = jnp.ones_like(w, dtype=bool)
+    e0 = float(binarize_error(w, mask))
+    a = masked_alpha(w, mask)
+    for da in (0.9, 1.1):
+        b = a * da * sign_pm1(w)
+        e = float(jnp.sum((w - b) ** 2))
+        assert e >= e0 - 1e-5
+
+
+def test_residual_binarize_improves(rng):
+    w = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    mask = jnp.ones_like(w, dtype=bool)
+    b1, _, _ = binarize(w, mask)
+    b2, (ao, ar), _ = residual_binarize(w, mask)
+    e1 = float(jnp.sum((w - b1) ** 2))
+    e2 = float(jnp.sum((w - b2) ** 2))
+    assert e2 < e1  # Eq. 4's second plane strictly reduces the residual
+    assert ao.shape == (8, 1) and ar.shape == (8, 1)
+
+
+def test_binarize_respects_mask(rng):
+    w = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    mask = jnp.asarray(rng.random((4, 8)) > 0.5)
+    b, _, _ = binarize(w, mask)
+    assert float(jnp.abs(b * ~mask).max()) == 0.0
+
+
+# --------------------------------------------------------------- trisection
+def test_region_masks_partition(rng):
+    w = jnp.abs(jnp.asarray(rng.normal(size=(6, 24)), jnp.float32))
+    d, i, s = region_masks(w, 0.5, 1.2)
+    total = d.astype(int) + i.astype(int) + s.astype(int)
+    assert int(total.min()) == 1 and int(total.max()) == 1  # exact partition
+
+
+def test_trisection_beats_single_binarization(rng):
+    w = jnp.asarray(rng.normal(size=(16, 128)), jnp.float32)
+    mask = jnp.ones_like(w, dtype=bool)
+    p1, p2 = trisection_search(w, mask)
+    b, scales, regions = trisection_binarize(w, mask, p1, p2)
+    e_tri = float(jnp.sum((w - b) ** 2))
+    e_one = float(binarize_error(w, mask))
+    assert e_tri < e_one  # 3 region scales >= 1 global scale
+    assert float(p2) == pytest.approx(2.0 * float(p1), rel=1e-6)
+    assert set(np.unique(np.asarray(regions))) <= {
+        REGION_DENSE, REGION_INTER, REGION_SPARSE}
+
+
+def test_trisection_search_is_argmin_over_grid(rng):
+    """p1* must achieve the lowest Eq.5 error among all grid candidates."""
+    w = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    mask = jnp.ones_like(w, dtype=bool)
+    p1s, p2s = trisection_search(w, mask, num_points=40)
+    b, _, _ = trisection_binarize(w, mask, p1s, p2s)
+    e_star = float(jnp.sum(((w - b) * mask) ** 2))
+    wmax = float(jnp.max(jnp.abs(w)))
+    for frac in np.linspace(0.1, 0.9, 40):
+        p1, p2 = frac * wmax, 2 * frac * wmax
+        if p2 > 0.9 * wmax:
+            continue
+        bb, _, _ = trisection_binarize(w, mask, p1, p2)
+        e = float(jnp.sum(((w - bb) * mask) ** 2))
+        assert e_star <= e + 1e-4
+
+
+# ------------------------------------------------------------------ salient
+def test_salient_split_and_candidates(rng):
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    h = hessian_from_activations(x)
+    hc = cholesky_inverse(h)
+    mask = jnp.ones_like(w, dtype=bool)
+    sal, k = search_salient_split(w, mask, jnp.diag(hc))
+    assert sal.shape == (64,)
+    assert int(sal.sum()) == int(k) <= int(0.1 * 64) + 1
+    cands = candidate_counts(64, 0.1, 16)
+    assert all(1 <= c <= 6 for c in cands)
+
+
+def test_hessian_saliency_extreme_weight_dominates(rng):
+    """Appendix D: an extreme weight dominates the Hessian-based metric —
+    the motivation for SI."""
+    w = rng.normal(size=(4, 16)).astype(np.float32)
+    w[1, 3] = 100.0
+    s = np.asarray(hessian_saliency(jnp.asarray(w), jnp.ones((16,))))
+    assert s[1, 3] == s.max()
+
+
+# ---------------------------------------------------------------------- OBC
+def test_obc_compensation_reduces_layer_error(rng):
+    """Block-wise OBC (Alg. 1 l.16-17) must beat no-compensation on the
+    layer output proxy ||XW - XW_q||^2."""
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(128, 64)), jnp.float32)
+
+    def q_block(wb, ctx):
+        b, _, _ = binarize(wb)
+        return b, {}
+
+    res = obc_quantize(w, x, q_block, beta=16)
+    # no-compensation baseline: binarize each block of the ORIGINAL weights
+    b0 = jnp.concatenate(
+        [binarize(w[:, i:i + 16])[0] for i in range(0, 64, 16)], axis=1)
+    e_obc = float(jnp.sum((x @ res.deq.T - x @ w.T) ** 2))
+    e_raw = float(jnp.sum((x @ b0.T - x @ w.T) ** 2))
+    assert e_obc < e_raw
+
+
+def test_obc_handles_partial_last_block(rng):
+    w = jnp.asarray(rng.normal(size=(8, 40)), jnp.float32)  # 40 % 16 != 0
+    x = jnp.asarray(rng.normal(size=(32, 40)), jnp.float32)
+    res = obc_quantize(w, x, lambda wb, ctx: (binarize(wb)[0], {}), beta=16)
+    assert res.deq.shape == (8, 40)
+
+
+# ----------------------------------------------------------------- stbllm
+def test_stbllm_layer_invariants(rng):
+    w = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    cfg = STBConfig(n=4, m=8, beta=32)
+    q = stbllm_quantize_layer(w, x, cfg)
+    assert check_nm(jnp.asarray(q.mask), 4, 8)
+    # off-mask entries are exactly zero in the dequantized tensor
+    assert float(jnp.abs(q.deq * ~jnp.asarray(q.mask)).max()) == 0.0
+    assert 0.0 < q.stats["r_salient"] <= 0.12
+    assert q.stats["avg_bits"] < 1.0  # sub-1-bit headline claim
+    assert q.stats["avg_bits"] == pytest.approx(
+        average_bits(4, 8, q.stats["r_salient"]))
+
+
+@pytest.mark.parametrize("n,m,expect", [(4, 8, 0.55), (5, 8, 0.69),
+                                        (6, 8, 0.83)])
+def test_average_bits_match_paper_table1(n, m, expect):
+    """Table 1: OPT/LLaMA average bits at r_salient ~= 0.1."""
+    assert average_bits(n, m, 0.1) == pytest.approx(expect, abs=0.01)
+
+
+def test_storage_bits_overhead():
+    # N_storing = 2 + 1/b adds (2 + 1/128) * N/M on top
+    assert storage_bits(4, 8, 0.1, 128) == pytest.approx(
+        average_bits(4, 8, 0.1) + (2 + 1 / 128) * 0.5, abs=1e-6)
+
+
+def test_stbllm_metric_ablation_runs(rng):
+    """Table 5 surface: every mask metric must be usable."""
+    w = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    errs = {}
+    for metric in ("si", "magnitude", "wanda", "sparsegpt"):
+        cfg = STBConfig(n=4, m=8, beta=32, mask_metric=metric)
+        q = stbllm_quantize_layer(w, x, cfg)
+        errs[metric] = q.stats["recon_err"]
+    assert all(np.isfinite(v) for v in errs.values())
+
+
+def test_stbllm_bell_strategy_worse_or_equal(rng):
+    """Table 8: trisection <= bell-shaped split on reconstruction error."""
+    w = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    e_tri = stbllm_quantize_layer(
+        w, x, STBConfig(n=4, m=8, beta=32)).stats["recon_err"]
+    e_bell = stbllm_quantize_layer(
+        w, x, STBConfig(n=4, m=8, beta=32, strategy="bell")).stats["recon_err"]
+    assert e_tri <= e_bell * 1.05
+
+
+# --------------------------------------------------------------- allocation
+def test_adaptive_allocation_meets_target():
+    norms = {f"l{i}": float(10 - i) for i in range(8)}
+    numels = {f"l{i}": 1000 for i in range(8)}
+    alloc = adaptive_allocation(norms, numels, 0.5, 8)
+    avg = sum(n / m for n, m in alloc.values()) / 8
+    assert avg <= 0.5 + 1 / 16
+    # most important layer keeps >= ratio of least important
+    assert alloc["l0"][0] >= alloc["l7"][0]
+
+
+def test_uniform_and_sin_allocations():
+    names = [f"l{i}" for i in range(6)]
+    u = uniform_allocation(names, 0.5, 8)
+    assert all(v == (4, 8) for v in u.values())
+    s = sin_allocation({k: i for i, k in enumerate(names)}, 0.5, 8)
+    assert set(s) == set(names)
+    assert all(1 <= n <= 8 for n, _ in s.values())
+
+
+# --------------------------------------------------------------------- flip
+def test_flip_signs_counts(rng):
+    w = jnp.asarray(np.sign(rng.normal(size=(32, 32))), jnp.float32)
+    f = flip_signs(w, 0.1, jax.random.PRNGKey(0))
+    changed = int(jnp.sum(f != w))
+    assert changed == int(0.1 * w.size)
+
+
+def test_flip_signs_criterion_targets_least_significant(rng):
+    w = jnp.asarray(np.sign(rng.normal(size=(8, 8))), jnp.float32)
+    crit = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    f = flip_signs(w, 0.25, jax.random.PRNGKey(0), criterion=crit)
+    changed = np.flatnonzero(np.asarray(f != w).reshape(-1))
+    assert set(changed) == set(range(16))  # the 16 smallest-criterion slots

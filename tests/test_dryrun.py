@@ -1,0 +1,51 @@
+"""Dry-run integration: lower+compile production cells in a subprocess
+(512 placeholder devices need XLA_FLAGS before jax init, hence subprocess).
+Marked slow: compiles take ~1 min."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = __file__.rsplit("/tests/", 1)[0]
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import sys
+    sys.path.insert(0, "src")
+    import json
+    from repro.launch.dryrun import run_cell
+    rec = run_cell("xlstm-350m", "decode_32k", multi_pod={mp}, costing=False)
+    print("REC=" + json.dumps({{k: rec[k] for k in ("status", "mesh")}}))
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mp", [False, True])
+def test_dryrun_cell_compiles(mp):
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT.format(mp=mp)],
+        capture_output=True, text=True, timeout=540, cwd=ROOT)
+    line = [l for l in out.stdout.splitlines() if l.startswith("REC=")]
+    assert line, out.stdout + out.stderr
+    rec = json.loads(line[0][4:])
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == ("2x16x16" if mp else "16x16")
+
+
+def test_all_dryrun_records_ok():
+    """Every recorded cell in experiments/dryrun is ok or a policy skip."""
+    import os
+    d = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("no dry-run records yet")
+    bad = []
+    for fn in os.listdir(d):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, fn)))
+        if r["status"] not in ("ok", "skipped"):
+            bad.append((fn, r.get("error", "")[:100]))
+    assert not bad, bad

@@ -1,0 +1,145 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stbllm import STBConfig, stbllm_quantize_layer
+from repro.kernels.ops import stb_matmul
+from repro.kernels.ref import stb_matmul_ref
+from repro.kernels.stb_gemm import stb_gemm_packed
+from repro.quant.packing import (
+    GROUP_M, SCALE_GROUP, PackedLinear, _pack_2bit, _pack_bitplane,
+    pack_quantized_layer, packed_format_bits, unpack_to_dense)
+
+
+def random_packed(rng, k: int, n: int) -> PackedLinear:
+    """Random-but-valid packed planes (fast path for kernel sweeps)."""
+    mask = rng.random((k, n)) > 0.5
+    signs = (rng.random((k, n)) > 0.5).astype(np.uint8)
+    sres = (rng.random((k, n)) > 0.5).astype(np.uint8)
+    regions = rng.integers(0, 4, (k, n)).astype(np.uint8)
+    scales = rng.uniform(0.01, 1.0, (k // SCALE_GROUP, n, 5)).astype(
+        np.float32)
+    return PackedLinear(
+        mask_bits=jnp.asarray(_pack_bitplane(mask.astype(np.uint8))),
+        sign_bits=jnp.asarray(_pack_bitplane(signs)),
+        sign_res_bits=jnp.asarray(_pack_bitplane(sres)),
+        region_bits=jnp.asarray(_pack_2bit(regions)),
+        scales=jnp.asarray(scales), k=k, n=n, n_m=(4, 8))
+
+
+# ------------------------------------------------------------ pack/unpack
+def test_bitplane_roundtrip(rng):
+    bits = (rng.random((32, 16)) > 0.5).astype(np.uint8)
+    packed = _pack_bitplane(bits)
+    assert packed.shape == (4, 16)
+    unpacked = ((packed[np.arange(32) // 8, :]
+                 >> (np.arange(32) % 8)[:, None]) & 1)
+    np.testing.assert_array_equal(unpacked, bits)
+
+
+def test_2bit_roundtrip(rng):
+    codes = rng.integers(0, 4, (32, 8)).astype(np.uint8)
+    packed = _pack_2bit(codes)
+    assert packed.shape == (8, 8)
+    un = (packed[np.arange(32) // 4, :] >> ((np.arange(32) % 4) * 2)[:, None]) & 3
+    np.testing.assert_array_equal(un, codes)
+
+
+def test_unpack_matches_quantized_layer(rng):
+    w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    q = stbllm_quantize_layer(w, x, STBConfig(n=4, m=8))
+    p = pack_quantized_layer(q)
+    wd = unpack_to_dense(p)                     # [K, N] = deq.T
+    np.testing.assert_allclose(np.asarray(wd), np.asarray(q.deq).T,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_packed_format_bits_accounting(rng):
+    p = random_packed(rng, 256, 128)
+    bits = packed_format_bits(p)
+    # 3 bit-planes + 2 region bits + 5 f32 scales per 128 rows = 6.25
+    assert bits == pytest.approx(1 + 1 + 1 + 2 + 5 * 32 / SCALE_GROUP)
+
+
+# ------------------------------------------------------------ kernel sweep
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (16, 256, 128), (128, 128, 256), (64, 384, 128),
+    (256, 256, 256),
+])
+def test_kernel_matches_oracle_shapes(rng, m, k, n):
+    p = random_packed(rng, k, n)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y_ker = stb_gemm_packed(x, p, interpret=True)
+    y_ref = stb_matmul_ref(x, p)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(rng, dtype):
+    p = random_packed(rng, 128, 128)
+    x = jnp.asarray(rng.normal(size=(16, 128)), dtype)
+    y_ker = stb_gemm_packed(x, p, interpret=True)
+    y_ref = stb_matmul_ref(x, p)
+    assert y_ker.dtype == dtype
+    # bf16: the kernel decodes weights in f32 and accumulates in f32; the
+    # oracle dequantizes to bf16 first — allow bf16-rounding-scale slack.
+    tol = 1e-4 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(
+        np.asarray(y_ker, np.float32), np.asarray(y_ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bk", [128, 256])
+def test_kernel_block_shapes(rng, bk):
+    p = random_packed(rng, 512, 128)
+    x = jnp.asarray(rng.normal(size=(32, 512)), jnp.float32)
+    y_ker = stb_gemm_packed(x, p, interpret=True, bk=bk)
+    y_ref = stb_matmul_ref(x, p)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_misaligned_raises(rng):
+    p = random_packed(rng, 128, 128)
+    x = jnp.asarray(rng.normal(size=(16, 120)), jnp.float32)  # K mismatch
+    with pytest.raises(Exception):
+        stb_gemm_packed(x, p, interpret=True)
+
+
+# ------------------------------------------------------------- ops wrapper
+def test_stb_matmul_impl_dispatch(rng):
+    p = random_packed(rng, 128, 128)
+    x = jnp.asarray(rng.normal(size=(4, 6, 128)), jnp.float32)  # leading dims
+    y_jnp = stb_matmul(x, p, impl="jnp")
+    y_pal = stb_matmul(x, p, impl="pallas")
+    assert y_jnp.shape == (4, 6, 128)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dense_routes_packed_weights(rng):
+    """models.modules.dense dispatches on the param leaf type."""
+    from repro.models.modules import dense
+    p = random_packed(rng, 128, 128)
+    x = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+    y = dense({"w": p}, x)
+    y_ref = stb_matmul_ref(x, p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_end_to_end_quantize_pack_matmul(rng):
+    """Full path: Alg.1 quantize -> pack -> kernel == dense deq matmul."""
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)   # [out, in]
+    x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    q = stbllm_quantize_layer(w, x, STBConfig(n=4, m=8))
+    p = pack_quantized_layer(q)
+    xt = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    y_kernel = stb_gemm_packed(xt, p, interpret=True)
+    y_dense = xt @ q.deq.T
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)

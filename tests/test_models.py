@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests + model invariants (spec deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ASSIGNED, get_config, get_smoke_config
+from repro.launch.steps import make_train_step
+from repro.models.loss import lm_loss
+from repro.models.model import build_model, count_params_analytic
+from repro.optim import AdamWConfig, adamw_init
+
+
+def _mem_for(cfg, batch, dtype=jnp.float32):
+    if cfg.encoder is not None:
+        return jnp.zeros((batch, cfg.encoder.n_frames,
+                          cfg.encoder.d_frontend or cfg.d_model), dtype)
+    if cfg.vision is not None:
+        return jnp.zeros((batch, cfg.vision.n_tokens, cfg.vision.d_vision),
+                         dtype)
+    return None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward + one train step on CPU,
+    asserting output shapes and no NaNs (spec's per-arch smoke test)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    mem = _mem_for(cfg, B)
+    logits, aux = model.forward(params, toks, mem)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    batch = {"tokens": toks, "labels": toks}
+    if mem is not None:
+        batch["memory"] = mem
+    p2, _, metrics = step(params, adamw_init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    caches = model.init_cache(B, 32)
+    mem = _mem_for(cfg, B)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, caches2 = model.decode_step(params, caches, tok, jnp.int32(0), mem)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "minicpm3-4b",
+                                  "jamba-v0.1-52b", "xlstm-350m"])
+def test_prefill_decode_equivalence(arch):
+    """Decoding token-by-token must match the full-sequence forward."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 8
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full_logits, _ = model.forward(params, toks)
+    caches = model.init_cache(B, S)
+    outs = []
+    for pos in range(S):
+        lg, caches = model.decode_step(
+            params, caches, toks[:, pos:pos + 1], jnp.int32(pos))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits),
+        rtol=5e-3, atol=5e-3)
+
+
+def test_unroll_matches_scan():
+    """The costing unroll path must be numerically identical to the scan."""
+    from dataclasses import replace
+    cfg = get_smoke_config("granite-3-8b")
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.arange(16).reshape(1, 16) % cfg.vocab, jnp.int32)
+    l1, _ = model.forward(params, toks)
+    l2, _ = replace(model, unroll=True).forward(params, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the assigned hyperparameters."""
+    spec = {
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), arch
+
+
+def test_moe_configs():
+    for arch, (e, k) in {"phi3.5-moe-42b-a6.6b": (16, 2),
+                         "dbrx-132b": (16, 4),
+                         "jamba-v0.1-52b": (16, 2)}.items():
+        cfg = get_config(arch)
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (e, k), arch
+
+
+def test_param_counts_plausible():
+    """Analytic param counts are in the advertised ballpark."""
+    expect = {"granite-3-8b": (7e9, 10e9), "minicpm3-4b": (3e9, 5.5e9),
+              "dbrx-132b": (110e9, 150e9), "jamba-v0.1-52b": (40e9, 60e9),
+              "xlstm-350m": (0.2e9, 0.6e9)}
+    for arch, (lo, hi) in expect.items():
+        n = count_params_analytic(get_config(arch))
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    total = count_params_analytic(cfg)
+    active = count_params_analytic(cfg, active_only=True)
+    assert active < 0.35 * total  # top-2 of 16 experts
+
+
+def test_vocab_padding_and_loss_masking(rng):
+    """Padded logits never receive probability mass."""
+    cfg = get_smoke_config("granite-3-8b")  # vocab 512 already mult of 256
+    logits = jnp.asarray(rng.normal(size=(2, 4, 512 + 256)), jnp.float32)
+    labels = jnp.zeros((2, 4), jnp.int32)
+    l1 = lm_loss(logits, labels, 512)
+    boosted = logits.at[..., 512:].add(100.0)  # junk in padded region
+    l2 = lm_loss(boosted, labels, 512)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_shapes_registry():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert get_config("jamba-v0.1-52b").sub_quadratic
+    assert not get_config("granite-3-8b").sub_quadratic

@@ -1,0 +1,120 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocate import adaptive_allocation
+from repro.core.binary import binarize, masked_alpha, residual_binarize
+from repro.core.nm import check_nm, nm_mask
+from repro.core.trisection import trisection_binarize
+from repro.data import SyntheticCorpus, ZipfMarkovConfig
+from repro.optim.compression import (
+    compress_gradients, decompress_gradients, init_residuals)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def weight_matrix(draw, max_rows=8, col_groups=st.integers(1, 4), m=8):
+    rows = draw(st.integers(1, max_rows))
+    groups = draw(col_groups)
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(size=(rows, groups * m)), jnp.float32)
+
+
+@given(w=weight_matrix(), n=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_nm_mask_always_exact(w, n):
+    mask = nm_mask(w, n, 8)
+    assert check_nm(mask, n, 8)
+
+
+@given(w=weight_matrix())
+@settings(**SETTINGS)
+def test_binarize_error_never_exceeds_norm(w):
+    """||W - B||^2 <= ||W||^2: the optimal alpha never does worse than 0."""
+    mask = jnp.ones_like(w, dtype=bool)
+    b, _, _ = binarize(w, mask)
+    assert float(jnp.sum((w - b) ** 2)) <= float(jnp.sum(w ** 2)) + 1e-5
+
+
+@given(w=weight_matrix())
+@settings(**SETTINGS)
+def test_residual_plane_monotone(w):
+    mask = jnp.ones_like(w, dtype=bool)
+    b1, _, _ = binarize(w, mask)
+    b2, _, _ = residual_binarize(w, mask)
+    e1 = float(jnp.sum((w - b1) ** 2))
+    e2 = float(jnp.sum((w - b2) ** 2))
+    assert e2 <= e1 + 1e-6
+
+
+@given(w=weight_matrix(), f1=st.floats(0.05, 0.45), f2=st.floats(0.5, 0.95))
+@settings(**SETTINGS)
+def test_trisection_partition_complete(w, f1, f2):
+    """Every kept weight lands in exactly one region for any break-points."""
+    mask = jnp.ones_like(w, dtype=bool)
+    wmax = float(jnp.max(jnp.abs(w))) or 1.0
+    b, scales, regions = trisection_binarize(w, mask, f1 * wmax, f2 * wmax)
+    assert b.shape == w.shape
+    # dequantized value equals region scale * sign everywhere on mask
+    r = np.asarray(regions)
+    bb = np.asarray(b)
+    for code in (0, 1, 2):
+        sel = r == code
+        if sel.any():
+            a = np.asarray(scales[code])          # [rows, 1]
+            expect = np.broadcast_to(a, w.shape)[sel]
+            np.testing.assert_allclose(np.abs(bb[sel]), expect, rtol=1e-5)
+
+
+@given(w=weight_matrix())
+@settings(**SETTINGS)
+def test_masked_alpha_is_masked_mean(w):
+    mask = jnp.asarray(np.random.default_rng(0).random(w.shape) > 0.3)
+    a = np.asarray(masked_alpha(w, mask))[:, 0]
+    aw = np.abs(np.asarray(w))
+    m = np.asarray(mask)
+    for i in range(w.shape[0]):
+        expect = aw[i][m[i]].mean() if m[i].any() else 0.0
+        np.testing.assert_allclose(a[i], expect, rtol=1e-5, atol=1e-7)
+
+
+@given(seed=st.integers(0, 1000), r=st.floats(0.1, 0.9))
+@settings(**SETTINGS)
+def test_allocation_average_never_exceeds_target(seed, r):
+    rng = np.random.default_rng(seed)
+    norms = {f"l{i}": float(rng.uniform(0.1, 10)) for i in range(6)}
+    numels = {f"l{i}": int(rng.integers(100, 10000)) for i in range(6)}
+    alloc = adaptive_allocation(norms, numels, r, 8)
+    tot = sum(numels.values())
+    avg = sum(n / m * numels[k] for k, (n, m) in alloc.items()) / tot
+    assert avg <= r + 1 / 16 + 1e-9
+    assert all(1 <= n <= 8 for n, _ in alloc.values())
+
+
+@given(seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_gradient_compression_error_feedback_bounded(seed):
+    """One compress/decompress round: error <= int8 quantization bound and
+    the residual carries exactly the lost part (error feedback identity)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(33,)), jnp.float32)}
+    res = init_residuals(g)
+    q, s, res2 = compress_gradients(g, res)
+    deq = decompress_gradients(q, s, g)
+    err = np.asarray(g["w"]) - np.asarray(deq["w"])
+    np.testing.assert_allclose(err, np.asarray(res2["w"]), rtol=1e-5,
+                               atol=1e-7)
+    scale = float(np.abs(np.asarray(g["w"])).max()) / 127.0
+    assert np.abs(err).max() <= scale * 0.5 + 1e-6
+
+
+@given(doc=st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_corpus_tokens_in_vocab(doc):
+    c = SyntheticCorpus(ZipfMarkovConfig(vocab=64, doc_len=128))
+    d = c.document(doc)
+    assert d.min() >= 0 and d.max() < 64 and len(d) == 128

@@ -1,0 +1,43 @@
+"""Per-family serving recipes encode the §Perf sweep winners."""
+from repro.configs import SHAPES
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.recipes import serving_recipe
+
+
+def test_batched_decode_dense_gqa():
+    r = serving_recipe(get_config("granite-3-8b"), SHAPES["decode_32k"])
+    assert r.packed and r.kv_quant and r.serve_replicated
+
+
+def test_long_context_keeps_fsdp_dense():
+    r = serving_recipe(get_config("jamba-v0.1-52b"), SHAPES["long_500k"])
+    assert not r.packed and not r.serve_replicated and r.kv_quant
+
+
+def test_xattn_archs_stay_baseline():
+    for arch in ("whisper-small", "llama-3.2-vision-11b"):
+        r = serving_recipe(get_config(arch), SHAPES["decode_32k"])
+        assert not r.packed and not r.kv_quant
+
+
+def test_mla_decode_skips_kv_quant():
+    r = serving_recipe(get_config("minicpm3-4b"), SHAPES["decode_32k"])
+    assert r.packed and not r.kv_quant
+
+
+def test_prefill_split():
+    dense = serving_recipe(get_config("granite-34b"), SHAPES["prefill_32k"])
+    assert dense.act_seq_axis and dense.serve_replicated
+    moe = serving_recipe(get_config("dbrx-132b"), SHAPES["prefill_32k"])
+    assert not moe.act_seq_axis
+
+
+def test_train_is_baseline():
+    for arch in ASSIGNED:
+        r = serving_recipe(get_config(arch), SHAPES["train_4k"])
+        assert not (r.packed or r.kv_quant or r.serve_replicated)
+
+
+def test_model_kw_shape():
+    r = serving_recipe(get_config("granite-3-8b"), SHAPES["decode_32k"])
+    assert r.model_kw() == {"kv_quant": True}

@@ -1,0 +1,57 @@
+"""Roofline analysis unit tests: HLO collective parser + term arithmetic."""
+import pytest
+
+from repro.analysis.roofline import (
+    HW_V5E, RooflineReport, collective_bytes_from_hlo)
+
+_HLO = """
+HloModule jit_step
+ENTRY main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[128,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[64]{0} all-reduce(%x), to_apply=%sum
+  %ars = f32[2,32]{1,0} all-reduce-start(%y), to_apply=%sum
+  %rs = bf16[4,16]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = s8[1024]{0} all-to-all(%w), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ard = f32[2,32]{1,0} all-reduce-done(%ars)
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes_from_hlo(_HLO)
+    assert out["all-gather"] == 128 * 128 * 2
+    # sync form + async -start form both carry payload; -done must not
+    # double-count (it would re-add the same bytes)
+    assert out["all-reduce"] == 64 * 4 + 2 * 32 * 4
+    assert out["reduce-scatter"] == 4 * 16 * 2
+    assert out["all-to-all"] == 1024
+    assert out["collective-permute"] == 8 * 8 * 2
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+    assert out["count"] >= 5
+
+
+def test_parser_ignores_non_collectives():
+    out = collective_bytes_from_hlo("%dot = f32[8,8]{1,0} dot(%a, %b)")
+    assert out["total"] == 0
+
+
+def test_report_terms_and_bottleneck():
+    r = RooflineReport(
+        arch="x", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops=256 * HW_V5E.peak_flops,          # exactly 1 s of compute
+        hlo_bytes=256 * HW_V5E.hbm_bw * 2,          # 2 s of memory
+        collective_bytes=256 * HW_V5E.ici_bw * 0.5, # 0.5 s of collectives
+        model_flops=256 * HW_V5E.peak_flops * 0.8)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.4)   # 0.8 useful / 2.0 bound
+    assert r.flops_ratio == pytest.approx(0.8)
+    d = r.to_dict()
+    assert d["bottleneck"] == "memory" and d["hw"] == "tpu-v5e"

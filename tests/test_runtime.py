@@ -1,0 +1,42 @@
+"""Fault-tolerance runtime: heartbeats, stragglers."""
+import time
+
+from repro.runtime import HeartbeatMonitor, StragglerDetector
+
+
+def test_heartbeat_dead_host_detection(tmp_path):
+    mons = [HeartbeatMonitor(str(tmp_path), h, 3, timeout=10.0)
+            for h in range(3)]
+    now = time.time()
+    mons[0].beat(5, now)
+    mons[1].beat(5, now)
+    mons[2].beat(5, now - 100)           # stale
+    assert mons[0].dead_hosts(now) == [2]
+    mons[2].beat(6, now)
+    assert mons[0].dead_hosts(now) == []
+
+
+def test_heartbeat_fleet_step(tmp_path):
+    mons = [HeartbeatMonitor(str(tmp_path), h, 2) for h in range(2)]
+    mons[0].beat(10)
+    mons[1].beat(8)
+    assert mons[0].fleet_step() == 8      # restart barrier = slowest host
+
+
+def test_straggler_detection():
+    det = StragglerDetector(threshold=1.3, window=10)
+    for step in range(10):
+        for h in range(8):
+            det.record(h, 1.0 if h != 5 else 1.8)   # host 5 is 1.8x slower
+    verdicts = det.stragglers()
+    assert len(verdicts) == 1
+    v = verdicts[0]
+    assert v.host == 5 and v.persistent and v.ratio > 1.5
+
+
+def test_straggler_none_when_uniform():
+    det = StragglerDetector()
+    for h in range(4):
+        for _ in range(5):
+            det.record(h, 1.0)
+    assert det.stragglers() == []
