@@ -1,0 +1,143 @@
+"""Decode-pipeline throughput: packed vs dense serving, scan loop vs legacy.
+
+This is the repo's first tracked perf trajectory (``BENCH_decode.json`` at
+the repo root). It measures the serving hot path the paper's deployment
+argument rests on — memory-bound autoregressive decoding — on a small but
+128-aligned dense model so every transformer linear actually packs:
+
+  * ``pipeline/{dense,packed}/batch{1,8,32}`` — the on-device scan pipeline
+    (launch/generate.py): the jitted lax.scan decode loop, timed decode-only
+    (prefill runs untimed first), with dequantized-dense vs
+    PackedLinear-substituted params;
+  * ``legacy/packed/batch8`` — the pre-pipeline per-token Python loop on the
+    same packed params, also decode-loop-only: the dispatch-bound baseline
+    the tentpole replaces, under the same statistic.
+
+All timings are warmed (compile excluded) medians. On CPU the packed path
+lowers dequantize-in-HLO (kernels are TPU-only), so the dense/packed gap
+here tracks decode-op overhead, not the HBM roofline — the json also records
+the analytic packed-bytes ratio the TPU kernels realize.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.base import ModelConfig
+from repro.core.pipeline import pack_model_params, quantize_model
+from repro.core.stbllm import STBConfig
+from repro.data import calibration_batch
+from repro.launch.generate import legacy_generate, make_generate
+from repro.models.model import build_model
+from repro.quant.packing import packed_format_bits
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_JSON = os.path.join(ROOT, "BENCH_decode.json")
+
+# smallest config where every linear is 128-aligned (packs end to end)
+DECODE_CFG = ModelConfig(
+    arch_id="decode-bench", family="dense", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=384, vocab=512, head_dim=32)
+
+PROMPT_LEN = 16
+GEN_LEN = 32
+BATCHES = (1, 8, 32)
+REPEAT = 5
+
+
+def _median(fn, repeat: int = REPEAT) -> float:
+    """Median of ``fn()`` (fn returns seconds); first call warms compiles."""
+    fn()
+    ts = sorted(fn() for _ in range(repeat))
+    return ts[len(ts) // 2]
+
+
+def _prepare(prompt_len: int = PROMPT_LEN):
+    model = build_model(DECODE_CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batch(DECODE_CFG.vocab, n_samples=4,
+                              seq_len=prompt_len)
+    res = quantize_model(model, params, calib,
+                         STBConfig(n=4, m=8, beta=128), pack=True)
+    packed_params = pack_model_params(res.params, res.packed)
+    return model, res, packed_params
+
+
+def _legacy_decode_s(model, params, prompts, gen_len: int) -> float:
+    """Best decode-loop time of the shared legacy baseline (warmed)."""
+    decode = jax.jit(model.decode_step)          # share one compile
+    batch, prompt_len = prompts.shape
+
+    def run() -> float:
+        caches = model.init_cache(batch, prompt_len + gen_len)
+        _, _, decode_s = legacy_generate(model, params, caches, prompts,
+                                         gen_len, decode_fn=decode)
+        return decode_s
+
+    return _median(run)
+
+
+def decode_pipeline_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
+    model, res, packed_params = _prepare()
+    avg_plane_bits = float(np.mean(
+        [packed_format_bits(p) for p in res.packed.values()]))
+    results: dict = {
+        "config": {"arch": DECODE_CFG.arch_id, "prompt_len": PROMPT_LEN,
+                   "gen_len": GEN_LEN, "nm": "4:8",
+                   "packed_layers": len(res.packed),
+                   "plane_bits_per_weight": avg_plane_bits,
+                   "backend": jax.devices()[0].platform},
+        "pipeline": {},
+    }
+
+    rng = np.random.default_rng(0)
+    for batch in BATCHES:
+        prompts = jnp.asarray(rng.integers(
+            0, DECODE_CFG.vocab, (batch, PROMPT_LEN), dtype=np.int32))
+        pipe = make_generate(model, prompt_len=PROMPT_LEN, gen_len=GEN_LEN)
+        cell: dict = {}
+        for name, ps in (("dense", res.params), ("packed", packed_params)):
+            # time the decode scan only (prefill excluded) so the speedup
+            # vs the legacy loop compares decode-vs-decode, same statistic
+            def run(ps=ps) -> float:
+                caches = model.init_cache(batch, PROMPT_LEN + GEN_LEN)
+                k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+                tok0, caches = pipe.prefill_fn(ps, caches, prompts, None, k1)
+                jax.block_until_ready(tok0)
+                t0 = time.perf_counter()
+                toks, _ = pipe.decode_fn(ps, caches, tok0, None, k2)
+                np.asarray(toks)                 # single host sync
+                return time.perf_counter() - t0
+            s = _median(run)
+            tput = batch * GEN_LEN / s
+            cell[name] = {"decode_seconds": s, "tok_s": tput}
+            rows.add(f"decode/pipeline/{name}/batch{batch}", s * 1e6,
+                     f"tok_s={tput:.1f}")
+        results["pipeline"][f"batch{batch}"] = cell
+
+    # the pre-PR baseline this tentpole replaces: Python loop, packed (jnp)
+    b8 = 8
+    prompts = jnp.asarray(rng.integers(
+        0, DECODE_CFG.vocab, (b8, PROMPT_LEN), dtype=np.int32))
+    s_leg = _legacy_decode_s(model, packed_params, prompts, GEN_LEN)
+    tput_leg = b8 * GEN_LEN / s_leg
+    results["legacy_loop"] = {"batch": b8, "decode_seconds": s_leg,
+                              "tok_s": tput_leg}
+    rows.add(f"decode/legacy/packed/batch{b8}", s_leg * 1e6,
+             f"tok_s={tput_leg:.1f}")
+
+    pipe8 = results["pipeline"]["batch8"]["packed"]["tok_s"]
+    results["speedup_vs_legacy_batch8"] = pipe8 / tput_leg
+    rows.add("decode/speedup/pipeline_vs_legacy_batch8", 0,
+             f"x{pipe8 / tput_leg:.2f}")
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.add("decode/json", 0, out_json)
+    return results

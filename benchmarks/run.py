@@ -1,10 +1,16 @@
-"""Benchmark driver: one function per paper table/figure + roofline report.
+"""Benchmark driver: one function per paper table/figure + roofline report
++ the decode-pipeline perf trajectory.
 
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only table2 fig4
+  PYTHONPATH=src python -m benchmarks.run --only decode   # BENCH_decode.json
 
 Prints ``name,us_per_call,derived`` CSV lines; the trained tiny-LM substrate
 is cached under experiments/bench_model/ (first run trains it, ~1 min CPU).
+The ``decode`` cell additionally writes ``BENCH_decode.json`` at the repo
+root — packed vs dense serving tok/s through the scan pipeline at batch
+{1, 8, 32} plus the legacy Python-loop baseline (see benchmarks/decode_bench
+and ROADMAP "Decode pipeline").
 """
 from __future__ import annotations
 
@@ -12,7 +18,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import kernel_bench, roofline_report, tables
+from benchmarks import decode_bench, kernel_bench, roofline_report, tables
 from benchmarks.common import Row, get_bench_model
 
 
@@ -20,7 +26,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
-                         "table9 table10 table11 table13 fig4 roofline")
+                         "table9 table10 table11 table13 fig4 roofline "
+                         "decode")
     args = ap.parse_args(argv)
 
     rows = Row()
@@ -61,6 +68,8 @@ def main(argv=None) -> int:
         kernel_bench.fig4_kernel(rows)
     if want("roofline"):
         roofline_report.roofline_table(rows)
+    if want("decode"):
+        decode_bench.decode_pipeline_bench(rows)
     return 0
 
 

@@ -129,9 +129,17 @@ def quantize_model(
             deqs.append(np.asarray(q.deq).T)          # back to [in, out]
             stats[sub] = dict(q.stats)
             stats[sub].pop("block_meta", None)
-            if pack and hasattr(q, "mask"):
-                from repro.quant.packing import pack_quantized_layer
-                packed[sub] = pack_quantized_layer(q)
+            if pack and hasattr(q, "mask") and arr.ndim <= 3 \
+                    and "wkv_b" not in name:
+                # pack only dense()-routed linears: wkv_b is consumed as a
+                # raw matrix by mla_decode's absorbed path (same skip as
+                # abstract_pack_params), and 4-D MoE expert stacks are
+                # applied via raw einsums in moe_apply — substituted planes
+                # there would never be read.
+                from repro.quant.packing import packable, pack_quantized_layer
+                # planes are [out, in]; the kernel layout is [K, N] = [in, out]
+                if packable(w_oi.shape[1], w_oi.shape[0]):
+                    packed[sub] = pack_quantized_layer(q)
             if progress:
                 progress(sub)
         new = np.stack(deqs).reshape(arr.shape) if arr.ndim > 2 else deqs[0]
@@ -149,6 +157,33 @@ def quantize_model(
               for n, s in stats.items()) / max(tot, 1)
     return ModelPTQResult(params=new_params, packed=packed, stats=stats,
                           allocation=alloc, avg_bits=avg, storage_bits=sto)
+
+
+def pack_model_params(params, packed: dict[str, Any]):
+    """Substitute PackedLinear leaves into a params pytree for serving.
+
+    ``packed`` is ``ModelPTQResult.packed`` (path -> PackedLinear, stacked
+    weights as ``path[g]`` per depth group). Eligible leaves are replaced by
+    (group-stacked) PackedLinears; everything else — including layers whose
+    K/N alignment made them unpackable — keeps its dequantized dense weight,
+    so the substituted tree is always servable. ``dense()`` / ``swiglu()``
+    then route the packed leaves through the Pallas kernels (TPU) or the
+    dequantize-in-HLO path (elsewhere).
+    """
+    from repro.quant.packing import stack_packed
+
+    flat = flatten_with_names(params)
+    out = []
+    for name, leaf in flat:
+        if name in packed:
+            out.append(packed[name])
+        elif f"{name}[0]" in packed and getattr(leaf, "ndim", 0) == 3:
+            groups = [packed.get(f"{name}[{g}]") for g in range(leaf.shape[0])]
+            out.append(stack_packed(groups) if all(
+                g is not None for g in groups) else leaf)
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(jax.tree.structure(params), out)
 
 
 def _base(sub: str) -> str:

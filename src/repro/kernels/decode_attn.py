@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 DEFAULT_BS = 512
 
@@ -108,7 +110,7 @@ def decode_attention_int8(
             pltpu.VMEM((g, 1), jnp.float32),   # running denom
             pltpu.VMEM((g, d), jnp.float32),   # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k_q, k_scale, v_q, v_scale, lens)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _fused_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref,
                       *, nf: int):
@@ -76,10 +78,135 @@ def fused_swiglu(
         out_specs=pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, wg, wu, wd)
+
+
+# ---------------------------------------------------------------------------
+# packed variant: Wg/Wu/Wd stay structured-binary bit-planes end to end
+# ---------------------------------------------------------------------------
+def _fused_packed_kernel(x_ref,
+                         gm_ref, gs_ref, gr_ref, gc_ref, gsc_ref,
+                         um_ref, us_ref, ur_ref, uc_ref, usc_ref,
+                         dm_ref, ds_ref, dr_ref, dc_ref, dsc_ref,
+                         o_ref, acc_ref, *, d: int, bf: int, nf: int):
+    from repro.kernels.stb_gemm import _decode_tile
+
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                             # [bm, d]
+    wg = _decode_tile(gm_ref[...], gs_ref[...], gr_ref[...], gc_ref[...],
+                      gsc_ref[...], d, bf, x.dtype)            # [d, bf]
+    wu = _decode_tile(um_ref[...], us_ref[...], ur_ref[...], uc_ref[...],
+                      usc_ref[...], d, bf, x.dtype)
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u                            # silu(g)*u
+    wd = _decode_tile(dm_ref[...], ds_ref[...], dr_ref[...], dc_ref[...],
+                      dsc_ref[...], bf, d, x.dtype)            # [bf, d]
+    acc_ref[...] += jax.lax.dot_general(
+        h.astype(x.dtype), wd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _planes(p):
+    return (p.mask_bits, p.sign_bits, p.sign_res_bits, p.region_bits, p.scales)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def fused_swiglu_packed(
+    x: jnp.ndarray,       # [rows, d]
+    pg,                   # PackedLinear [d, d_ff]  (wi_gate)
+    pu,                   # PackedLinear [d, d_ff]  (wi_up)
+    pd,                   # PackedLinear [d_ff, d]  (wo)
+    *,
+    bm: int = 128,
+    bf: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused SwiGLU over *packed* weights: bit-planes decode in VMEM.
+
+    Per (row-block, ff-block) grid step the Wg/Wu [d, bf] and Wd [bf, d]
+    tiles are decoded from their planes inside the kernel, so decode-time
+    FFN HBM traffic is packed bytes + x + y — the hidden activations AND the
+    dense weights never exist in HBM. This is the decode-path complement of
+    ``fused_swiglu`` (which assumes dense weights) and the FFN analogue of
+    ``stb_gemv``.
+
+    Constraints: d % 128 == 0 (scale groups along Wg/Wu's K dim); d_ff must
+    admit a 128-aligned ff block (scale groups along Wd's K dim). Rows are
+    sublane-padded and sliced automatically.
+    """
+    from repro.kernels.stb_gemm import _fit_block, _pad_rows, _round_up, \
+        _sublane
+    from repro.quant.packing import NUM_SCALES, SCALE_GROUP
+
+    rows, d = x.shape
+    d_ff = pg.n
+    if pg.k != d or pu.k != d or pd.k != d_ff or pd.n != d:
+        raise ValueError(
+            f"packed FFN shape mismatch: x[..., {d}] vs "
+            f"wg[{pg.k},{pg.n}] wu[{pu.k},{pu.n}] wd[{pd.k},{pd.n}]")
+    if d % SCALE_GROUP:
+        raise ValueError(f"d={d} must be a multiple of {SCALE_GROUP}")
+    bf = _fit_block(d_ff, bf, SCALE_GROUP)
+    rows_pad = _round_up(rows, _sublane(x.dtype))
+    bm = min(bm, rows_pad)
+    rows_pad = _round_up(rows_pad, bm)
+    x = _pad_rows(x, rows_pad)
+    nf = d_ff // bf
+
+    # index maps: wg/wu planes tile the ff (N) dim; wd planes tile ff as K
+    gspec = [
+        pl.BlockSpec((d // 8, bf), lambda i, f: (0, f)),       # mask
+        pl.BlockSpec((d // 8, bf), lambda i, f: (0, f)),       # sign
+        pl.BlockSpec((d // 8, bf), lambda i, f: (0, f)),       # sign_res
+        pl.BlockSpec((d // 4, bf), lambda i, f: (0, f)),       # region
+        pl.BlockSpec((d // SCALE_GROUP, bf, NUM_SCALES),
+                     lambda i, f: (0, f, 0)),
+    ]
+    dspec = [
+        pl.BlockSpec((bf // 8, d), lambda i, f: (f, 0)),
+        pl.BlockSpec((bf // 8, d), lambda i, f: (f, 0)),
+        pl.BlockSpec((bf // 8, d), lambda i, f: (f, 0)),
+        pl.BlockSpec((bf // 4, d), lambda i, f: (f, 0)),
+        pl.BlockSpec((bf // SCALE_GROUP, d, NUM_SCALES),
+                     lambda i, f: (f, 0, 0)),
+    ]
+    kernel = functools.partial(_fused_packed_kernel, d=d, bf=bf, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows_pad // bm, nf),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, f: (i, 0))]
+                 + gspec + list(gspec) + dspec,
+        out_specs=pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, *_planes(pg), *_planes(pu), *_planes(pd))[:rows]
+
+
+def fused_swiglu_packed_ref(x, pg, pu, pd):
+    """Oracle: unpack to dense, then the dense reference."""
+    from repro.quant.packing import unpack_to_dense
+
+    return fused_swiglu_ref(x, unpack_to_dense(pg, x.dtype),
+                            unpack_to_dense(pu, x.dtype),
+                            unpack_to_dense(pd, x.dtype))
 
 
 def fused_swiglu_ref(x, wg, wu, wd):

@@ -1,13 +1,19 @@
-"""Public jit'd entry points for structured-binary matmul.
+"""Public jit'd entry points for structured-binary matmul + packed FFN.
 
 ``stb_matmul(x, packed, impl=...)`` dispatches between:
-  * "pallas"      — the TPU kernel (compiled on TPU, interpret=True elsewhere)
+  * "pallas"      — the TPU kernels (compiled on TPU, interpret=True
+                    elsewhere); the *variant* (small-M GEMV vs tiled GEMM)
+                    and its block sizes come from the heuristic table below
   * "jnp"         — dequantize-in-HLO + dense matmul; this is what the
                     distributed serve path lowers on any backend (the decode
                     ops appear in the HLO, so dry-run byte counts reflect the
                     packed HBM traffic)
   * "ref"         — alias of the oracle in ref.py
   * None          — auto: pallas on TPU, jnp otherwise
+
+``stb_swiglu(x, pg, pu, pd)`` is the FFN analogue: on TPU it runs the fused
+packed SwiGLU kernel (bit-planes decode in VMEM, hidden never in HBM); off
+TPU it lowers the dequantize-fused jnp path.
 """
 from __future__ import annotations
 
@@ -15,12 +21,44 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ref import stb_matmul_ref
-from repro.kernels.stb_gemm import stb_gemm_packed
-from repro.quant.packing import PackedLinear
+from repro.kernels.stb_gemm import stb_gemm_packed, stb_gemv_packed
+from repro.quant.packing import PackedLinear, unpack_to_dense
 
 
 def _platform() -> str:
     return jax.devices()[0].platform
+
+
+# ---------------------------------------------------------------------------
+# block-size heuristic table (v5e-shaped; interpret-mode uses the same shapes)
+#
+# Decode batches are tiny (M = batch), so the tiled GEMM's M-grid degenerates
+# to one block and narrow 128x128 weight tiles re-pay the plane-decode ALU
+# cost per small tile. The GEMV variant pins the padded activation block in
+# VMEM and walks wide bn x bk tiles; the smaller M is, the wider the tiles
+# can be before the fp32 accumulator [m_pad, bn] pressures VMEM.
+#
+# rows: (max_m, kwargs for that variant) — first row with m <= max_m wins.
+# ---------------------------------------------------------------------------
+STB_BLOCK_TABLE: tuple[tuple[int, dict], ...] = (
+    (16, dict(bn=512, bk=256)),    # single-digit batch: widest tiles
+    (64, dict(bn=256, bk=256)),
+    (128, dict(bn=256, bk=128)),   # upper GEMV range: keep acc small
+)
+GEMM_BLOCKS = dict(bm=128, bn=128, bk=128)
+
+
+def select_stb_blocks(m: int) -> tuple[str, dict]:
+    """(variant, block kwargs) for an [M, K] x packed matmul.
+
+    The choice depends on M only: K/N re-fitting to divisor blocks happens
+    inside the kernel wrappers (``_fit_block``), which see the real plane
+    shapes.
+    """
+    for max_m, kw in STB_BLOCK_TABLE:
+        if m <= max_m:
+            return "gemv", dict(kw)
+    return "gemm", dict(GEMM_BLOCKS)
 
 
 def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
@@ -31,9 +69,46 @@ def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if impl == "pallas":
-        y = stb_gemm_packed(x2, p, interpret=_platform() != "tpu", **kw)
+        variant, blocks = select_stb_blocks(x2.shape[0])
+        blocks.update(kw)
+        fn = stb_gemv_packed if variant == "gemv" else stb_gemm_packed
+        if variant == "gemv":
+            blocks.pop("bm", None)   # GEMV has no M tiling: a caller's bm
+            # (valid for the tiled GEMM) must not leak into its signature
+        y = fn(x2, p, interpret=_platform() != "tpu", **blocks)
     elif impl in ("jnp", "ref"):
         y = stb_matmul_ref(x2, p)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y.reshape(*lead, p.n)
+
+
+def _stb_swiglu_jnp(x2: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
+                    pd: PackedLinear) -> jnp.ndarray:
+    """Dequantize-in-HLO fused reference — the non-TPU serve lowering."""
+    g = jnp.matmul(x2, unpack_to_dense(pg, x2.dtype),
+                   preferred_element_type=jnp.float32)
+    u = jnp.matmul(x2, unpack_to_dense(pu, x2.dtype),
+                   preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u
+    y = jnp.matmul(h.astype(x2.dtype), unpack_to_dense(pd, x2.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(x2.dtype)
+
+
+def stb_swiglu(x: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
+               pd: PackedLinear, impl: str | None = None) -> jnp.ndarray:
+    """y = swiglu(x; decode(Wg), decode(Wu), decode(Wd)). x: [..., D]."""
+    if impl is None:
+        impl = "pallas" if _platform() == "tpu" else "jnp"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "pallas":
+        from repro.kernels.fused_ffn import fused_swiglu_packed
+        y = fused_swiglu_packed(x2, pg, pu, pd,
+                                interpret=_platform() != "tpu")
+    elif impl in ("jnp", "ref"):
+        y = _stb_swiglu_jnp(x2, pg, pu, pd)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, pd.n)

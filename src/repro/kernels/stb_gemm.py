@@ -24,11 +24,53 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
 from repro.quant.packing import NUM_SCALES, SCALE_GROUP, PackedLinear
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 128
+
+# decode-shaped (GEMV) default tiling: one M block, wide N/K tiles so the
+# per-tile plane-decode cost is amortized over many weight bytes.
+GEMV_BN = 256
+GEMV_BK = 256
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-to-last-dim tile for the dtype (f32 8, bf16 16)."""
+    return 16 if dtype == jnp.bfloat16 else 8
+
+
+def _fit_block(dim: int, pref: int, step: int, allow_any: bool = False) -> int:
+    """Largest multiple of ``step`` that divides ``dim`` and is <= ``pref``.
+
+    Falls back to ``dim`` itself when dim < step (small-N layers: the block
+    is the whole dimension and Mosaic pads the lane internally). With
+    ``allow_any`` (the N dim, which carries no scale-group constraint) any
+    divisor of ``dim`` is acceptable when no step-aligned one exists.
+    Otherwise raises — the caller's packed planes cannot be re-tiled.
+    """
+    if dim < step:
+        return dim
+    for cand in range(min(pref, dim) - min(pref, dim) % step, 0, -step):
+        if dim % cand == 0:
+            return cand
+    if allow_any:
+        for cand in range(min(pref, dim), 0, -1):
+            if dim % cand == 0:
+                return cand
+    raise ValueError(f"no {step}-aligned block divides dim={dim}")
+
+
+def _pad_rows(x: jnp.ndarray, m_pad: int) -> jnp.ndarray:
+    """Zero-pad the row (M) dim; padded rows produce garbage-free zeros."""
+    m = x.shape[0]
+    return x if m_pad == m else jnp.pad(x, ((0, m_pad - m), (0, 0)))
 
 
 def _decode_tile(mask_b, sign_b, sres_b, reg_b, scales, bk: int, bn: int, dtype):
@@ -108,18 +150,27 @@ def stb_gemm(
 ) -> jnp.ndarray:
     """y[M, N] = x[M, K] @ decode(packed W[K, N]).
 
-    Shape contract: M % bm == 0, N % bn == 0, K % bk == 0,
-    bk % 128 == 0 (scale-group alignment).
+    Alignment is handled automatically: M is zero-padded up to a sublane
+    multiple and the output sliced back; bn/bk shrink to the largest aligned
+    divisor of N/K (bk stays a multiple of the 128 scale group). Only a K
+    with no 128-aligned block (i.e. packed planes that could never exist)
+    still raises.
     """
     m, k = x.shape
     n = mask_bits.shape[1]
-    bm = min(bm, m)
-    if m % bm or n % bn or k % bk or bk % SCALE_GROUP:
-        raise ValueError(f"misaligned: M={m}/{bm} N={n}/{bn} K={k}/{bk}")
+    if k % SCALE_GROUP or mask_bits.shape[0] * 8 != k:
+        raise ValueError(
+            f"K={k} inconsistent with packed planes (mask rows "
+            f"{mask_bits.shape[0]}, scale group {SCALE_GROUP})")
+    bm = min(bm, _round_up(m, _sublane(x.dtype)))
+    m_pad = _round_up(m, bm)
+    x = _pad_rows(x, m_pad)
+    bn = _fit_block(n, bn, 128, allow_any=True)
+    bk = _fit_block(k, bk, SCALE_GROUP)
     nk = k // bk
     out_dtype = out_dtype or x.dtype
 
-    grid = (m // bm, n // bn, nk)
+    grid = (m_pad // bm, n // bn, nk)
     kernel = functools.partial(_stb_gemm_kernel, bk=bk, bn=bn, nk=nk)
     return pl.pallas_call(
         kernel,
@@ -136,18 +187,111 @@ def stb_gemm(
             ),                                                          # scales
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, mask_bits, sign_bits, sign_res_bits, region_bits, scales)
+    )(x, mask_bits, sign_bits, sign_res_bits, region_bits, scales)[:m]
 
 
 def stb_gemm_packed(x: jnp.ndarray, p: PackedLinear, *, interpret: bool = False,
                     **kw) -> jnp.ndarray:
     return stb_gemm(x, p.mask_bits, p.sign_bits, p.sign_res_bits,
+                    p.region_bits, p.scales, interpret=interpret, **kw)
+
+
+# ---------------------------------------------------------------------------
+# small-M (decode-shaped) GEMV variant
+# ---------------------------------------------------------------------------
+def _stb_gemv_kernel(x_ref, mask_ref, sign_ref, sres_ref, reg_ref, scale_ref,
+                     o_ref, acc_ref, *, bk: int, bn: int, nk: int):
+    """GEMV-style body: grid (N/bn, K/bk), K innermost; the whole (padded)
+    batch of activation rows stays resident in VMEM across the K loop."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decode_tile(mask_ref[...], sign_ref[...], sres_ref[...],
+                     reg_ref[...], scale_ref[...], bk, bn, x_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "bk", "interpret", "out_dtype"))
+def stb_gemv(
+    x: jnp.ndarray,
+    mask_bits: jnp.ndarray,
+    sign_bits: jnp.ndarray,
+    sign_res_bits: jnp.ndarray,
+    region_bits: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    bn: int = GEMV_BN,
+    bk: int = GEMV_BK,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Decode-shaped y = x @ decode(W) for small M (batch 1..128 decode).
+
+    The large-M kernel tiles M over the grid, which at M<=128 degenerates to
+    one M block anyway but keeps narrow (128) N/K tiles — so every grid step
+    re-pays the plane-decode ALU cost per small weight tile. This variant
+    pins the whole (sublane-padded) activation block in VMEM and walks wide
+    bn x bk weight tiles, so HBM traffic is essentially the packed bytes + y
+    and the MXU sees fewer, fatter dots. M is padded and the output sliced;
+    no shape ever raises for M in 1..128.
+    """
+    m, k = x.shape
+    n = mask_bits.shape[1]
+    if k % SCALE_GROUP or mask_bits.shape[0] * 8 != k:
+        raise ValueError(
+            f"K={k} inconsistent with packed planes (mask rows "
+            f"{mask_bits.shape[0]}, scale group {SCALE_GROUP})")
+    m_pad = _round_up(m, _sublane(x.dtype))
+    x = _pad_rows(x, m_pad)
+    bn = _fit_block(n, bn, 128, allow_any=True)
+    bk = _fit_block(k, bk, SCALE_GROUP)
+    nk = k // bk
+    out_dtype = out_dtype or x.dtype
+
+    kernel = functools.partial(_stb_gemv_kernel, bk=bk, bn=bn, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((m_pad, bk), lambda j, kk: (0, kk)),            # x
+            pl.BlockSpec((bk // 8, bn), lambda j, kk: (kk, j)),          # mask
+            pl.BlockSpec((bk // 8, bn), lambda j, kk: (kk, j)),          # sign
+            pl.BlockSpec((bk // 8, bn), lambda j, kk: (kk, j)),          # sres
+            pl.BlockSpec((bk // 4, bn), lambda j, kk: (kk, j)),          # region
+            pl.BlockSpec(
+                (bk // SCALE_GROUP, bn, NUM_SCALES),
+                lambda j, kk: (kk, j, 0),
+            ),                                                           # scales
+        ],
+        out_specs=pl.BlockSpec((m_pad, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m_pad, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, mask_bits, sign_bits, sign_res_bits, region_bits, scales)[:m]
+
+
+def stb_gemv_packed(x: jnp.ndarray, p: PackedLinear, *,
+                    interpret: bool = False, **kw) -> jnp.ndarray:
+    return stb_gemv(x, p.mask_bits, p.sign_bits, p.sign_res_bits,
                     p.region_bits, p.scales, interpret=interpret, **kw)
 
 
@@ -217,18 +361,27 @@ def _stb_gemm_compact_kernel(x_ref, mask_ref, sign_ref, res_ref, reg_ref,
 def stb_gemm_compact(x: jnp.ndarray, p, *, bm: int = DEFAULT_BM,
                      bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
                      interpret: bool = False, out_dtype=None) -> jnp.ndarray:
-    """y = x @ decode(compact-packed W). p: quant.compact.CompactPacked."""
+    """y = x @ decode(compact-packed W). p: quant.compact.CompactPacked.
+
+    Same automatic pad-and-slice / block-fitting contract as ``stb_gemm``.
+    """
     m, k = x.shape
     n = p.n
-    bm = min(bm, m)
-    if m % bm or n % bn or k % bk or bk % SCALE_GROUP:
-        raise ValueError(f"misaligned: M={m}/{bm} N={n}/{bn} K={k}/{bk}")
+    if k % SCALE_GROUP or p.mask_bits.shape[0] * 8 != k:
+        raise ValueError(
+            f"K={k} inconsistent with compact planes (mask rows "
+            f"{p.mask_bits.shape[0]}, scale group {SCALE_GROUP})")
+    bm = min(bm, _round_up(m, _sublane(x.dtype)))
+    m_pad = _round_up(m, bm)
+    x = _pad_rows(x, m_pad)
+    bn = _fit_block(n, bn, 128, allow_any=True)
+    bk = _fit_block(k, bk, SCALE_GROUP)
     nk = k // bk
     out_dtype = out_dtype or x.dtype
     kernel = functools.partial(_stb_gemm_compact_kernel, bk=bk, bn=bn, nk=nk)
     return pl.pallas_call(
         kernel,
-        grid=(m // bm, n // bn, nk),
+        grid=(m_pad // bm, n // bn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk // 8, bn), lambda i, j, kk: (kk, j)),   # mask
@@ -239,9 +392,9 @@ def stb_gemm_compact(x: jnp.ndarray, p, *, bm: int = DEFAULT_BM,
                          lambda i, j, kk: (kk, j, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, p.mask_bits, p.sign_nib, p.res_nib, p.region_b, p.scales)
+    )(x, p.mask_bits, p.sign_nib, p.res_nib, p.region_b, p.scales)[:m]

@@ -1,0 +1,134 @@
+"""On-device autoregressive generation: scan decode loop, O(1) dispatches.
+
+The legacy serve loop drove generation from Python — one jitted decode_step
+dispatch plus a host sync *per token* (and a per-position Python loop for
+prefill), so measured tok/s reflected dispatch latency, not the packed-weight
+HBM roofline the paper argues from. This module compiles the whole request
+into exactly two device computations:
+
+  prefill_fn: Model.prefill (one forward writing KV caches — or a scanned
+              decode for SSM patterns) + sampling of the first token;
+  decode_fn:  a single ``lax.scan`` over the generated positions with
+              donated cache buffers and on-device greedy/temperature
+              sampling. The host syncs once, on the final token block.
+
+Build with ``make_generate(model, ...)``; both returned functions are jitted
+with cache donation so decode runs in-place over the cache buffers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GeneratePipeline:
+    """Two-dispatch generation: ``tokens = run(params, caches, prompts)``."""
+    prefill_fn: Callable
+    decode_fn: Callable
+    prompt_len: int
+    gen_len: int
+
+    def run(self, params, caches, prompts, memory=None,
+            key: jax.Array | None = None):
+        """prompts [B, S] -> generated tokens [B, gen_len] (device array)."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        k1, k2 = jax.random.split(key)
+        tok0, caches = self.prefill_fn(params, caches, prompts, memory, k1)
+        toks, _ = self.decode_fn(params, caches, tok0, memory, k2)
+        return toks
+
+
+def legacy_generate(model, params, caches, prompts, gen_len: int, *,
+                    memory=None, decode_fn: Callable | None = None):
+    """Pre-pipeline reference: per-token Python loop, greedy sampling.
+
+    One jitted decode_step dispatch + a host sync per token — the baseline
+    the scan pipeline replaces. The single implementation backs serve's
+    ``--legacy-loop``, the decode benchmark, and the equivalence test, so
+    the A/B comparison always runs the identical loop. Pass ``decode_fn``
+    (a pre-jitted ``model.decode_step``) to reuse a compile across calls.
+
+    Returns (tokens [B, gen_len] int32 np.ndarray, prefill_s, decode_s).
+    """
+    vocab = model.cfg.vocab
+    decode = decode_fn or jax.jit(model.decode_step)
+    prompts = jnp.asarray(prompts)
+    batch, prompt_len = prompts.shape
+    assert prompt_len > 0, "legacy loop needs at least one prompt token"
+
+    t0 = time.perf_counter()
+    for pos in range(prompt_len):
+        logits, caches = decode(params, caches, prompts[:, pos:pos + 1],
+                                jnp.int32(pos), memory)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+
+    out = np.zeros((batch, gen_len), np.int32)
+    tok = jnp.argmax(logits[:, -1, :vocab], axis=-1)[:, None]
+    t0 = time.perf_counter()
+    for i in range(gen_len):
+        out[:, i] = np.asarray(tok[:, 0])            # per-token host sync
+        logits, caches = decode(params, caches, tok,
+                                jnp.int32(prompt_len + i), memory)
+        tok = jnp.argmax(logits[:, -1, :vocab], axis=-1)[:, None]
+    decode_s = time.perf_counter() - t0
+    return out, prefill_s, decode_s
+
+
+def _make_sampler(vocab: int, temperature: float):
+    def sample(logits, key):
+        logits = logits[:, -1, :vocab]
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
+
+    return sample
+
+
+def make_generate(model, *, prompt_len: int, gen_len: int,
+                  temperature: float = 0.0, prefill_mode: str = "auto",
+                  donate: bool = True) -> GeneratePipeline:
+    """Compile the serve hot path for a fixed (prompt_len, gen_len) shape.
+
+    ``temperature=0`` is greedy argmax; otherwise temperature sampling with
+    per-step folded keys, all on device. ``prefill_mode`` is forwarded to
+    ``Model.prefill`` ("auto" | "fused" | "scan").
+    """
+    vocab = model.cfg.vocab
+    sample = _make_sampler(vocab, temperature)
+
+    def prefill(params, caches, prompts, memory, key):
+        logits, caches = model.prefill(params, caches, prompts, memory,
+                                       mode=prefill_mode)
+        return sample(logits, key), caches
+
+    def decode(params, caches, tok0, memory, key):
+        def step(carry, i):
+            tok, caches = carry
+            logits, caches = model.decode_step(params, caches, tok,
+                                               prompt_len + i, memory)
+            nxt = sample(logits, jax.random.fold_in(key, i))
+            return (nxt, caches), tok[:, 0]
+
+        (_, caches), toks = jax.lax.scan(
+            step, (tok0, caches), jnp.arange(gen_len))
+        # final caches are returned (and aliased onto the donated inputs) so
+        # a follow-up request can continue decoding from pos+gen_len
+        return toks.T, caches                           # [B, gen_len], caches
+
+    # prefill's input caches are freshly-zeroed buffers XLA can't always
+    # alias through the depth scan (a spurious warning); donate only the
+    # decode loop, where in-place cache reuse matters for memory.
+    return GeneratePipeline(
+        prefill_fn=jax.jit(prefill),
+        decode_fn=jax.jit(decode, donate_argnums=(1,) if donate else ()),
+        prompt_len=prompt_len,
+        gen_len=gen_len,
+    )

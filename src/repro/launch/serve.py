@@ -1,12 +1,21 @@
 """Serving launcher: PTQ a model sub-1-bit, then serve batched requests.
 
 This is the deployment story the paper targets: memory-bound autoregressive
-decoding where structured-binary weights cut HBM traffic ~6x. The loop is a
-simple static-batching server: prefill each batch of prompts, then decode
-tokens step-by-step with the KV cache.
+decoding where structured-binary weights cut HBM traffic ~6x. The hot path
+is the on-device pipeline from ``launch/generate.py``: one jitted prefill
+(a single forward pass that writes the KV caches), one jitted ``lax.scan``
+decode loop with donated cache buffers and on-device sampling — two device
+dispatches and one host sync per request batch, so tok/s measures weight
+traffic, not Python dispatch. With ``--packed`` the PTQ'd PackedLinear
+planes are substituted into the param tree and every transformer linear
+decodes sub-1-bit weights on the fly (Pallas kernels on TPU, the
+dequantize-in-HLO path elsewhere).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \
       --n-requests 8 --prompt-len 32 --gen-len 32 --nm 4:8
+
+``--legacy-loop`` keeps the old per-token Python loop for A/B benchmarking
+(benchmarks/decode_bench.py) and the scan-vs-loop equivalence test.
 """
 from __future__ import annotations
 
@@ -18,9 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
-from repro.core.pipeline import quantize_model
+from repro.core.pipeline import pack_model_params, quantize_model
 from repro.core.stbllm import STBConfig
 from repro.data import calibration_batch
+from repro.launch.generate import legacy_generate, make_generate
 from repro.models.model import build_model
 from repro.utils.logging import get_logger
 
@@ -29,13 +39,17 @@ log = get_logger("repro.serve").info
 
 def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           prompt_len: int = 32, gen_len: int = 32, nm: str = "4:8",
-          quantize: bool = True, seed: int = 0, params=None,
-          dtype=jnp.float32) -> dict:
+          quantize: bool = True, packed: bool = False, seed: int = 0,
+          params=None, dtype=jnp.float32, temperature: float = 0.0,
+          legacy_loop: bool = False, prefill_mode: str = "auto") -> dict:
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg, dtype=dtype, remat=False)
     if params is None:
         params = model.init(jax.random.PRNGKey(seed))
 
+    if packed and not quantize:
+        raise ValueError("--packed requires quantization: the packed planes "
+                         "come from the PTQ pass (drop --no-quantize)")
     stats = {}
     if quantize:
         n, m = (int(v) for v in nm.split(":"))
@@ -43,12 +57,17 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         beta = min(128, cfg.d_model)
         t0 = time.time()
         res = quantize_model(model, params, calib,
-                             STBConfig(n=n, m=m, beta=beta))
+                             STBConfig(n=n, m=m, beta=beta), pack=packed)
         params = res.params
-        stats = {"avg_bits": res.avg_bits, "storage_bits": res.storage_bits,
-                 "ptq_seconds": time.time() - t0}
+        if packed:
+            params = pack_model_params(params, res.packed)
+            stats["packed_layers"] = len(res.packed)
+        stats.update({"avg_bits": res.avg_bits,
+                      "storage_bits": res.storage_bits,
+                      "ptq_seconds": time.time() - t0})
         log(f"PTQ {nm}: avg_bits={res.avg_bits:.3f} "
-            f"({stats['ptq_seconds']:.1f}s)")
+            f"({stats['ptq_seconds']:.1f}s"
+            f"{', packed' if packed else ''})")
 
     prompts = np.random.default_rng(seed).integers(
         0, cfg.vocab, (n_requests, prompt_len), dtype=np.int32)
@@ -60,51 +79,62 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         mem = jnp.zeros((n_requests, cfg.vision.n_tokens,
                          cfg.vision.d_vision), dtype)
 
-    # ---- prefill: run the prompt, write KV caches via decode steps --------
-    fwd = jax.jit(lambda p, t, m: model.forward(p, t, m)[0])
-    decode = jax.jit(model.decode_step)
-
     max_len = prompt_len + gen_len
     caches = model.init_cache(n_requests, max_len)
-    t0 = time.time()
-    # teacher-forced cache warmup (decode_step per position keeps one code
-    # path; production prefill lowers model.forward — see launch/steps.py)
-    tok = jnp.asarray(prompts[:, :1])
-    for pos in range(prompt_len):
-        logits, caches = decode(params, caches, jnp.asarray(
-            prompts[:, pos:pos + 1]), jnp.int32(pos), mem)
-    t_prefill = time.time() - t0
 
-    # ---- decode loop -------------------------------------------------------
-    out = np.zeros((n_requests, gen_len), np.int32)
-    tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
-    t0 = time.time()
-    for i in range(gen_len):
-        out[:, i] = np.asarray(tok[:, 0])
-        logits, caches = decode(params, caches, tok,
-                                jnp.int32(prompt_len + i), mem)
-        tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
-    t_decode = time.time() - t0
+    if legacy_loop:
+        if temperature != 0.0:
+            raise ValueError("--legacy-loop is greedy-only; it cannot A/B "
+                             "against temperature sampling")
+        out, t_prefill, t_decode = legacy_generate(
+            model, params, caches, prompts, gen_len, memory=mem)
+        dispatches = prompt_len + gen_len
+    else:
+        pipe = make_generate(model, prompt_len=prompt_len, gen_len=gen_len,
+                             temperature=temperature,
+                             prefill_mode=prefill_mode)
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        t0 = time.time()
+        tok0, caches = pipe.prefill_fn(params, caches,
+                                       jnp.asarray(prompts), mem, k1)
+        jax.block_until_ready(tok0)
+        t_prefill = time.time() - t0
+        t0 = time.time()
+        toks, caches = pipe.decode_fn(params, caches, tok0, mem, k2)
+        out = np.asarray(toks)                      # the single host sync
+        t_decode = time.time() - t0
+        dispatches = 2
+
     tput = n_requests * gen_len / max(t_decode, 1e-9)
     log(f"prefill {t_prefill:.2f}s decode {t_decode:.2f}s "
-        f"({tput:.1f} tok/s batch={n_requests})")
+        f"({tput:.1f} tok/s batch={n_requests} "
+        f"dispatches={dispatches})")
     return {"tokens": out, "throughput": tput, "prefill_s": t_prefill,
-            "decode_s": t_decode, **stats}
+            "decode_s": t_decode, "dispatches": dispatches, **stats}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false",
+                    help="serve the full-size config (not the CPU smoke one)")
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--nm", default="4:8")
     ap.add_argument("--no-quantize", dest="quantize", action="store_false")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve from PackedLinear planes (sub-1-bit weights)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="per-token Python loop (pre-pipeline baseline)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.n_requests,
           prompt_len=args.prompt_len, gen_len=args.gen_len, nm=args.nm,
-          quantize=args.quantize)
+          quantize=args.quantize, packed=args.packed,
+          temperature=args.temperature, legacy_loop=args.legacy_loop)
 
 
 if __name__ == "__main__":

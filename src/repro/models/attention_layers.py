@@ -136,6 +136,36 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig):
     return y, cache
 
 
+def gqa_prefill(params: dict, x: jnp.ndarray, cache: dict, cfg: GQAConfig,
+                q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Full-prompt forward that also writes K/V for positions [0, S) into the
+    cache — the single-dispatch prefill of the decode pipeline. Attention
+    itself runs on the exact (unquantized) K/V; only the cache stores int8
+    when kv_quant is on."""
+    b, s, _ = x.shape
+    with scope("attn"):
+        positions = jnp.arange(s)[None, :]
+        q, k, v = _qkv(params, x, cfg, positions)
+        upd = lambda c, new: jax.lax.dynamic_update_slice_in_dim(
+            c, new.astype(c.dtype), 0, axis=1)
+        if "k_scale" in cache:
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            cache = {
+                "k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, 0, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, 0, axis=1),
+            }
+        else:
+            cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+        o = flash_attention(q, k, v, causal=cfg.causal,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        y = dense(params["wo"], o.reshape(b, s, -1), "wo")
+    return y, cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -215,6 +245,26 @@ def mla_init_cache(cfg: MLAConfig, batch: int, max_len: int, dtype) -> dict:
         "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
     }
+
+
+def mla_prefill(params: dict, x: jnp.ndarray, cache: dict, cfg: MLAConfig,
+                q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Full-prompt MLA forward that also writes the latent cache [0, S)."""
+    b, s, _ = x.shape
+    with scope("mla"):
+        positions = jnp.arange(s)[None, :]
+        ckv_t = rmsnorm(params["kv_norm"], dense(params["wkv_a"], x, "wkv_a"))
+        k_rope_t = apply_rope(
+            dense(params["wk_rope"], x, "wk_rope"), positions, cfg.rope_theta)
+        cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv_t.astype(cache["ckv"].dtype), 0, axis=1),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), 0,
+                axis=1),
+        }
+    y = mla_apply(params, x, cfg, q_chunk, kv_chunk)
+    return y, cache
 
 
 def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):

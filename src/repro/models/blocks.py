@@ -166,6 +166,57 @@ def block_init_cache(spec: BlockSpec, dims: BlockDims, batch: int,
     return {"mixer": c}
 
 
+PREFILL_MIXERS = ("attn", "mla")  # mixers with a parallel cache-writing path
+
+
+def block_prefill(
+    params: dict,
+    x: jnp.ndarray,             # [B, S, D] — the whole prompt
+    cache: dict,
+    spec: BlockSpec,
+    dims: BlockDims,
+    *,
+    mem_kv_src: jnp.ndarray | None = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+):
+    """Full-prompt forward that writes the block's KV cache in one shot.
+
+    Only attention-family mixers support this (SSM mixers need their
+    sequential state; Model.prefill falls back to a scanned decode for
+    those patterns). Returns (y [B, S, D], cache).
+    """
+    assert spec.mixer in PREFILL_MIXERS, spec.mixer
+    h = _norm(dims, params["norm1"], x)
+    if spec.mixer == "attn":
+        cfg = al.GQAConfig(
+            d=dims.d, n_heads=dims.n_heads, n_kv_heads=dims.n_kv_heads,
+            head_dim=dims.head_dim, rope_theta=dims.rope_theta,
+            causal=spec.causal,
+        )
+        h, c = al.gqa_prefill(params["mixer"], h, cache["mixer"], cfg,
+                              q_chunk, kv_chunk)
+    else:
+        h, c = al.mla_prefill(params["mixer"], h, cache["mixer"], dims.mla,
+                              q_chunk, kv_chunk)
+    x = x + h
+    if spec.xattn:
+        assert mem_kv_src is not None, "xattn block needs memory"
+        hx = _norm(dims, params["xattn_norm"], x)
+        mem_kv = al.xattn_memory(params["xattn"], mem_kv_src, dims.xattn_cfg)
+        x = x + al.xattn_apply(params["xattn"], hx, mem_kv, dims.xattn_cfg)
+    if spec.ffn is not None:
+        h2 = _norm(dims, params["norm2"], x)
+        if spec.ffn == "swiglu":
+            h2 = swiglu(params["ffn"], h2)
+        elif spec.ffn == "gelu":
+            h2 = gelu_mlp(params["ffn"], h2)
+        else:
+            h2, _ = moe_apply(params["ffn"], h2, dims.moe)
+        x = x + h2
+    return x, {"mixer": c}
+
+
 def block_decode(
     params: dict,
     x: jnp.ndarray,             # [B, 1, D]

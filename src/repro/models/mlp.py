@@ -1,10 +1,16 @@
-"""Feed-forward variants: SwiGLU (llama family) and GeLU (whisper/gpt style)."""
+"""Feed-forward variants: SwiGLU (llama family) and GeLU (whisper/gpt style).
+
+When all three SwiGLU projections are ``PackedLinear`` (structured-binary
+serving), the whole FFN routes through ``repro.kernels.ops.stb_swiglu`` — on
+TPU that is the fused packed kernel that decodes Wg/Wu/Wd bit-planes in VMEM,
+so decode-time FFN HBM traffic is packed bytes + x + y.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.modules import KeyGen, dense, dense_init, scope
+from repro.models.modules import KeyGen, dense, dense_init, packed_leaf, scope
 
 
 def swiglu_init(kg: KeyGen, d: int, d_ff: int, dtype=jnp.float32) -> dict:
@@ -16,6 +22,12 @@ def swiglu_init(kg: KeyGen, d: int, d_ff: int, dtype=jnp.float32) -> dict:
 
 
 def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    pg = packed_leaf(params["wi_gate"])
+    pu = packed_leaf(params["wi_up"])
+    pd = packed_leaf(params["wo"])
+    if pg is not None and pu is not None and pd is not None:
+        from repro.kernels.ops import stb_swiglu
+        return stb_swiglu(x, pg, pu, pd)
     with scope("mlp"):
         gate = dense(params["wi_gate"], x, "wi_gate")
         up = dense(params["wi_up"], x, "wi_up")

@@ -24,12 +24,14 @@ from repro.models import attention_layers as al
 from repro.models import mamba as mb
 from repro.models import xlstm as xl
 from repro.models.blocks import (
+    PREFILL_MIXERS,
     BlockDims,
     BlockSpec,
     block_apply,
     block_decode,
     block_init,
     block_init_cache,
+    block_prefill,
 )
 from repro.models.modules import (
     KeyGen,
@@ -290,6 +292,85 @@ class Model:
                 lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), c)
 
         return tuple(one(spec) for spec in self.pattern)
+
+    # -------------------------------------------------------------- prefill
+    @property
+    def can_fused_prefill(self) -> bool:
+        """Whether every mixer in the pattern writes its cache in parallel."""
+        return all(s.mixer in PREFILL_MIXERS for s in self.pattern)
+
+    def prefill(self, params: dict, caches: tuple, tokens: jnp.ndarray,
+                memory: jnp.ndarray | None = None, mode: str = "auto"):
+        """Run the whole prompt in one device computation, writing KV caches.
+
+        tokens: [B, S] -> (logits, caches) ready for decode at pos = S.
+
+        mode "fused" lowers one forward pass whose attention blocks also
+        write K/V for positions [0, S) — logits are [B, S, V]. mode "scan"
+        runs a ``lax.scan`` of decode_step over positions (the sequential
+        fallback SSM/hybrid patterns need) — logits are last-position
+        [B, 1, V]. "auto" picks fused whenever the pattern supports it.
+        Both are single-dispatch under jit; callers should only rely on
+        ``logits[:, -1]``.
+        """
+        if mode == "auto":
+            mode = "fused" if self.can_fused_prefill else "scan"
+        if mode == "scan":
+            return self._prefill_scan(params, caches, tokens, memory)
+        assert self.can_fused_prefill, \
+            f"pattern {self.pattern} has no fused prefill; use mode='scan'"
+        mem = self._memory(params, memory)
+        x = embed(params["embed"], tokens).astype(self.dtype)
+        x = self._constrain(x)
+
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            new_cache = []
+            for p, spec in enumerate(self.pattern):
+                with scope(f"block{p}"):
+                    x, c = block_prefill(
+                        layer_params[p], x, layer_cache[p], spec, self.dims,
+                        mem_kv_src=mem, q_chunk=self.q_chunk,
+                        kv_chunk=self.kv_chunk)
+                x = self._constrain(x)
+                new_cache.append(c)
+            return x, tuple(new_cache)
+
+        if self.unroll:
+            per_group = []
+            for g in range(self.n_groups):
+                xs = jax.tree.map(lambda a: a[g], (params["blocks"], caches))
+                x, c = body(x, xs)
+                per_group.append(c)
+            new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *per_group)
+        else:
+            x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        x = self._norm(params["final_norm"], x)
+        logits = unembed(params["lm_head"], x)
+        logits = self._constrain(logits, vocab_dim=True)
+        return logits, new_caches
+
+    def _prefill_scan(self, params: dict, caches: tuple, tokens: jnp.ndarray,
+                      memory: jnp.ndarray | None = None):
+        """Sequential prefill: decode_step per position inside one lax.scan.
+
+        Numerically identical to the legacy per-token Python loop (same ops,
+        same order) but a single device computation. Works for every mixer,
+        including SSM/hybrid states.
+        """
+        b, s = tokens.shape
+        logits0 = jnp.zeros((b, 1, self.cfg.vocab_padded), jnp.float32)
+
+        def step(carry, pos):
+            caches, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, pos, 1, axis=1)
+            logits, caches = self.decode_step(params, caches, tok, pos,
+                                              memory)
+            return (caches, logits), None
+
+        (caches, logits), _ = jax.lax.scan(
+            step, (caches, logits0), jnp.arange(s))
+        return logits, caches
 
     def decode_step(self, params: dict, caches: tuple, token: jnp.ndarray,
                     pos, memory: jnp.ndarray | None = None):

@@ -83,6 +83,12 @@ def dense_init(kg: KeyGen, d_in: int, d_out: int, dtype=jnp.float32,
     return {"w": w.astype(dtype)}
 
 
+def packed_leaf(params: dict) -> PackedLinear | None:
+    """The layer's PackedLinear if it was swapped to sub-1-bit serving."""
+    w = params.get("w")
+    return w if isinstance(w, PackedLinear) else None
+
+
 def dense(params: dict, x: jnp.ndarray, name: str = "dense") -> jnp.ndarray:
     """y = x @ W — dense or structured-binary depending on the param leaf."""
     w = params["w"]

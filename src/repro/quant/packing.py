@@ -104,7 +104,7 @@ def abstract_pack_params(shapes_tree, skip=("embed", "lm_head", "vision_proj",
         if not hasattr(leaf, "ndim") or leaf.ndim < 2:
             return leaf
         *lead, k, n = leaf.shape
-        if k % SCALE_GROUP or n % 8:
+        if not packable(k, n):
             return leaf
         lead = tuple(lead)
         sds = jax.ShapeDtypeStruct
@@ -157,6 +157,27 @@ def pack_quantized_layer(ql) -> PackedLinear:
         region_bits=jnp.asarray(_pack_2bit(regions)),
         scales=jnp.asarray(scales),
         k=k, n=n, n_m=tuple(ql.n_m),
+    )
+
+
+def packable(k: int, n: int) -> bool:
+    """Whether a [K, N] weight admits the packed layout (alignment only)."""
+    return k % SCALE_GROUP == 0 and n % 8 == 0
+
+
+def stack_packed(packs: list[PackedLinear]) -> PackedLinear:
+    """Stack per-group PackedLinears along a new leading axis.
+
+    The result mirrors the [G, ...] scan-stacked dense leaves: ``lax.scan``
+    / ``tree.map(lambda a: a[g], ...)`` slice the planes back to per-group
+    PackedLinears (aux k/n/n_m is shared and static).
+    """
+    first = packs[0]
+    assert all((p.k, p.n) == (first.k, first.n) for p in packs), "ragged stack"
+    return PackedLinear(
+        **{f: jnp.stack([getattr(p, f) for p in packs])
+           for f in PackedLinear._FIELDS},
+        k=first.k, n=first.n, n_m=first.n_m,
     )
 
 

@@ -55,3 +55,58 @@ def test_traffic_model_monotone():
     unf = ffn_hbm_bytes(81000, 6144, 10752, fused=False)
     fus = ffn_hbm_bytes(81000, 6144, 10752, fused=True)
     assert fus < unf / 3  # the §Perf claim: ~4x FFN traffic cut
+
+
+# ------------------------------------------------------------ packed variant
+def _packed_case(rng, d=128, d_ff=384):
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from test_kernels import random_packed
+    return (random_packed(rng, d, d_ff), random_packed(rng, d, d_ff),
+            random_packed(rng, d_ff, d))
+
+
+@pytest.mark.parametrize("rows", [1, 3, 8, 64])
+def test_packed_matches_oracle(rng, rows):
+    from repro.kernels.fused_ffn import (
+        fused_swiglu_packed, fused_swiglu_packed_ref)
+    pg, pu, pd = _packed_case(rng)
+    x = jnp.asarray(rng.normal(size=(rows, 128)) * 0.1, jnp.float32)
+    yk = fused_swiglu_packed(x, pg, pu, pd, interpret=True)
+    yr = fused_swiglu_packed_ref(x, pg, pu, pd)
+    assert yk.shape == (rows, 128)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_packed_block_sweep(rng):
+    from repro.kernels.fused_ffn import (
+        fused_swiglu_packed, fused_swiglu_packed_ref)
+    pg, pu, pd = _packed_case(rng, d=128, d_ff=512)
+    x = jnp.asarray(rng.normal(size=(16, 128)) * 0.1, jnp.float32)
+    yr = fused_swiglu_packed_ref(x, pg, pu, pd)
+    for bf in (128, 256, 512):
+        yk = fused_swiglu_packed(x, pg, pu, pd, bf=bf, interpret=True)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_packed_shape_mismatch_raises(rng):
+    from repro.kernels.fused_ffn import fused_swiglu_packed
+    pg, pu, pd = _packed_case(rng)
+    x = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)  # wrong d
+    with pytest.raises(ValueError):
+        fused_swiglu_packed(x, pg, pu, pd, interpret=True)
+
+
+def test_mlp_swiglu_routes_packed(rng):
+    """models.mlp.swiglu dispatches whole-FFN when all leaves are packed."""
+    from repro.kernels.fused_ffn import fused_swiglu_packed_ref
+    from repro.models.mlp import swiglu
+    pg, pu, pd = _packed_case(rng)
+    x = jnp.asarray(rng.normal(size=(2, 5, 128)) * 0.1, jnp.float32)
+    y = swiglu({"wi_gate": {"w": pg}, "wi_up": {"w": pu}, "wo": {"w": pd}}, x)
+    yr = fused_swiglu_packed_ref(x.reshape(-1, 128), pg, pu, pd)
+    assert y.shape == (2, 5, 128)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 128),
+                               np.asarray(yr), rtol=1e-4, atol=1e-5)

@@ -110,6 +110,63 @@ def test_kernel_misaligned_raises(rng):
         stb_gemm_packed(x, p, interpret=True)
 
 
+# ---------------------------------------------------- pad-and-slice fallback
+@pytest.mark.parametrize("m", [1, 3, 7, 33, 130])
+def test_kernel_odd_batch_pad_and_slice(rng, m):
+    """Regression: odd M (e.g. batch=3 decode) must pad-and-slice, not raise."""
+    p = random_packed(rng, 256, 128)
+    x = jnp.asarray(rng.normal(size=(m, 256)), jnp.float32)
+    y_ker = stb_gemm_packed(x, p, interpret=True)
+    y_ref = stb_matmul_ref(x, p)
+    assert y_ker.shape == (m, 128)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_odd_n_block_fit(rng):
+    """N with no 128-multiple divisor falls back to a plain divisor block."""
+    p = random_packed(rng, 128, 192)
+    x = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(stb_gemm_packed(x, p, interpret=True)),
+        np.asarray(stb_matmul_ref(x, p)), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- small-M GEMV variant
+@pytest.mark.parametrize("m", [1, 3, 8, 64, 128])
+def test_gemv_matches_oracle(rng, m):
+    from repro.kernels.stb_gemm import stb_gemv_packed
+    p = random_packed(rng, 256, 256)
+    x = jnp.asarray(rng.normal(size=(m, 256)), jnp.float32)
+    y_ker = stb_gemv_packed(x, p, interpret=True)
+    y_ref = stb_matmul_ref(x, p)
+    assert y_ker.shape == (m, 256)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_wide_blocks(rng):
+    from repro.kernels.stb_gemm import stb_gemv_packed
+    p = random_packed(rng, 512, 512)
+    x = jnp.asarray(rng.normal(size=(8, 512)), jnp.float32)
+    y_ker = stb_gemv_packed(x, p, interpret=True, bn=512, bk=256)
+    np.testing.assert_allclose(np.asarray(y_ker),
+                               np.asarray(stb_matmul_ref(x, p)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_heuristic_table():
+    """Decode-shaped M routes to the GEMV variant; large M to tiled GEMM."""
+    from repro.kernels.ops import select_stb_blocks
+    for m in (1, 8, 128):
+        variant, blocks = select_stb_blocks(m)
+        assert variant == "gemv" and "bm" not in blocks
+    variant, blocks = select_stb_blocks(256)
+    assert variant == "gemm" and blocks["bm"] == 128
+    # wider tiles for smaller M (amortize per-tile plane decode)
+    assert select_stb_blocks(1)[1]["bn"] >= select_stb_blocks(128)[1]["bn"]
+
+
 # ------------------------------------------------------------- ops wrapper
 def test_stb_matmul_impl_dispatch(rng):
     p = random_packed(rng, 128, 128)
