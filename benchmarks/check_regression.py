@@ -1,0 +1,107 @@
+"""CI regression gate over the committed benchmark baselines.
+
+Compares a freshly measured benchmark json (``BENCH_decode.json`` /
+``BENCH_serving.json``) against the committed baseline and exits non-zero —
+failing the CI job — when either:
+
+  * any throughput leaf (a key named ``tok_s`` or ``throughput_tok_s``)
+    drops more than ``--threshold`` (default 25%) below the baseline, or
+  * any correctness flag (a bool leaf whose key contains ``match``) is false
+    in the fresh run — packed-vs-dense or continuous-vs-static output
+    divergence is never tolerable, whatever the baseline says.
+
+Throughputs are compared leaf-by-leaf at the same json path, so adding new
+cells to a benchmark doesn't trip the gate (no baseline -> skipped, listed
+as NEW). A missing baseline file passes with a warning: the first run on a
+branch has nothing to regress against.
+
+  python -m benchmarks.check_regression BASELINE FRESH [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+THROUGHPUT_KEYS = ("tok_s", "throughput_tok_s")
+
+
+def _walk(tree, path=()):
+    """Yield (path, leaf) for every non-dict leaf of a nested json dict."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (k,))
+    else:
+        yield path, tree
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list, list]:
+    """Returns (failures, notes) — failure lines mean the gate must fail."""
+    failures, notes = [], []
+    base_leaves = dict(_walk(baseline))
+    fresh_leaves = dict(_walk(fresh))
+
+    # a gated leaf vanishing from the fresh run is itself a failure —
+    # otherwise renaming a cell (or dropping a match flag) blinds the gate
+    for path, value in base_leaves.items():
+        gated = path and (path[-1] in THROUGHPUT_KEYS
+                          or ("match" in path[-1] and isinstance(value, bool)))
+        if gated and path not in fresh_leaves:
+            failures.append(
+                f"GONE {'/'.join(path)}: gated leaf missing from fresh run")
+
+    for path, value in _walk(fresh):
+        name = "/".join(path)
+        if path and path[-1] in THROUGHPUT_KEYS:
+            base = base_leaves.get(path)
+            if base is None:
+                notes.append(f"NEW  {name}: {value:.1f} (no baseline)")
+            elif value < base * (1.0 - threshold):
+                failures.append(
+                    f"PERF {name}: {value:.1f} tok/s vs baseline "
+                    f"{base:.1f} (-{(1 - value / base) * 100:.0f}%, "
+                    f"threshold {threshold * 100:.0f}%)")
+            else:
+                notes.append(
+                    f"OK   {name}: {value:.1f} vs {base:.1f} "
+                    f"({(value / base - 1) * 100:+.0f}%)")
+        elif path and "match" in path[-1] and isinstance(value, bool):
+            if value:
+                notes.append(f"OK   {name}: outputs match")
+            else:
+                failures.append(f"CORR {name}: output mismatch in fresh run")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("fresh", help="freshly measured json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional tok/s drop (default 0.25)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to regress against")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, notes = compare(baseline, fresh, args.threshold)
+    for line in notes:
+        print(line)
+    for line in failures:
+        print(line)
+    if failures:
+        print(f"\nREGRESSION GATE FAILED: {len(failures)} failure(s) "
+              f"comparing {args.fresh} against {args.baseline}")
+        return 1
+    print(f"\nregression gate passed ({args.fresh} vs {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,15 +13,13 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import replace
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig
-from repro.data import DataLoader, LoaderConfig, calibration_batch
+from repro.data import DataLoader, LoaderConfig
 from repro.launch.steps import make_train_step
 from repro.models.loss import lm_loss, perplexity
 from repro.models.model import Model, build_model

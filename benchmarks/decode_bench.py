@@ -119,6 +119,18 @@ def decode_pipeline_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
             cell[name] = {"decode_seconds": s, "tok_s": tput}
             rows.add(f"decode/pipeline/{name}/batch{batch}", s * 1e6,
                      f"tok_s={tput:.1f}")
+        # correctness flag the CI regression gate fails on: packed planes
+        # must decode to the dequantized-dense tokens exactly (greedy)
+        t_dense = pipe.run(res.params,
+                           model.init_cache(batch, PROMPT_LEN + GEN_LEN),
+                           prompts)
+        t_packed = pipe.run(packed_params,
+                            model.init_cache(batch, PROMPT_LEN + GEN_LEN),
+                            prompts)
+        cell["packed_dense_match"] = bool(
+            np.array_equal(np.asarray(t_dense), np.asarray(t_packed)))
+        rows.add(f"decode/match/packed_vs_dense/batch{batch}", 0,
+                 str(cell["packed_dense_match"]))
         results["pipeline"][f"batch{batch}"] = cell
 
     # the pre-PR baseline this tentpole replaces: Python loop, packed (jnp)

@@ -4,6 +4,7 @@
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only table2 fig4
   PYTHONPATH=src python -m benchmarks.run --only decode   # BENCH_decode.json
+  PYTHONPATH=src python -m benchmarks.run --only serving  # BENCH_serving.json
 
 Prints ``name,us_per_call,derived`` CSV lines; the trained tiny-LM substrate
 is cached under experiments/bench_model/ (first run trains it, ~1 min CPU).
@@ -18,7 +19,13 @@ import argparse
 import sys
 import time
 
-from benchmarks import decode_bench, kernel_bench, roofline_report, tables
+from benchmarks import (
+    decode_bench,
+    kernel_bench,
+    roofline_report,
+    serving_bench,
+    tables,
+)
 from benchmarks.common import Row, get_bench_model
 
 
@@ -27,7 +34,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode")
+                         "decode serving")
     args = ap.parse_args(argv)
 
     rows = Row()
@@ -70,6 +77,8 @@ def main(argv=None) -> int:
         roofline_report.roofline_table(rows)
     if want("decode"):
         decode_bench.decode_pipeline_bench(rows)
+    if want("serving"):
+        serving_bench.serving_bench(rows)
     return 0
 
 

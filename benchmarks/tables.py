@@ -7,16 +7,11 @@ are printed as CSV and returned as dicts so run.py can assemble the report.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (
-    BENCH_CFG, Row, calib_tokens, eval_ppl, eval_top1, get_bench_model,
-    timeit)
-from repro.core import STBConfig, average_bits, storage_bits
+from benchmarks.common import BENCH_CFG, Row, calib_tokens, eval_ppl, eval_top1
+from repro.core import STBConfig, storage_bits
 from repro.core.baselines import baseline_quantizer
 from repro.core.pipeline import quantize_model
 from repro.core.flip import flip_signs

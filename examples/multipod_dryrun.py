@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
 
-from repro.launch.dryrun import run_cell, save_rec
+from repro.launch.dryrun import run_cell
 
 
 def main():

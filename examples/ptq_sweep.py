@@ -4,7 +4,8 @@ N:8 settings.
 
     PYTHONPATH=src python examples/ptq_sweep.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 

@@ -7,10 +7,10 @@ Hessian salient-column residual binarization, trisection of the non-salient
 weights, block-wise OBC — then packs the result into bit-planes and runs the
 Pallas structured-binary GEMM (interpret mode on CPU) against the oracle.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

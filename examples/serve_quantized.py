@@ -6,12 +6,12 @@ to sub-1-bit with STBLLM, and serve batched generation requests.
 Reports perplexity before/after quantization and decode throughput — the
 memory-bound serving regime where structured-binary weights pay off.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
 
-import jax.numpy as jnp
 
 from repro.launch.serve import serve
 from repro.launch.train import train

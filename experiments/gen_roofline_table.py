@@ -1,26 +1,33 @@
 """Regenerate experiments/roofline_table.md from dryrun JSONs (all tags/meshes)."""
-import json, os, sys
+import json
+import os
 d = os.path.join(os.path.dirname(__file__), "dryrun")
 rows = []
 for fn in sorted(os.listdir(d)):
     if fn.endswith(".json"):
         rows.append(json.load(open(os.path.join(d, fn))))
-def ms(x): return f"{x*1e3:,.1f}ms"
-print("| arch | shape | mesh | tag | t_compute | t_memory | t_collective | bound | useful | roofline | bytes/dev |")
+def ms(x):
+    return f"{x*1e3:,.1f}ms"
+print("| arch | shape | mesh | tag | t_compute | t_memory | t_collective "
+      "| bound | useful | roofline | bytes/dev |")
 print("|---|---|---|---|---|---|---|---|---|---|---|")
 for r in rows:
     tag = r.get("tag") or ""
     if r["status"] == "skipped":
-        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | — | — | — | skipped ({r['reason'][:40]}…) | — | — | — |")
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | — | — | — "
+              f"| skipped ({r['reason'][:40]}…) | — | — | — |")
         continue
     if r["status"] != "ok":
         print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | ERROR | | | | | | |")
         continue
     f = r["roofline"]
-    mem = r["memory"]; dev = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+    mem = r["memory"]
+    dev = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
     useful = f"{f['flops_ratio']*100:.0f}%" if f.get("flops_ratio") else "n/a"
-    rl = f"{f['roofline_fraction']*100:.1f}%" if f.get("roofline_fraction") is not None else "n/a"
+    rl = (f"{f['roofline_fraction']*100:.1f}%"
+          if f.get("roofline_fraction") is not None else "n/a")
     if r["mesh"] != "16x16" or not r.get("scan_body_costs"):
         useful, rl = "n/c", "n/c"   # costing (scan extrapolation) 16x16-only
-    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} | {ms(f['t_compute'])} | {ms(f['t_memory'])} | "
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tag} "
+          f"| {ms(f['t_compute'])} | {ms(f['t_memory'])} | "
           f"{ms(f['t_collective'])} | {f['bottleneck']} | {useful} | {rl} | {dev:.1f}GiB |")

@@ -24,7 +24,6 @@ import hashlib
 import json
 import os
 import shutil
-import tempfile
 import threading
 from typing import Any
 

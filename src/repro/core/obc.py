@@ -8,7 +8,7 @@ compensation update  W[:, b+beta:] -= E @ Hc[b:b+beta, b+beta:].
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Protocol
+from typing import Any, Callable
 
 import jax.numpy as jnp
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.binary import binarize, sign_pm1
+from repro.core.binary import binarize
 
 SIGMA = 2.0  # p2 = SIGMA * p1 (paper Appendix A)
 NUM_POINTS = 160  # paper: np.linspace(0.1, 0.9, 160)

@@ -10,6 +10,12 @@ Layout: q [B, KH, G, D] (GQA groups folded), k/v int8 [B, S, KH, D],
 scales f32 [B, S, KH]. Grid (B, KH, S/bs): the S axis is innermost and
 "arbitrary" (sequential) so the online-softmax scratch carries across chunks.
 
+``cache_len`` is a scalar (static decode: every sequence is the same length)
+or a [B] vector of per-slot lengths — the continuous-batching serve loop
+(repro.serving) packs requests at different positions into one batch, and the
+per-(batch, kv-head) length mask here is what keeps retired/empty slots from
+attending beyond their own cache region.
+
 Validated against ref.py's pure-jnp oracle in interpret mode (tests).
 """
 from __future__ import annotations

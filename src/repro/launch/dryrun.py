@@ -20,8 +20,6 @@ import sys
 import time
 import traceback
 
-import jax
-
 from repro.analysis.roofline import roofline_from_lowered
 from repro.configs import SHAPES
 from repro.configs.registry import ASSIGNED, get_config

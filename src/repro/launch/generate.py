@@ -132,3 +132,49 @@ def make_generate(model, *, prompt_len: int, gen_len: int,
         prompt_len=prompt_len,
         gen_len=gen_len,
     )
+
+
+def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
+                        donate: bool = True) -> Callable:
+    """Compile a fixed-size decode chunk over per-slot positions.
+
+    The continuous-batching serve loop (repro.serving) can't scan a whole
+    request's gen_len in one dispatch — it has to come back to the host every
+    ``chunk_steps`` tokens to retire finished slots and admit queued prompts.
+    This builds that inner loop: one jitted ``lax.scan`` of ``chunk_steps``
+    decode_steps where every batch row is an independent KV slot.
+
+    Returned fn signature::
+
+        toks, valid, tok, caches, pos, remaining = chunk_fn(
+            params, caches, tok, pos, remaining, memory, key)
+
+    with ``tok`` [B, 1] the last sampled token per slot, ``pos`` [B] the next
+    cache position per slot, and ``remaining`` [B] the tokens each slot still
+    owes. Each step emits the carried token, runs ``model.decode_step`` at
+    the per-slot positions, and advances only rows with ``remaining > 0`` —
+    finished and empty slots keep computing (the batch shape is static) but
+    their positions freeze, their emissions are marked invalid, and the
+    per-slot attention mask keeps them inert. ``toks``/``valid`` come back as
+    [B, chunk_steps].
+    """
+    sample = _make_sampler(model.cfg.vocab, temperature)
+
+    def chunk(params, caches, tok, pos, remaining, memory, key):
+        def step(carry, i):
+            tok, caches, pos, rem = carry
+            active = rem > 0
+            emit = tok[:, 0]
+            logits, caches = model.decode_step(params, caches, tok, pos,
+                                               memory)
+            nxt = sample(logits, jax.random.fold_in(key, i))
+            tok = jnp.where(active[:, None], nxt, tok)
+            pos = pos + active.astype(pos.dtype)
+            rem = rem - active.astype(rem.dtype)
+            return (tok, caches, pos, rem), (emit, active)
+
+        (tok, caches, pos, rem), (toks, valid) = jax.lax.scan(
+            step, (tok, caches, pos, remaining), jnp.arange(chunk_steps))
+        return toks.T, valid.T, tok, caches, pos, rem
+
+    return jax.jit(chunk, donate_argnums=(1,) if donate else ())

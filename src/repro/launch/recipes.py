@@ -9,7 +9,7 @@ launchers and the dry-run pick the measured winner by default.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

@@ -16,6 +16,14 @@ dequantize-in-HLO path elsewhere).
 
 ``--legacy-loop`` keeps the old per-token Python loop for A/B benchmarking
 (benchmarks/decode_bench.py) and the scan-vs-loop equivalence test.
+
+``--continuous`` serves through the slot-pooled continuous-batching loop
+(repro.serving): requests are admitted into ``--n-slots`` KV slots as they
+free up, decoded in jitted chunks of ``--chunk-steps`` steps at per-slot
+positions, and retired independently — mixed gen lengths (``--gen-lens
+8,16,32`` cycles over requests) finish out of order instead of padding to
+the longest. At temperature 0 each request's tokens are identical to the
+static pipeline's.
 """
 from __future__ import annotations
 
@@ -41,7 +49,16 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           prompt_len: int = 32, gen_len: int = 32, nm: str = "4:8",
           quantize: bool = True, packed: bool = False, seed: int = 0,
           params=None, dtype=jnp.float32, temperature: float = 0.0,
-          legacy_loop: bool = False, prefill_mode: str = "auto") -> dict:
+          legacy_loop: bool = False, prefill_mode: str = "auto",
+          continuous: bool = False, n_slots: int = 4, chunk_steps: int = 8,
+          gen_lens: tuple[int, ...] | None = None) -> dict:
+    if continuous and legacy_loop:
+        raise ValueError("--continuous and --legacy-loop are exclusive "
+                         "serve loops")
+    if gen_lens is not None and not continuous:
+        raise ValueError("--gen-lens (mixed gen lengths) needs --continuous; "
+                         "the static pipeline pads every request to one "
+                         "gen_len")
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg, dtype=dtype, remat=False)
     if params is None:
@@ -78,6 +95,24 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
     if cfg.vision is not None:
         mem = jnp.zeros((n_requests, cfg.vision.n_tokens,
                          cfg.vision.d_vision), dtype)
+
+    if continuous:
+        from repro.serving import ContinuousBatcher, Request
+
+        lens = tuple(gen_lens) if gen_lens else (gen_len,)
+        requests = [
+            Request(rid=i, prompt=prompts[i],
+                    max_new_tokens=lens[i % len(lens)])
+            for i in range(n_requests)
+        ]
+        batcher = ContinuousBatcher(
+            model, params, n_slots=n_slots, prompt_len=prompt_len,
+            max_new_tokens=max(lens), chunk_steps=chunk_steps,
+            temperature=temperature, prefill_mode=prefill_mode, seed=seed)
+        report = batcher.run(requests, wait_for_arrivals=False)
+        return {"tokens": report.tokens_by_rid(),
+                "throughput": report.throughput_tok_s,
+                "report": report.summary(), **stats}
 
     max_len = prompt_len + gen_len
     caches = model.init_cache(n_requests, max_len)
@@ -130,11 +165,24 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--legacy-loop", action="store_true",
                     help="per-token Python loop (pre-pipeline baseline)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-pooled continuous batching (repro.serving)")
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="decode slots in the continuous KV pool (B_max)")
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="decode steps per chunk between admit/retire passes")
+    ap.add_argument("--gen-lens", default=None,
+                    help="comma-separated gen lengths cycled over requests "
+                         "(--continuous only), e.g. 8,16,32")
     args = ap.parse_args()
+    gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
+                if args.gen_lens else None)
     serve(args.arch, smoke=args.smoke, n_requests=args.n_requests,
           prompt_len=args.prompt_len, gen_len=args.gen_len, nm=args.nm,
           quantize=args.quantize, packed=args.packed,
-          temperature=args.temperature, legacy_loop=args.legacy_loop)
+          temperature=args.temperature, legacy_loop=args.legacy_loop,
+          continuous=args.continuous, n_slots=args.n_slots,
+          chunk_steps=args.chunk_steps, gen_lens=gen_lens)
 
 
 if __name__ == "__main__":

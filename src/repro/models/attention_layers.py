@@ -17,6 +17,36 @@ from repro.models.modules import KeyGen, dense, dense_init, rmsnorm, rmsnorm_ini
 from repro.models.rope import apply_rope
 
 
+def _pos_ids(pos, batch: int) -> jnp.ndarray:
+    """Decode position(s) -> [B, 1] int32 position ids.
+
+    ``pos`` is either a scalar (the static pipeline: every sequence sits at
+    the same position) or a [B] vector (continuous batching: each KV slot has
+    its own length, so each row ropes/writes/masks at its own position).
+    """
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        return jnp.full((batch, 1), p, jnp.int32)
+    return p.reshape(batch, 1)
+
+
+def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos,
+                 axis: int = 1) -> jnp.ndarray:
+    """Write a length-1 update at ``pos`` along ``axis`` (batch is axis 0).
+
+    Scalar ``pos`` keeps the single dynamic_update_slice the static decode
+    loop compiles to; a [B] ``pos`` scatters each row at its own slot
+    position (vmapped per-row update — no cross-row traffic).
+    """
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), p, axis=axis)
+    per_row = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), i, axis=axis - 1)
+    return jax.vmap(per_row)(cache, new, p.reshape(-1))
+
+
 # ---------------------------------------------------------------------------
 # GQA / MQA / MHA
 # ---------------------------------------------------------------------------
@@ -97,22 +127,20 @@ def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 
 def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig):
-    """x: [B,1,D]; ``pos``: scalar index of this token. Returns (y, cache)."""
+    """x: [B,1,D]; ``pos``: scalar index of this token, or a [B] vector of
+    per-slot positions (continuous batching). Returns (y, cache)."""
     b = x.shape[0]
     with scope("attn"):
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = _pos_ids(pos, b)
         q, k, v = _qkv(params, x, cfg, positions)
-        upd = lambda c, new: jax.lax.dynamic_update_slice_in_dim(
-            c, new.astype(c.dtype), pos, axis=1)
+        upd = lambda c, new: _cache_write(c, new, pos, axis=1)
         if "k_scale" in cache:  # int8 KV path
             kq, ks = _kv_quantize(k)
             vq, vs = _kv_quantize(v)
             cache = {
                 "k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
-                "k_scale": jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_scale"], ks, pos, axis=1),
-                "v_scale": jax.lax.dynamic_update_slice_in_dim(
-                    cache["v_scale"], vs, pos, axis=1),
+                "k_scale": _cache_write(cache["k_scale"], ks, pos, axis=1),
+                "v_scale": _cache_write(cache["v_scale"], vs, pos, axis=1),
             }
             if jax.devices()[0].platform == "tpu":
                 # fused Pallas path: int8 cache never dequantized in HBM
@@ -268,20 +296,21 @@ def mla_prefill(params: dict, x: jnp.ndarray, cache: dict, cfg: MLAConfig,
 
 
 def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
-    """Absorbed decode: attention runs in the latent space (DeepSeek-V2 style)."""
+    """Absorbed decode: attention runs in the latent space (DeepSeek-V2 style).
+
+    ``pos`` is a scalar or a [B] vector of per-slot positions (continuous
+    batching); masking and cache writes are per-row in the vector case."""
     b = x.shape[0]
     h = cfg.n_heads
     with scope("mla"):
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = _pos_ids(pos, b)
         q_nope, q_rope = _mla_q(params, x, cfg, positions)      # [B,1,H,*]
         ckv_t = rmsnorm(params["kv_norm"], dense(params["wkv_a"], x, "wkv_a"))
         k_rope_t = apply_rope(
             dense(params["wk_rope"], x, "wk_rope"), positions, cfg.rope_theta
         )
-        ckv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv_t.astype(cache["ckv"].dtype), pos, axis=1)
-        k_rope = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope_t.astype(cache["k_rope"].dtype), pos, axis=1)
+        ckv = _cache_write(cache["ckv"], ckv_t, pos, axis=1)
+        k_rope = _cache_write(cache["k_rope"], k_rope_t, pos, axis=1)
 
         # absorb W_ukv's key half into q: q_abs [B,1,H,rank]
         wkv_b = params["wkv_b"]["w"].reshape(
@@ -296,7 +325,8 @@ def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
         s_rope = jnp.einsum("bohd,bsd->bohs", q_rope, k_rope,
                             preferred_element_type=jnp.float32)
         s = (s_lat + s_rope) * scale                            # [B,1,H,S]
-        valid = jnp.arange(ckv.shape[1])[None, None, None, :] <= pos
+        valid = (jnp.arange(ckv.shape[1])[None, None, None, :]
+                 <= positions[:, :, None, None])
         s = jnp.where(valid, s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bohs,bsr->bohr", p.astype(x.dtype), ckv)

@@ -12,7 +12,7 @@ cross-attention (whisper decoder, llama-vision gated xattn) and FFN choice
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.models import attention_layers as al
 from repro.models import mamba as mb
 from repro.models import xlstm as xl
 from repro.models.mlp import gelu_mlp, gelu_mlp_init, swiglu, swiglu_init
-from repro.models.modules import KeyGen, rmsnorm, rmsnorm_init, layernorm, layernorm_init, scope
+from repro.models.modules import KeyGen, rmsnorm, rmsnorm_init, layernorm, layernorm_init
 from repro.models.moe import MoEConfig, moe_apply, moe_init
 
 

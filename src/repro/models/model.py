@@ -5,6 +5,7 @@
   forward(params, tokens, mem)  -> (logits, aux)   # train / prefill
   init_cache(batch, max_len)    -> caches (stacked per pattern position)
   decode_step(params, caches, token, pos, mem) -> (logits, caches)
+                                   # pos: scalar or [B] per-slot positions
 
 Depth is one lax.scan over L/P groups (P = pattern period), with the pattern
 unrolled inside the body; block params/caches are stacked [G, ...] pytrees.
@@ -374,7 +375,14 @@ class Model:
 
     def decode_step(self, params: dict, caches: tuple, token: jnp.ndarray,
                     pos, memory: jnp.ndarray | None = None):
-        """token: [B, 1] -> (logits [B, 1, V], new caches)."""
+        """token: [B, 1] -> (logits [B, 1, V], new caches).
+
+        ``pos`` is a scalar (static pipeline: the whole batch sits at one
+        position) or a [B] vector of per-slot positions (continuous batching:
+        each row of the batch is an independent KV slot — RoPE, cache writes,
+        and the attention length mask are all per-row, so finished or empty
+        slots are inert and cannot influence live ones).
+        """
         mem = self._memory(params, memory)
         x = embed(params["embed"], token).astype(self.dtype)
         x = self._constrain(x)

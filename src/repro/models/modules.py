@@ -13,8 +13,6 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

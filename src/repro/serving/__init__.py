@@ -1,0 +1,26 @@
+"""Continuous-batching serving subsystem (slot pool + scheduler + batcher).
+
+The static pipeline (launch/generate.py) pads every request in a batch to the
+same gen length and leaves the device idle between batches; this package
+keeps the device busy across many concurrent requests instead:
+
+  * ``slots``     — host-side view of the fixed B_max decode slots backing
+                    one pooled KV cache (``Model.init_cache(n_slots, ...)``);
+  * ``scheduler`` — arrival-ordered admission queue + Poisson trace builder;
+  * ``batcher``   — the serve loop: prefill-on-admit into a free slot's cache
+                    region, one jitted chunk of decode steps over all live
+                    slots, then a host-side admit/retire pass.
+"""
+from repro.serving.batcher import Completion, ContinuousBatcher, ServeReport
+from repro.serving.scheduler import FIFOScheduler, Request, poisson_trace
+from repro.serving.slots import SlotPool
+
+__all__ = [
+    "Completion",
+    "ContinuousBatcher",
+    "FIFOScheduler",
+    "Request",
+    "ServeReport",
+    "SlotPool",
+    "poisson_trace",
+]

@@ -1,0 +1,257 @@
+"""Continuous-batching serve loop over a slot-based KV cache pool.
+
+The static pipeline (launch/generate.py) runs one batch of equal-length
+requests end to end: every request pads to the longest gen length and the
+device idles between batches. The ContinuousBatcher instead keeps a fixed
+pool of ``n_slots`` decode slots live and cycles:
+
+  1. **admit** — while a slot is free and a queued request has arrived,
+     prefill its prompt (batch-1, one jitted dispatch) and scatter the
+     resulting caches into the slot's region of the pooled buffers;
+  2. **decode chunk** — one jitted ``lax.scan`` of ``chunk_steps`` decode
+     steps over all B_max slots at their own positions (per-slot RoPE, cache
+     writes, and attention length masks — see Model.decode_step), sampling
+     on device;
+  3. **retire** — sync the chunk's emissions to the host, append each live
+     slot's valid tokens, and free slots whose requests hit their gen length.
+
+Requests of different gen lengths therefore finish independently: a slot
+that retires mid-trace is re-filled by the next queued prompt at the next
+chunk boundary instead of waiting for the whole batch. ``chunk_steps``
+trades scheduling latency (admissions only happen at chunk boundaries)
+against host sync overhead (one device round-trip per chunk).
+
+At temperature 0 the emitted tokens per request are identical to the static
+scan pipeline's: the same decode_step runs at the same positions with the
+same cache contents, and padded cache tail positions drop out of the
+softmax exactly.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.generate import _make_sampler, make_chunked_decode
+from repro.serving.scheduler import FIFOScheduler, Request
+from repro.serving.slots import SlotPool
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.serving").info
+
+
+@dataclass(frozen=True)
+class Completion:
+    """One finished request with its timeline on the serve clock."""
+
+    rid: int
+    tokens: np.ndarray = field(repr=False)   # [max_new_tokens] int32
+    slot: int
+    arrival_s: float
+    admitted_s: float
+    finished_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+
+@dataclass
+class ServeReport:
+    """Aggregate results of one ContinuousBatcher.run (or static baseline)."""
+
+    completions: list[Completion]
+    wall_s: float
+    n_chunks: int = 0
+    n_prefills: int = 0
+    peak_active: int = 0
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.completions)
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def latency_percentile(self, q: float) -> float:
+        lats = [c.latency_s for c in self.completions]
+        return float(np.percentile(lats, q)) if lats else 0.0
+
+    def tokens_by_rid(self) -> dict[int, np.ndarray]:
+        return {c.rid: c.tokens for c in self.completions}
+
+    def summary(self) -> dict:
+        return {
+            "n_requests": len(self.completions),
+            "generated_tokens": self.generated_tokens,
+            "wall_s": self.wall_s,
+            "throughput_tok_s": self.throughput_tok_s,
+            "p50_latency_s": self.latency_percentile(50),
+            "p95_latency_s": self.latency_percentile(95),
+            "n_chunks": self.n_chunks,
+            "n_prefills": self.n_prefills,
+            "peak_active_slots": self.peak_active,
+        }
+
+
+class ContinuousBatcher:
+    """Slot-pooled continuous batching over a (model, params) pair.
+
+    ``n_slots`` is the fixed decode batch (B_max); ``prompt_len`` and
+    ``max_new_tokens`` bound the pooled cache at
+    ``prompt_len + max_new_tokens`` positions per slot. All requests must
+    use exactly ``prompt_len`` prompt tokens (one prefill compile) and at
+    most ``max_new_tokens`` generated tokens (cache capacity); gen lengths
+    below the bound finish early and free their slot.
+    """
+
+    def __init__(self, model, params, *, n_slots: int, prompt_len: int,
+                 max_new_tokens: int, chunk_steps: int = 8,
+                 temperature: float = 0.0, prefill_mode: str = "auto",
+                 seed: int = 0):
+        if model.cfg.encoder is not None or model.cfg.vision is not None:
+            raise NotImplementedError(
+                "continuous batching serves decoder-only archs; "
+                "encoder/vision memory is per-request state the slot pool "
+                "does not carry yet")
+        assert chunk_steps > 0
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.max_len = prompt_len + max_new_tokens
+        self.chunk_steps = chunk_steps
+        self.key = jax.random.PRNGKey(seed)
+
+        sample = _make_sampler(model.cfg.vocab, temperature)
+
+        def prefill(params, caches, prompt, key):
+            logits, caches = model.prefill(params, caches, prompt,
+                                           mode=prefill_mode)
+            return sample(logits, key), caches
+
+        def write_slot(pool, one, slot):
+            scatter = lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+                p, o.astype(p.dtype), slot, axis=1)   # axis 1 = batch (post
+            return jax.tree.map(scatter, pool, one)   # group-stacking)
+
+        self._prefill = jax.jit(prefill)
+        self._write = jax.jit(write_slot, donate_argnums=(0,))
+        self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
+                                          temperature=temperature)
+        # one zeroed batch-1 cache template shared by every admission:
+        # _prefill doesn't donate or mutate its cache arg, and the prompt
+        # prefill overwrites [0, prompt_len) while the per-slot length mask
+        # hides the (zero) tail, so reuse is safe
+        self._fresh = self.model.init_cache(1, self.max_len)
+
+    def _admit(self, req: Request, slot: int, caches, tok, pos, rem, key):
+        """Prefill ``req`` into ``slot``'s cache region; update slot state."""
+        prompt = np.asarray(req.prompt)
+        assert prompt.shape == (self.prompt_len,), (
+            f"request {req.rid}: prompt len {prompt.shape} != batcher's "
+            f"compiled {self.prompt_len}")
+        assert req.max_new_tokens <= self.max_new_tokens, (
+            f"request {req.rid}: gen len {req.max_new_tokens} exceeds slot "
+            f"capacity {self.max_new_tokens}")
+        tok0, one = self._prefill(self.params, self._fresh,
+                                  jnp.asarray(prompt[None, :]), key)
+        caches = self._write(caches, one, jnp.int32(slot))
+        tok[slot, 0] = int(np.asarray(tok0)[0, 0])
+        pos[slot] = self.prompt_len
+        rem[slot] = req.max_new_tokens
+        return caches
+
+    def run(self, requests: list[Request],
+            wait_for_arrivals: bool = True) -> ServeReport:
+        """Serve ``requests`` to completion; returns the aggregate report.
+
+        Arrival times are honored against the wall clock (a request is only
+        admitted once ``arrival_s`` has passed); with
+        ``wait_for_arrivals=False`` the trace's arrival times are ignored
+        and every request is eligible immediately (deterministic tests).
+        """
+        if not wait_for_arrivals:
+            requests = [Request(r.rid, r.prompt, r.max_new_tokens, 0.0)
+                        for r in requests]
+        sched = FIFOScheduler(requests)
+        pool = SlotPool(self.n_slots)
+        caches = self.model.init_cache(self.n_slots, self.max_len)
+        tok = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros(self.n_slots, np.int32)
+        rem = np.zeros(self.n_slots, np.int32)
+        # latencies are measured against the arrival times admission actually
+        # honored (all zero when wait_for_arrivals=False)
+        arrivals = {r.rid: r.arrival_s for r in requests}
+
+        completions: list[Completion] = []
+        n_chunks = n_prefills = 0
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0
+
+        while len(sched) or pool.any_active():
+            # ---- admit: fill free slots from the arrived queue -----------
+            while pool.free_slots() and sched.ready(clock()):
+                req = sched.pop(clock())
+                slot = pool.admit(req, clock())
+                self.key, k = jax.random.split(self.key)
+                caches = self._admit(req, slot, caches, tok, pos, rem, k)
+                n_prefills += 1
+
+            if not pool.any_active():
+                # nothing live: sleep until the next arrival (idle bubble —
+                # the serving benchmark's static baseline pays this too)
+                nxt = sched.next_arrival()
+                assert nxt is not None
+                time.sleep(max(0.0, min(nxt - clock(), 0.05)))
+                continue
+
+            # ---- decode one chunk over all slots -------------------------
+            self.key, k = jax.random.split(self.key)
+            toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
+                self.params, caches, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(rem), None, k)
+            toks = np.asarray(toks)          # the chunk's single host sync
+            valid = np.asarray(valid)
+            tok = np.array(tok_d)            # writable copies: admissions
+            pos = np.array(pos_d)            # mutate these slotwise
+            rem = np.array(rem_d)
+            n_chunks += 1
+            now = clock()
+
+            # ---- retire: collect emissions, free finished slots ----------
+            for slot in pool.active_slots():
+                pool.extend(slot, toks[slot][valid[slot]])
+                rec = pool.get(slot)
+                if rec.done:
+                    rec, fin = pool.retire(slot, now)
+                    completions.append(Completion(
+                        rid=rec.request.rid,
+                        tokens=np.asarray(rec.emitted, np.int32),
+                        slot=slot,
+                        arrival_s=arrivals[rec.request.rid],
+                        admitted_s=rec.admitted_s,
+                        finished_s=fin,
+                    ))
+
+        report = ServeReport(
+            completions=sorted(completions, key=lambda c: c.rid),
+            wall_s=clock(), n_chunks=n_chunks, n_prefills=n_prefills,
+            peak_active=pool.peak_active)
+        s = report.summary()
+        log(f"continuous: {s['n_requests']} reqs, "
+            f"{s['generated_tokens']} toks in {s['wall_s']:.2f}s "
+            f"({s['throughput_tok_s']:.1f} tok/s, "
+            f"p50 {s['p50_latency_s']:.2f}s p95 {s['p95_latency_s']:.2f}s, "
+            f"{n_chunks} chunks x {self.chunk_steps} steps, "
+            f"{n_prefills} prefills)")
+        return report

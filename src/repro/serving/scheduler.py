@@ -1,0 +1,87 @@
+"""Request admission: FIFO queue over arrival times + Poisson trace builder.
+
+The scheduler is deliberately host-only and deterministic: requests are
+admitted strictly in arrival order (ties broken by request id), and a request
+is only eligible once its arrival time has passed on the serve clock. The
+batcher polls ``pop(now)`` between decode chunks — admission never interrupts
+a running chunk.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``prompt`` is a fixed-length token vector (the batcher compiles prefill
+    for a single prompt length); ``max_new_tokens`` may differ per request —
+    mixed gen lengths finishing out of order is the point of the slot pool.
+    ``arrival_s`` is seconds relative to the serve clock's start.
+    """
+
+    rid: int
+    prompt: np.ndarray = field(repr=False)
+    max_new_tokens: int
+    arrival_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.max_new_tokens > 0, self
+        assert np.asarray(self.prompt).ndim == 1, "prompt must be [S]"
+
+
+class FIFOScheduler:
+    """Arrival-ordered admission queue (earliest arrival first)."""
+
+    def __init__(self, requests):
+        self._queue = deque(
+            sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def ready(self, now: float) -> bool:
+        """Is the head request eligible for admission at time ``now``?"""
+        return bool(self._queue) and self._queue[0].arrival_s <= now
+
+    def pop(self, now: float) -> Request | None:
+        """Admit the head request if it has arrived; None otherwise."""
+        return self._queue.popleft() if self.ready(now) else None
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the head request (None when the queue is empty)."""
+        return self._queue[0].arrival_s if self._queue else None
+
+
+def poisson_trace(
+    n_requests: int,
+    *,
+    prompt_len: int,
+    vocab: int,
+    rate_rps: float = 16.0,
+    gen_lens: tuple[int, ...] = (8, 16, 32),
+    seed: int = 0,
+) -> list[Request]:
+    """Build a Poisson arrival trace with mixed gen lengths.
+
+    Inter-arrival gaps are exponential with mean ``1 / rate_rps`` seconds;
+    each request draws its gen length uniformly from ``gen_lens`` and a
+    random prompt of ``prompt_len`` tokens. Deterministic in ``seed`` so the
+    serving benchmark replays the identical trace for the continuous and
+    static baselines.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, prompt_len, dtype=np.int32),
+            max_new_tokens=int(rng.choice(gen_lens)),
+            arrival_s=float(arrivals[i]),
+        )
+        for i in range(n_requests)
+    ]

@@ -1,0 +1,82 @@
+"""Host-side slot bookkeeping for the pooled KV cache.
+
+The device side of a slot is one batch row of the pooled caches plus its
+entries in the ``tok`` / ``pos`` / ``remaining`` vectors the decode chunk
+carries; everything else about a request — which slot it occupies, the tokens
+it has emitted so far, its admission/finish timestamps — lives here. A slot
+is either FREE (inert row: remaining == 0, masked out of attention by its
+own per-slot length) or holds exactly one in-flight request until the
+batcher retires it, after which the slot is immediately reusable — the next
+admission's prefill overwrites the cache region, so no device-side reset is
+needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+@dataclass
+class SlotRecord:
+    """One slot's host state while a request occupies it."""
+
+    index: int
+    request: Request
+    admitted_s: float
+    emitted: list[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.emitted) >= self.request.max_new_tokens
+
+
+class SlotPool:
+    """Fixed set of ``n_slots`` decode slots, reused across requests."""
+
+    def __init__(self, n_slots: int):
+        assert n_slots > 0
+        self.n_slots = n_slots
+        self._slots: list[SlotRecord | None] = [None] * n_slots
+        self.peak_active = 0
+        self.total_admitted = 0
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self._slots)
+
+    def get(self, index: int) -> SlotRecord:
+        rec = self._slots[index]
+        assert rec is not None, f"slot {index} is free"
+        return rec
+
+    def admit(self, request: Request, now: float) -> int:
+        """Claim the lowest free slot for ``request``; returns its index."""
+        free = self.free_slots()
+        assert free, "admit() with no free slot — check free_slots() first"
+        index = free[0]
+        self._slots[index] = SlotRecord(index, request, admitted_s=now)
+        self.total_admitted += 1
+        self.peak_active = max(self.peak_active,
+                               self.n_slots - len(self.free_slots()))
+        return index
+
+    def extend(self, index: int, tokens) -> None:
+        """Append a chunk's valid emissions for the request in ``index``."""
+        self.get(index).emitted.extend(int(t) for t in np.asarray(tokens))
+
+    def retire(self, index: int, now: float) -> tuple[SlotRecord, float]:
+        """Free the slot; returns its final record + finish timestamp."""
+        rec = self.get(index)
+        assert rec.done, (
+            f"retiring slot {index} after {len(rec.emitted)} of "
+            f"{rec.request.max_new_tokens} tokens")
+        self._slots[index] = None
+        return rec, now

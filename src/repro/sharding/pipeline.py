@@ -18,7 +18,6 @@ training under full activation remat (activations recomputed in backward;
 jax.grad differentiates through the loop)."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

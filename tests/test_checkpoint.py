@@ -1,7 +1,5 @@
 """Checkpoint store: roundtrip, atomicity, async manager, elastic restore."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

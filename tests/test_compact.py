@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core.stbllm import STBConfig, stbllm_quantize_layer
-from repro.kernels.stb_gemm import stb_gemm_compact, stb_gemm_packed
+from repro.kernels.stb_gemm import stb_gemm_compact
 from repro.quant.compact import pack_compact, unpack_compact_to_dense
 from repro.quant.packing import pack_quantized_layer, unpack_to_dense
 

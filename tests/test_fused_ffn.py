@@ -59,7 +59,8 @@ def test_traffic_model_monotone():
 
 # ------------------------------------------------------------ packed variant
 def _packed_case(rng, d=128, d_ff=384):
-    import sys, os
+    import os
+    import sys
     sys.path.insert(0, os.path.dirname(__file__))
     from test_kernels import random_packed
     return (random_packed(rng, d, d_ff), random_packed(rng, d, d_ff),

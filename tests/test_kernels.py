@@ -1,5 +1,4 @@
 """Pallas kernel vs pure-jnp oracle: shape/dtype sweeps (interpret=True)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,7 +8,7 @@ from repro.kernels.ops import stb_matmul
 from repro.kernels.ref import stb_matmul_ref
 from repro.kernels.stb_gemm import stb_gemm_packed
 from repro.quant.packing import (
-    GROUP_M, SCALE_GROUP, PackedLinear, _pack_2bit, _pack_bitplane,
+    SCALE_GROUP, PackedLinear, _pack_2bit, _pack_bitplane,
     pack_quantized_layer, packed_format_bits, unpack_to_dense)
 
 

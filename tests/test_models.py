@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.configs import SHAPES
-from repro.configs.base import ModelConfig
 from repro.configs.registry import ASSIGNED, get_config, get_smoke_config
 from repro.launch.steps import make_train_step
 from repro.models.loss import lm_loss

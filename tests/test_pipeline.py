@@ -11,7 +11,6 @@ from repro.core.baselines.pbllm import pbllm_quantize_layer
 from repro.core.baselines.rtn import rtn_quantize_layer
 from repro.core.pipeline import collect_calibration, quantize_model
 from repro.core.stbllm import STBConfig, stbllm_quantize_layer
-from repro.models.loss import lm_loss
 from repro.models.model import build_model
 
 

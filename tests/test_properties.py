@@ -1,5 +1,4 @@
 """Hypothesis property-based tests on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -121,3 +120,75 @@ def test_corpus_tokens_in_vocab(doc):
     c = SyntheticCorpus(ZipfMarkovConfig(vocab=64, doc_len=128))
     d = c.document(doc)
     assert d.min() >= 0 and d.max() < 64 and len(d) == 128
+
+
+# ------------------------------------------------------------------ nightly
+# Heavy-profile variants for the scheduled CI job (pytest -m slow
+# --run-slow): the same invariants as above, but with example budgets and
+# matrix sizes the per-push tier-1 run can't afford.
+DEEP = dict(max_examples=250, deadline=None)
+
+
+@pytest.mark.slow
+@given(w=weight_matrix(max_rows=64, col_groups=st.integers(1, 16)),
+       n=st.integers(1, 8))
+@settings(**DEEP)
+def test_nm_mask_always_exact_deep(w, n):
+    mask = nm_mask(w, n, 8)
+    assert check_nm(mask, n, 8)
+
+
+@pytest.mark.slow
+@given(w=weight_matrix(max_rows=64, col_groups=st.integers(1, 16)))
+@settings(**DEEP)
+def test_residual_plane_monotone_deep(w):
+    mask = jnp.ones_like(w, dtype=bool)
+    b1, _, _ = binarize(w, mask)
+    b2, _, _ = residual_binarize(w, mask)
+    e1 = float(jnp.sum((w - b1) ** 2))
+    e2 = float(jnp.sum((w - b2) ** 2))
+    assert e2 <= e1 + 1e-6
+    assert e1 <= float(jnp.sum(w ** 2)) + 1e-5
+
+
+@pytest.mark.slow
+@given(w=weight_matrix(max_rows=32, col_groups=st.integers(1, 8)),
+       f1=st.floats(0.05, 0.45), f2=st.floats(0.5, 0.95))
+@settings(**DEEP)
+def test_trisection_partition_complete_deep(w, f1, f2):
+    mask = jnp.ones_like(w, dtype=bool)
+    wmax = float(jnp.max(jnp.abs(w))) or 1.0
+    b, scales, regions = trisection_binarize(w, mask, f1 * wmax, f2 * wmax)
+    assert b.shape == w.shape
+    r = np.asarray(regions)
+    bb = np.asarray(b)
+    for code in (0, 1, 2):
+        sel = r == code
+        if sel.any():
+            a = np.asarray(scales[code])
+            expect = np.broadcast_to(a, w.shape)[sel]
+            np.testing.assert_allclose(np.abs(bb[sel]), expect, rtol=1e-5)
+
+
+@pytest.mark.slow
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 32))
+@settings(**DEEP)
+def test_scheduler_fifo_property(seed, n):
+    """Admission order is always (arrival_s, rid)-sorted and never early."""
+    from repro.serving.scheduler import FIFOScheduler, Request
+
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32),
+                    max_new_tokens=1,
+                    arrival_s=float(rng.uniform(0, 1)))
+            for i in range(n)]
+    sched = FIFOScheduler(reqs)
+    now, popped = 0.0, []
+    while len(sched):
+        nxt = sched.next_arrival()
+        assert sched.pop(nxt - 1e-9) is None      # never admitted early
+        now = max(now, nxt)
+        r = sched.pop(now)
+        assert r is not None and r.arrival_s <= now
+        popped.append((r.arrival_s, r.rid))
+    assert popped == sorted(popped)

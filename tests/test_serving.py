@@ -1,0 +1,232 @@
+"""Continuous-batching serve loop: scheduler/slot invariants, per-slot
+positions, token equivalence with the static pipeline, and the CI
+regression gate (repro.serving + benchmarks/check_regression)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.generate import make_generate
+from repro.models.model import build_model
+from repro.serving import (
+    ContinuousBatcher,
+    FIFOScheduler,
+    Request,
+    SlotPool,
+    poisson_trace,
+)
+
+CFG = get_smoke_config("granite-3-8b")
+PROMPT_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = build_model(CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(gens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=rng.integers(0, CFG.vocab, PROMPT_LEN,
+                                           dtype=np.int32),
+                max_new_tokens=g)
+        for i, g in enumerate(gens)
+    ]
+
+
+def _static_tokens(model, params, req):
+    pipe = make_generate(model, prompt_len=PROMPT_LEN,
+                         gen_len=req.max_new_tokens)
+    caches = model.init_cache(1, PROMPT_LEN + req.max_new_tokens)
+    return np.asarray(
+        pipe.run(params, caches, jnp.asarray(req.prompt[None, :])))[0]
+
+
+# ------------------------------------------------------------ slot invariants
+def test_slot_reuse_after_retirement(served):
+    """5 requests through 2 slots: every slot retires and is re-admitted."""
+    model, params = served
+    reqs = _requests([2, 2, 2, 2, 2])
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    assert len(report.completions) == 5
+    assert report.n_prefills == 5           # each admission prefills once
+    assert report.peak_active == 2          # never more slots than the pool
+    slots_used = {c.slot for c in report.completions}
+    assert slots_used == {0, 1}             # both slots cycled requests
+    for c in report.completions:
+        assert len(c.tokens) == 2
+
+
+def test_admission_with_queue_longer_than_free_slots(served):
+    """Admissions are FIFO and deferred until a slot frees up."""
+    model, params = served
+    reqs = _requests([3, 3, 3, 3, 3, 3])
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    assert len(report.completions) == 6
+    by_rid = {c.rid: c for c in report.completions}
+    # FIFO: a later request is never admitted before an earlier one
+    admitted = [by_rid[i].admitted_s for i in range(6)]
+    assert admitted == sorted(admitted)
+    # the first wave (rids 0,1) must be admitted before the queue drains
+    assert admitted[1] < by_rid[2].admitted_s or admitted[0] < by_rid[2].admitted_s
+
+
+def test_mixed_gen_lengths_finish_out_of_order(served):
+    """Short requests retire early instead of padding to the longest."""
+    model, params = served
+    reqs = _requests([12, 2, 6])
+    batcher = ContinuousBatcher(model, params, n_slots=3,
+                                prompt_len=PROMPT_LEN, max_new_tokens=12,
+                                chunk_steps=2)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    by_rid = {c.rid: c for c in report.completions}
+    assert by_rid[1].finished_s < by_rid[2].finished_s < by_rid[0].finished_s
+    for rid, g in ((0, 12), (1, 2), (2, 6)):
+        assert len(by_rid[rid].tokens) == g
+
+
+# ------------------------------------------------------- token equivalence
+def test_continuous_matches_static_pipeline_temp0(served):
+    """Acceptance: at temperature 0, continuous batching emits the same
+    tokens per request as the static two-dispatch pipeline — oversubscribed
+    slots, mixed gen lengths, and slot reuse included."""
+    model, params = served
+    reqs = _requests([6, 2, 4, 3, 6])
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=6,
+                                chunk_steps=2)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    got = report.tokens_by_rid()
+    for req in reqs:
+        np.testing.assert_array_equal(
+            got[req.rid], _static_tokens(model, params, req),
+            err_msg=f"request {req.rid} (gen {req.max_new_tokens})")
+
+
+def test_decode_step_per_slot_positions(served):
+    """Vector pos decode == per-row scalar decode, bit-exact (GQA path)."""
+    model, params = served
+    rng = np.random.default_rng(3)
+    b, max_len = 3, 12
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (b, 1), dtype=np.int32))
+    pos = jnp.asarray([5, 2, 9], jnp.int32)
+    caches = model.init_cache(b, max_len)
+    caches = jax.tree.map(
+        lambda a: jnp.asarray(rng.normal(size=a.shape), a.dtype), caches)
+    logits_vec, caches_vec = model.decode_step(params, caches, tok, pos)
+    for i in range(b):
+        row = jax.tree.map(lambda a: a[:, i:i + 1], caches)
+        logits_s, caches_s = model.decode_step(
+            params, row, tok[i:i + 1], int(pos[i]))
+        np.testing.assert_array_equal(np.asarray(logits_vec[i:i + 1]),
+                                      np.asarray(logits_s))
+        for a, c in zip(jax.tree.leaves(caches_vec), jax.tree.leaves(caches_s)):
+            np.testing.assert_array_equal(np.asarray(a[:, i:i + 1]),
+                                          np.asarray(c))
+
+
+def test_continuous_matches_static_ssm_pattern():
+    """SSM patterns (scan prefill, stateful mixers) also serve continuously:
+    the slot scatter covers every state-tree shape, and retired slots' stale
+    states are fully overwritten on re-admission."""
+    cfg = get_smoke_config("xlstm-350m")
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (3, PROMPT_LEN), dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
+            for i, g in enumerate([4, 2, 6])]
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=6,
+                                chunk_steps=2)
+    got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
+    for req in reqs:
+        np.testing.assert_array_equal(
+            got[req.rid], _static_tokens(model, params, req),
+            err_msg=f"request {req.rid}")
+
+
+# --------------------------------------------------------------- scheduler
+def test_scheduler_honors_arrival_times():
+    reqs = _requests([2, 2, 2])
+    reqs = [Request(r.rid, r.prompt, r.max_new_tokens, arrival_s=t)
+            for r, t in zip(reqs, (0.5, 0.0, 1.0))]
+    sched = FIFOScheduler(reqs)
+    assert not sched.ready(now=-1.0)
+    assert sched.pop(0.0).rid == 1          # earliest arrival first
+    assert sched.pop(0.0) is None           # rid 0 hasn't arrived yet
+    assert sched.next_arrival() == 0.5
+    assert sched.pop(0.6).rid == 0
+    assert sched.pop(2.0).rid == 2
+    assert len(sched) == 0
+
+
+def test_poisson_trace_is_deterministic():
+    a = poisson_trace(8, prompt_len=4, vocab=64, seed=7)
+    b = poisson_trace(8, prompt_len=4, vocab=64, seed=7)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[0] > 0
+
+
+def test_slot_pool_guards():
+    pool = SlotPool(2)
+    reqs = _requests([2, 2, 2])
+    pool.admit(reqs[0], 0.0)
+    pool.admit(reqs[1], 0.0)
+    assert pool.free_slots() == []
+    with pytest.raises(AssertionError):
+        pool.admit(reqs[2], 0.0)
+    pool.extend(0, [1, 2])
+    rec, _ = pool.retire(0, 1.0)
+    assert rec.request.rid == 0 and pool.free_slots() == [0]
+    with pytest.raises(AssertionError):
+        pool.retire(1, 1.0)                 # rid 1 hasn't finished
+
+
+# --------------------------------------------------------- regression gate
+def test_check_regression_gate(tmp_path):
+    """>25% tok/s drop or any match=False fails; small wobble passes."""
+    from benchmarks.check_regression import compare, main
+
+    base = {"pipeline": {"batch8": {"packed": {"tok_s": 1000.0},
+                                    "packed_dense_match": True}}}
+    ok = {"pipeline": {"batch8": {"packed": {"tok_s": 900.0},
+                                  "packed_dense_match": True}}}
+    slow = {"pipeline": {"batch8": {"packed": {"tok_s": 700.0},
+                                    "packed_dense_match": True}}}
+    mismatch = {"pipeline": {"batch8": {"packed": {"tok_s": 1000.0},
+                                        "packed_dense_match": False}}}
+
+    assert compare(base, ok, 0.25)[0] == []
+    assert len(compare(base, slow, 0.25)[0]) == 1
+    assert len(compare(base, mismatch, 0.25)[0]) == 1
+    # a new cell with no baseline is noted, never a failure
+    grown = {"pipeline": {"batch8": {"packed": {"tok_s": 980.0},
+                                     "packed_dense_match": True},
+                          "batch16": {"packed": {"tok_s": 5.0}}}}
+    assert compare(base, grown, 0.25)[0] == []
+    # a gated leaf vanishing from the fresh run fails (renames can't blind
+    # the gate)
+    shrunk = {"pipeline": {"batch8": {"packed": {"toks_per_s": 980.0}}}}
+    assert len(compare(base, shrunk, 0.25)[0]) == 2  # tok_s + match gone
+
+    import json
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(slow))
+    assert main([str(bp), str(fp)]) == 1
+    fp.write_text(json.dumps(ok))
+    assert main([str(bp), str(fp)]) == 0
+    assert main([str(tmp_path / "missing.json"), str(fp)]) == 0
