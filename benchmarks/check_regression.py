@@ -12,8 +12,9 @@ failing the CI job — when either:
 
 Throughputs are compared leaf-by-leaf at the same json path, so adding new
 cells to a benchmark doesn't trip the gate (no baseline -> skipped, listed
-as NEW). A missing baseline file passes with a warning: the first run on a
-branch has nothing to regress against.
+as NEW). A missing baseline file is "record, don't fail": the first run of
+a new benchmark on a fresh branch has nothing to regress against, so the
+gate passes and the fresh json becomes the baseline to commit.
 
   python -m benchmarks.check_regression BASELINE FRESH [--threshold 0.25]
 """
@@ -85,7 +86,8 @@ def main(argv=None) -> int:
     with open(args.fresh) as f:
         fresh = json.load(f)
     if not os.path.exists(args.baseline):
-        print(f"no baseline at {args.baseline}; nothing to regress against")
+        print(f"no baseline at {args.baseline}; recording {args.fresh} as "
+              f"the first measurement (record, don't fail)")
         return 0
     with open(args.baseline) as f:
         baseline = json.load(f)

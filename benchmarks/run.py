@@ -5,6 +5,7 @@
   PYTHONPATH=src python -m benchmarks.run --only table2 fig4
   PYTHONPATH=src python -m benchmarks.run --only decode   # BENCH_decode.json
   PYTHONPATH=src python -m benchmarks.run --only serving  # BENCH_serving.json
+  PYTHONPATH=src python -m benchmarks.run --only paged    # BENCH_paged.json
 
 Prints ``name,us_per_call,derived`` CSV lines; the trained tiny-LM substrate
 is cached under experiments/bench_model/ (first run trains it, ~1 min CPU).
@@ -34,7 +35,11 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode serving")
+                         "decode serving paged")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="arrival-trace seed for the serving/paged benches "
+                         "(explicit so the CI bench-gate replays the same "
+                         "trace as its committed baseline)")
     args = ap.parse_args(argv)
 
     rows = Row()
@@ -78,7 +83,9 @@ def main(argv=None) -> int:
     if want("decode"):
         decode_bench.decode_pipeline_bench(rows)
     if want("serving"):
-        serving_bench.serving_bench(rows)
+        serving_bench.serving_bench(rows, seed=args.seed)
+    if want("paged"):
+        serving_bench.paged_bench(rows, seed=args.seed)
     return 0
 
 

@@ -1,7 +1,8 @@
-"""Serving throughput/latency: continuous batching vs the static pipeline.
+"""Serving throughput/latency: continuous batching vs the static pipeline,
+and the paged KV cache vs the dense slot pool.
 
-Replays one Poisson arrival trace with mixed gen lengths through both serve
-loops and writes ``BENCH_serving.json`` at the repo root:
+``serving_bench`` replays one Poisson arrival trace with mixed gen lengths
+through both serve loops and writes ``BENCH_serving.json`` at the repo root:
 
   * ``continuous`` — the slot-pooled loop (repro.serving): requests admitted
     into free KV slots at chunk boundaries, decoded at per-slot positions,
@@ -18,6 +19,15 @@ host contention on shared CI runners), so the throughput/p50/p95 gap is
 scheduling, not compilation or noise. At temperature 0 the continuous tokens
 must equal the static tokens per request (``continuous_matches_static`` —
 the CI regression gate fails on a mismatch).
+
+``paged_bench`` replays a *ragged* trace (mixed prompt **and** gen lengths)
+through the continuous batcher twice — dense slot pool vs the paged pool —
+and writes ``BENCH_paged.json``: throughput/latency for both, the
+``paged_matches_dense`` bit-exactness flag, and the measured cache-HBM
+story (dense ``[B_max, max_len]`` pool bytes vs the paged pool's *peak
+pages actually resident* over the trace, and bytes per generated token for
+each). Both benches take an explicit ``seed`` so the CI bench-gate replays
+the identical arrival trace against its committed baseline.
 """
 from __future__ import annotations
 
@@ -37,6 +47,7 @@ from repro.serving import Completion, ContinuousBatcher, ServeReport, poisson_tr
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_serving.json")
+PAGED_JSON = os.path.join(ROOT, "BENCH_paged.json")
 
 # heavier than the decode bench's 2-layer shape on purpose: per-step compute
 # has to dominate dispatch overhead for the scheduling gap (padding waste,
@@ -107,12 +118,12 @@ def _static_serve(model, params, requests, *, n_slots: int,
                        wall_s=clock())
 
 
-def serving_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
+def serving_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
     model = build_model(SERVE_CFG, dtype=jnp.float32, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     trace = poisson_trace(
         N_REQUESTS, prompt_len=PROMPT_LEN, vocab=SERVE_CFG.vocab,
-        rate_rps=RATE_RPS, gen_lens=GEN_LENS, seed=0)
+        rate_rps=RATE_RPS, gen_lens=GEN_LENS, seed=seed)
 
     batcher = ContinuousBatcher(
         model, params, n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
@@ -137,7 +148,8 @@ def serving_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
             "arch": SERVE_CFG.arch_id, "n_requests": N_REQUESTS,
             "prompt_len": PROMPT_LEN, "gen_lens": list(GEN_LENS),
             "n_slots": N_SLOTS, "chunk_steps": CHUNK_STEPS,
-            "rate_rps": RATE_RPS, "backend": jax.devices()[0].platform,
+            "rate_rps": RATE_RPS, "seed": seed,
+            "backend": jax.devices()[0].platform,
         },
         "continuous": cont.summary(),
         "static": stat.summary(),
@@ -158,4 +170,107 @@ def serving_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     rows.add("serving/json", 0, out_json)
+    return results
+
+
+# paged bench: ragged prompts (mixed prompt lengths incl. multi-page ones)
+# on top of the mixed gen lengths — the workload whose padding the dense
+# [B_max, max_len] pool pays for and the page pool does not
+PAGE_SIZE = 8
+PROMPT_LENS = (6, 10, 16)
+
+
+def _cache_nbytes(model, *args, **kw) -> int:
+    """Bytes of ``model.init_cache(*args, **kw)`` without allocating it."""
+    shapes = jax.eval_shape(lambda: model.init_cache(*args, **kw))
+    return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(shapes))
+
+
+def paged_bench(rows: Row, out_json: str = PAGED_JSON, seed: int = 0) -> dict:
+    model = build_model(SERVE_CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = poisson_trace(
+        N_REQUESTS, prompt_len=PROMPT_LEN, vocab=SERVE_CFG.vocab,
+        rate_rps=RATE_RPS, gen_lens=GEN_LENS, prompt_lens=PROMPT_LENS,
+        seed=seed)
+    kw = dict(n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+              max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS)
+
+    dense_b = ContinuousBatcher(model, params, **kw)
+    paged_b = ContinuousBatcher(model, params, paged=True,
+                                page_size=PAGE_SIZE, **kw)
+    dense_b.run(trace, wait_for_arrivals=False)      # warm all compiles
+    paged_b.run(trace, wait_for_arrivals=False)
+    dense = min((dense_b.run(trace, wait_for_arrivals=True)
+                 for _ in range(REPEAT)), key=lambda r: r.wall_s)
+    paged = min((paged_b.run(trace, wait_for_arrivals=True)
+                 for _ in range(REPEAT)), key=lambda r: r.wall_s)
+
+    dense_toks = dense.tokens_by_rid()
+    paged_toks = paged.tokens_by_rid()
+    match = all(np.array_equal(dense_toks[r.rid], paged_toks[r.rid])
+                for r in trace)
+
+    # measured HBM story: the dense pool is resident in full for the whole
+    # trace; the paged pool's cost is the pages actually held — peak for
+    # capacity sizing, the time-weighted average for bytes-per-token
+    max_len = PROMPT_LEN + max(GEN_LENS)
+    dense_bytes = _cache_nbytes(model, N_SLOTS, max_len)
+    pool_bytes = _cache_nbytes(model, N_SLOTS, max_len,
+                               n_pages=paged_b.n_pages, page_size=PAGE_SIZE)
+    page_bytes = pool_bytes // paged_b.n_pages      # all layers, one page id
+    peak_pages = paged.pages["peak_pages_in_use"]
+    avg_pages = paged.pages["avg_pages_in_use"]
+    paged_peak_bytes = peak_pages * page_bytes
+    paged_avg_bytes = avg_pages * page_bytes
+    toks = max(paged.generated_tokens, 1)
+
+    results = {
+        "config": {
+            "arch": SERVE_CFG.arch_id, "n_requests": N_REQUESTS,
+            "prompt_len": PROMPT_LEN, "prompt_lens": list(PROMPT_LENS),
+            "gen_lens": list(GEN_LENS), "n_slots": N_SLOTS,
+            "chunk_steps": CHUNK_STEPS, "page_size": PAGE_SIZE,
+            "n_pages": paged_b.n_pages, "rate_rps": RATE_RPS, "seed": seed,
+            "backend": jax.devices()[0].platform,
+        },
+        "dense": dense.summary(),
+        "paged": paged.summary(),
+        "speedup_throughput": (paged.throughput_tok_s /
+                               max(dense.throughput_tok_s, 1e-9)),
+        "paged_matches_dense": bool(match),
+        "memory": {
+            "dense_pool_bytes": dense_bytes,
+            "page_bytes": page_bytes,
+            "paged_peak_bytes": paged_peak_bytes,
+            "paged_avg_bytes": paged_avg_bytes,
+            "hbm_bytes_per_token_dense": dense_bytes / toks,
+            "hbm_bytes_per_token_paged": paged_avg_bytes / toks,
+            "cache_bytes_reduction_peak_x":
+                dense_bytes / max(paged_peak_bytes, 1),
+            "cache_bytes_reduction_avg_x":
+                dense_bytes / max(paged_avg_bytes, 1.0),
+        },
+    }
+
+    for name, rep in (("dense", dense), ("paged", paged)):
+        rows.add(f"paged/{name}", rep.wall_s * 1e6,
+                 f"tok_s={rep.throughput_tok_s:.1f} "
+                 f"p50={rep.latency_percentile(50):.2f}s "
+                 f"p95={rep.latency_percentile(95):.2f}s")
+    mem = results["memory"]
+    rows.add("paged/peak_pages", 0,
+             f"{peak_pages}/{paged_b.n_pages - 1} "
+             f"({paged.pages['peak_page_occupancy']:.0%})")
+    rows.add("paged/cache_bytes_reduction", 0,
+             f"peak x{mem['cache_bytes_reduction_peak_x']:.2f} / "
+             f"avg x{mem['cache_bytes_reduction_avg_x']:.2f} "
+             f"({mem['dense_pool_bytes']} -> {mem['paged_peak_bytes']} B peak, "
+             f"{mem['hbm_bytes_per_token_paged']:.0f} B/tok)")
+    rows.add("paged/paged_matches_dense", 0, str(match))
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.add("paged/json", 0, out_json)
     return results

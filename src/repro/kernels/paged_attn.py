@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: paged int8-KV decode attention over block tables.
+
+The paged serve loop stores each layer's KV cache as a pool of fixed-size
+pages (``[n_pages, page_size, KH, D]`` int8 + ``[n_pages, page_size, KH]``
+f32 scales — the same quantized layout ``decode_attn.py`` consumes from the
+dense ``[B, S, ...]`` cache) and gives every slot a block table mapping its
+logical position ``i`` to page ``table[i // page_size]``. This kernel runs
+one decode step's attention directly against that pool: the HLO alternative
+gathers every slot's pages into a contiguous per-slot cache in HBM first —
+exactly the materialization a paged cache exists to avoid.
+
+Grid ``(B, KH, n_blocks)``; the block tables ride in as a scalar-prefetch
+operand (``pltpu.PrefetchScalarGridSpec``), so the K/V index maps can pick
+each grid step's page *before* the kernel body runs and the pipeline DMAs
+only the pages the slot actually owns (plus its null-page tail, masked
+below). The block axis is innermost and "arbitrary" (sequential), carrying
+the online-softmax scratch across a slot's pages; int8 dequantization and
+the PV accumulation stay in VMEM.
+
+Block-table convention (see repro.serving.paged): entries beyond a slot's
+allocation are the null page 0, and the per-slot ``cache_len`` mask turns
+every position the slot does not own into ``-inf`` before the softmax, so
+null/stale pages contribute exact zeros.
+
+Validated against the pure-jnp oracle below in interpret mode (tests), which
+itself is the gather + ``decode_attn`` reference math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.decode_attn import decode_attention_int8_ref
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(tables, qref, kref, kscale, vref, vscale, lenref, oref,
+                       m_ref, l_ref, acc_ref, *, page_size: int, nb: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = qref[0, 0]                                     # [G, D] f32
+    k = kref[0, :, 0].astype(jnp.float32)              # [ps, D] int8 -> f32
+    ks = kscale[0, :, 0]                               # [ps]
+    v = vref[0, :, 0].astype(jnp.float32)
+    vs = vscale[0, :, 0]
+
+    kd = k * ks[:, None]
+    scores = jax.lax.dot_general(
+        q, kd, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [G, ps]
+    # logical positions this page covers; the slot's length mask is what
+    # zeroes null-page and stale-tail entries
+    pos = s * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = pos < lenref[0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)                        # [G, ps]
+    corr = jnp.exp(m_prev - m_new)                     # [G, 1]
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    vd = v * vs[:, None]                               # [ps, D]
+    pv = jax.lax.dot_general(
+        p, vd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [G, D]
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(s == nb - 1)
+    def _store():
+        oref[0, 0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(oref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jnp.ndarray,         # [B, KH, G, D] f32/bf16 (pre-scaled by D**-0.5)
+    k_pages: jnp.ndarray,   # [P, page_size, KH, D] int8
+    k_scale: jnp.ndarray,   # [P, page_size, KH] f32
+    v_pages: jnp.ndarray,   # [P, page_size, KH, D] int8
+    v_scale: jnp.ndarray,   # [P, page_size, KH] f32
+    block_tables: jnp.ndarray,  # [B, NB] int32 page ids (null-page padded)
+    cache_len: jnp.ndarray,     # [] or [B] int32 valid positions per slot
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, KH, G, D] attention output read straight from the pool."""
+    b, kh, g, d = q.shape
+    ps = k_pages.shape[1]
+    nb = block_tables.shape[1]
+    tables = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+
+    kernel = functools.partial(_paged_attn_kernel, page_size=ps, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,           # the block tables
+        grid=(b, kh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, s, t: (i, j, 0, 0)),  # q
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda i, j, s, t: (t[i, s], 0, j, 0)),          # k
+            pl.BlockSpec((1, ps, 1), lambda i, j, s, t: (t[i, s], 0, j)),  # ks
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda i, j, s, t: (t[i, s], 0, j, 0)),          # v
+            pl.BlockSpec((1, ps, 1), lambda i, j, s, t: (t[i, s], 0, j)),  # vs
+            pl.BlockSpec((1,), lambda i, j, s, t: (i,)),                  # len
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, s, t: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max
+            pltpu.VMEM((g, 1), jnp.float32),   # running denom
+            pltpu.VMEM((g, d), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, q, k_pages, k_scale, v_pages, v_scale, lens)
+
+
+def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """[P, page_size, ...] pool + [B, NB] tables -> [B, NB * page_size, ...]
+    contiguous logical-order caches (the HLO fallback / oracle layout)."""
+    b, nb = block_tables.shape
+    g = pool[block_tables]                    # [B, NB, ps, ...]
+    return g.reshape(b, nb * pool.shape[1], *pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pages, k_scale, v_pages, v_scale,
+                               block_tables, cache_len):
+    """Pure-jnp oracle: gather the slot's pages into contiguous caches, then
+    the dense int8 decode-attention reference math."""
+    return decode_attention_int8_ref(
+        q,
+        gather_pages(k_pages, block_tables),
+        gather_pages(k_scale, block_tables),
+        gather_pages(v_pages, block_tables),
+        gather_pages(v_scale, block_tables),
+        cache_len,
+    )

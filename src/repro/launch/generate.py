@@ -135,7 +135,7 @@ def make_generate(model, *, prompt_len: int, gen_len: int,
 
 
 def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
-                        donate: bool = True) -> Callable:
+                        donate: bool = True, paged: bool = False) -> Callable:
     """Compile a fixed-size decode chunk over per-slot positions.
 
     The continuous-batching serve loop (repro.serving) can't scan a whole
@@ -157,16 +157,25 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
     their positions freeze, their emissions are marked invalid, and the
     per-slot attention mask keeps them inert. ``toks``/``valid`` come back as
     [B, chunk_steps].
+
+    With ``paged=True`` the returned fn takes the per-slot block tables
+    ([B, NB] int32) between ``remaining`` and ``memory``::
+
+        ... = chunk_fn(params, caches, tok, pos, remaining, tables, memory, key)
+
+    and every decode step addresses the paged caches through them (the
+    tables are constant within a chunk — admissions and retirements only
+    remap pages at chunk boundaries, on the host).
     """
     sample = _make_sampler(model.cfg.vocab, temperature)
 
-    def chunk(params, caches, tok, pos, remaining, memory, key):
+    def chunk(params, caches, tok, pos, remaining, tables, memory, key):
         def step(carry, i):
             tok, caches, pos, rem = carry
             active = rem > 0
             emit = tok[:, 0]
             logits, caches = model.decode_step(params, caches, tok, pos,
-                                               memory)
+                                               memory, block_tables=tables)
             nxt = sample(logits, jax.random.fold_in(key, i))
             tok = jnp.where(active[:, None], nxt, tok)
             pos = pos + active.astype(pos.dtype)
@@ -177,4 +186,11 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
             step, (tok, caches, pos, remaining), jnp.arange(chunk_steps))
         return toks.T, valid.T, tok, caches, pos, rem
 
-    return jax.jit(chunk, donate_argnums=(1,) if donate else ())
+    donate = (1,) if donate else ()
+    if paged:
+        return jax.jit(chunk, donate_argnums=donate)
+
+    def dense_chunk(params, caches, tok, pos, remaining, memory, key):
+        return chunk(params, caches, tok, pos, remaining, None, memory, key)
+
+    return jax.jit(dense_chunk, donate_argnums=donate)

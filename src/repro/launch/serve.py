@@ -24,6 +24,12 @@ positions, and retired independently — mixed gen lengths (``--gen-lens
 8,16,32`` cycles over requests) finish out of order instead of padding to
 the longest. At temperature 0 each request's tokens are identical to the
 static pipeline's.
+
+``--paged`` (with ``--continuous``) swaps the dense slot-row cache for the
+block-granular page pool (``--page-size`` tokens per page, ``--n-pages``
+per layer): admission reserves pages, retirement frees them, and cache HBM
+tracks live tokens instead of ``n_slots * max_len`` — tokens stay bit-exact
+vs the dense pool at temperature 0.
 """
 from __future__ import annotations
 
@@ -51,7 +57,8 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           params=None, dtype=jnp.float32, temperature: float = 0.0,
           legacy_loop: bool = False, prefill_mode: str = "auto",
           continuous: bool = False, n_slots: int = 4, chunk_steps: int = 8,
-          gen_lens: tuple[int, ...] | None = None) -> dict:
+          gen_lens: tuple[int, ...] | None = None, paged: bool = False,
+          page_size: int = 16, n_pages: int | None = None) -> dict:
     if continuous and legacy_loop:
         raise ValueError("--continuous and --legacy-loop are exclusive "
                          "serve loops")
@@ -59,6 +66,9 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         raise ValueError("--gen-lens (mixed gen lengths) needs --continuous; "
                          "the static pipeline pads every request to one "
                          "gen_len")
+    if paged and not continuous:
+        raise ValueError("--paged is a continuous-batching cache layout; "
+                         "add --continuous")
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = build_model(cfg, dtype=dtype, remat=False)
     if params is None:
@@ -108,7 +118,8 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         batcher = ContinuousBatcher(
             model, params, n_slots=n_slots, prompt_len=prompt_len,
             max_new_tokens=max(lens), chunk_steps=chunk_steps,
-            temperature=temperature, prefill_mode=prefill_mode, seed=seed)
+            temperature=temperature, prefill_mode=prefill_mode, seed=seed,
+            paged=paged, page_size=page_size, n_pages=n_pages)
         report = batcher.run(requests, wait_for_arrivals=False)
         return {"tokens": report.tokens_by_rid(),
                 "throughput": report.throughput_tok_s,
@@ -174,6 +185,16 @@ def main() -> None:
     ap.add_argument("--gen-lens", default=None,
                     help="comma-separated gen lengths cycled over requests "
                          "(--continuous only), e.g. 8,16,32")
+    ap.add_argument("--paged", action="store_true",
+                    help="back the continuous KV cache with a page pool + "
+                         "block tables (repro.serving.paged) instead of "
+                         "dense [n_slots, max_len] rows")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="device pages per layer incl. the reserved null "
+                         "page (--paged; default fully provisions n_slots "
+                         "max-length requests)")
     args = ap.parse_args()
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
@@ -182,7 +203,8 @@ def main() -> None:
           quantize=args.quantize, packed=args.packed,
           temperature=args.temperature, legacy_loop=args.legacy_loop,
           continuous=args.continuous, n_slots=args.n_slots,
-          chunk_steps=args.chunk_steps, gen_lens=gen_lens)
+          chunk_steps=args.chunk_steps, gen_lens=gen_lens,
+          paged=args.paged, page_size=args.page_size, n_pages=args.n_pages)
 
 
 if __name__ == "__main__":

@@ -47,6 +47,40 @@ def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos,
     return jax.vmap(per_row)(cache, new, p.reshape(-1))
 
 
+def _page_coords(pos, block_tables: jnp.ndarray, page_size: int):
+    """Per-slot (page id, in-page offset) for a decode write at ``pos``.
+
+    ``block_tables`` is [B, NB] int32 with a trailing always-null column
+    (repro.serving.paged), so a finished slot's frozen one-past-the-end
+    position writes into the null page instead of clamping onto a real one.
+    """
+    b = block_tables.shape[0]
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    page = block_tables[jnp.arange(b), p // page_size]     # [B]
+    return page, p % page_size
+
+
+def _page_write(pool: jnp.ndarray, new: jnp.ndarray, page: jnp.ndarray,
+                off: jnp.ndarray) -> jnp.ndarray:
+    """Scatter one token per slot into the page pool.
+
+    ``pool`` [P, page_size, ...], ``new`` [B, 1, ...] (the usual length-1
+    decode update) -> pool with ``new[b]`` written at ``(page[b], off[b])``.
+    Distinct live slots own disjoint pages, so indices collide only between
+    inert slots aimed at the null page (garbage nobody reads).
+    """
+    return pool.at[page, off].set(new[:, 0].astype(pool.dtype))
+
+
+def _gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """[P, page_size, ...] pool -> [B, NB * page_size, ...] contiguous
+    logical-order caches (the HLO read path; the Pallas kernel never
+    materializes this)."""
+    b, nb = block_tables.shape
+    return pool[block_tables].reshape(
+        b, nb * pool.shape[1], *pool.shape[2:])
+
+
 # ---------------------------------------------------------------------------
 # GQA / MQA / MHA
 # ---------------------------------------------------------------------------
@@ -115,6 +149,25 @@ def gqa_init_cache(cfg: GQAConfig, batch: int, max_len: int, dtype,
     }
 
 
+def gqa_init_paged_cache(cfg: GQAConfig, n_pages: int, page_size: int, dtype,
+                         kv_quant: bool = False) -> dict:
+    """Page-pool layout of :func:`gqa_init_cache`: the batch/seq axes become
+    ``[n_pages, page_size]`` and slots address it through block tables."""
+    dh = cfg.head_dim_
+    shape = (n_pages, page_size, cfg.n_kv_heads, dh)
+    if kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
 def _kv_quantize(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """[B, S, K, D] -> (int8 values, [B, S, K] f32 scales)."""
     scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
@@ -126,9 +179,14 @@ def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
-def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig):
+def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
+               block_tables: jnp.ndarray | None = None):
     """x: [B,1,D]; ``pos``: scalar index of this token, or a [B] vector of
-    per-slot positions (continuous batching). Returns (y, cache)."""
+    per-slot positions (continuous batching). With ``block_tables`` the cache
+    is a page pool (``gqa_init_paged_cache``) addressed per slot through the
+    [B, NB] table. Returns (y, cache)."""
+    if block_tables is not None:
+        return _gqa_decode_paged(params, x, cache, pos, cfg, block_tables)
     b = x.shape[0]
     with scope("attn"):
         positions = _pos_ids(pos, b)
@@ -160,6 +218,58 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig):
             vc = upd(cache["v"], v)
             cache = {"k": kc, "v": vc}
         o = decode_attention(q, kc, vc, cache_len=pos + 1)
+        y = dense(params["wo"], o.reshape(b, 1, -1), "wo")
+    return y, cache
+
+
+def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
+                      cfg: GQAConfig, block_tables: jnp.ndarray):
+    """Paged decode: write this token's K/V into the slot's page, attend the
+    slot's pages through the block table. Identical math to the dense path on
+    the same logical positions — entries past ``pos`` (null/stale pages) are
+    masked to exact zeros, so paged == dense bit-for-bit at temperature 0."""
+    b = x.shape[0]
+    with scope("attn"):
+        positions = _pos_ids(pos, b)
+        q, k, v = _qkv(params, x, cfg, positions)
+        ps = cache["k"].shape[1]
+        page, off = _page_coords(pos, block_tables, ps)
+        p1 = positions[:, 0] + 1                            # [B] cache lens
+        if "k_scale" in cache:  # int8 pages (the paged_attn kernel layout)
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            cache = {
+                "k": _page_write(cache["k"], kq, page, off),
+                "v": _page_write(cache["v"], vq, page, off),
+                "k_scale": _page_write(cache["k_scale"], ks, page, off),
+                "v_scale": _page_write(cache["v_scale"], vs, page, off),
+            }
+            if jax.devices()[0].platform == "tpu":
+                # fused Pallas path: pages gathered in VMEM via scalar-
+                # prefetched block tables, never materialized in HBM
+                from repro.kernels.paged_attn import paged_decode_attention
+                b_, _, h, dh = q.shape
+                kh = cache["k"].shape[2]
+                qg = (q[:, 0] * (dh ** -0.5)).reshape(b_, kh, h // kh, dh)
+                o = paged_decode_attention(
+                    qg, cache["k"], cache["k_scale"], cache["v"],
+                    cache["v_scale"], block_tables, p1)
+                y = dense(params["wo"], o.reshape(b_, 1, -1), "wo")
+                return y, cache
+            kc = _kv_dequantize(_gather_pages(cache["k"], block_tables),
+                                _gather_pages(cache["k_scale"], block_tables),
+                                q.dtype)
+            vc = _kv_dequantize(_gather_pages(cache["v"], block_tables),
+                                _gather_pages(cache["v_scale"], block_tables),
+                                q.dtype)
+        else:
+            cache = {
+                "k": _page_write(cache["k"], k, page, off),
+                "v": _page_write(cache["v"], v, page, off),
+            }
+            kc = _gather_pages(cache["k"], block_tables)
+            vc = _gather_pages(cache["v"], block_tables)
+        o = decode_attention(q, kc, vc, cache_len=p1)
         y = dense(params["wo"], o.reshape(b, 1, -1), "wo")
     return y, cache
 
@@ -275,6 +385,15 @@ def mla_init_cache(cfg: MLAConfig, batch: int, max_len: int, dtype) -> dict:
     }
 
 
+def mla_init_paged_cache(cfg: MLAConfig, n_pages: int, page_size: int,
+                         dtype) -> dict:
+    """Page-pool layout of the MLA latent cache (block-table addressed)."""
+    return {
+        "ckv": jnp.zeros((n_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((n_pages, page_size, cfg.qk_rope_dim), dtype),
+    }
+
+
 def mla_prefill(params: dict, x: jnp.ndarray, cache: dict, cfg: MLAConfig,
                 q_chunk: int = 2048, kv_chunk: int = 2048):
     """Full-prompt MLA forward that also writes the latent cache [0, S)."""
@@ -295,11 +414,17 @@ def mla_prefill(params: dict, x: jnp.ndarray, cache: dict, cfg: MLAConfig,
     return y, cache
 
 
-def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
+def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig,
+               block_tables: jnp.ndarray | None = None):
     """Absorbed decode: attention runs in the latent space (DeepSeek-V2 style).
 
     ``pos`` is a scalar or a [B] vector of per-slot positions (continuous
-    batching); masking and cache writes are per-row in the vector case."""
+    batching); masking and cache writes are per-row in the vector case. With
+    ``block_tables`` the latent cache is a page pool
+    (``mla_init_paged_cache``): the new latent is scattered into the slot's
+    page and the attention reads the slot's pages gathered in logical order —
+    the same einsums on the same valid positions, so paged == dense
+    bit-for-bit."""
     b = x.shape[0]
     h = cfg.n_heads
     with scope("mla"):
@@ -309,8 +434,19 @@ def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
         k_rope_t = apply_rope(
             dense(params["wk_rope"], x, "wk_rope"), positions, cfg.rope_theta
         )
-        ckv = _cache_write(cache["ckv"], ckv_t, pos, axis=1)
-        k_rope = _cache_write(cache["k_rope"], k_rope_t, pos, axis=1)
+        if block_tables is not None:
+            ps = cache["ckv"].shape[1]
+            page, off = _page_coords(pos, block_tables, ps)
+            new_cache = {
+                "ckv": _page_write(cache["ckv"], ckv_t, page, off),
+                "k_rope": _page_write(cache["k_rope"], k_rope_t, page, off),
+            }
+            ckv = _gather_pages(new_cache["ckv"], block_tables)
+            k_rope = _gather_pages(new_cache["k_rope"], block_tables)
+        else:
+            ckv = _cache_write(cache["ckv"], ckv_t, pos, axis=1)
+            k_rope = _cache_write(cache["k_rope"], k_rope_t, pos, axis=1)
+            new_cache = {"ckv": ckv, "k_rope": k_rope}
 
         # absorb W_ukv's key half into q: q_abs [B,1,H,rank]
         wkv_b = params["wkv_b"]["w"].reshape(
@@ -332,7 +468,7 @@ def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig):
         ctx = jnp.einsum("bohs,bsr->bohr", p.astype(x.dtype), ckv)
         o = jnp.einsum("bohr,rhd->bohd", ctx, w_uv.astype(x.dtype))
         y = dense(params["wo"], o.reshape(b, 1, h * cfg.v_dim), "wo")
-    return y, {"ckv": ckv, "k_rope": k_rope}
+    return y, new_cache
 
 
 # ---------------------------------------------------------------------------

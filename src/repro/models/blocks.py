@@ -148,13 +148,29 @@ def block_apply(
     return x, aux
 
 
+PAGED_MIXERS = ("attn", "mla")   # mixers whose cache has a sequence axis
+
+
 def block_init_cache(spec: BlockSpec, dims: BlockDims, batch: int,
-                     max_len: int, dtype, kv_quant: bool = False) -> dict:
+                     max_len: int, dtype, kv_quant: bool = False,
+                     n_pages: int | None = None,
+                     page_size: int | None = None) -> dict:
+    """``n_pages``/``page_size`` switch attention-family caches to the paged
+    pool layout (``[n_pages, page_size, ...]`` addressed via block tables);
+    stateful mixers (mamba/xlstm) have no sequence axis to page, so their
+    per-slot states stay ``[batch, ...]`` either way."""
     if spec.mixer == "attn":
-        c = al.gqa_init_cache(dims.gqa, batch, max_len, dtype,
-                              kv_quant=kv_quant)
+        if n_pages is not None:
+            c = al.gqa_init_paged_cache(dims.gqa, n_pages, page_size, dtype,
+                                        kv_quant=kv_quant)
+        else:
+            c = al.gqa_init_cache(dims.gqa, batch, max_len, dtype,
+                                  kv_quant=kv_quant)
     elif spec.mixer == "mla":
-        c = al.mla_init_cache(dims.mla, batch, max_len, dtype)
+        if n_pages is not None:
+            c = al.mla_init_paged_cache(dims.mla, n_pages, page_size, dtype)
+        else:
+            c = al.mla_init_cache(dims.mla, batch, max_len, dtype)
     elif spec.mixer == "mamba":
         c = mb.mamba_init_state(dims.mamba, batch, dtype)
     elif spec.mixer == "mlstm":
@@ -226,12 +242,15 @@ def block_decode(
     dims: BlockDims,
     *,
     mem_kv_src: jnp.ndarray | None = None,
+    block_tables: jnp.ndarray | None = None,   # [B, NB]: paged KV cache
 ):
     h = _norm(dims, params["norm1"], x)
     if spec.mixer == "attn":
-        h, c = al.gqa_decode(params["mixer"], h, cache["mixer"], pos, dims.gqa)
+        h, c = al.gqa_decode(params["mixer"], h, cache["mixer"], pos, dims.gqa,
+                             block_tables=block_tables)
     elif spec.mixer == "mla":
-        h, c = al.mla_decode(params["mixer"], h, cache["mixer"], pos, dims.mla)
+        h, c = al.mla_decode(params["mixer"], h, cache["mixer"], pos, dims.mla,
+                             block_tables=block_tables)
     elif spec.mixer == "mamba":
         h, c = mb.mamba_decode(params["mixer"], h, cache["mixer"], dims.mamba)
     elif spec.mixer == "mlstm":

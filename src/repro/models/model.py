@@ -284,10 +284,23 @@ class Model:
         return logits, aux
 
     # ---------------------------------------------------------------- cache
-    def init_cache(self, batch: int, max_len: int) -> tuple:
+    def init_cache(self, batch: int, max_len: int,
+                   n_pages: int | None = None,
+                   page_size: int | None = None) -> tuple:
+        """Zeroed decode caches, stacked [G, ...] per pattern position.
+
+        With ``n_pages``/``page_size`` the attention-family caches are built
+        as page pools (``[G, n_pages, page_size, ...]``) for the paged serve
+        path — ``decode_step`` then needs ``block_tables`` to address them;
+        stateful (SSM) caches keep their dense ``[G, batch, ...]`` rows.
+        """
+        assert (n_pages is None) == (page_size is None), \
+            "paged cache needs both n_pages and page_size"
+
         def one(spec):
             c = block_init_cache(spec, self.dims, batch, max_len, self.dtype,
-                                 kv_quant=self.kv_quant)
+                                 kv_quant=self.kv_quant, n_pages=n_pages,
+                                 page_size=page_size)
             # stack over groups
             return jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), c)
@@ -374,7 +387,8 @@ class Model:
         return logits, caches
 
     def decode_step(self, params: dict, caches: tuple, token: jnp.ndarray,
-                    pos, memory: jnp.ndarray | None = None):
+                    pos, memory: jnp.ndarray | None = None,
+                    block_tables: jnp.ndarray | None = None):
         """token: [B, 1] -> (logits [B, 1, V], new caches).
 
         ``pos`` is a scalar (static pipeline: the whole batch sits at one
@@ -382,6 +396,11 @@ class Model:
         each row of the batch is an independent KV slot — RoPE, cache writes,
         and the attention length mask are all per-row, so finished or empty
         slots are inert and cannot influence live ones).
+
+        ``block_tables`` ([B, NB] int32) switches attention caches to the
+        paged layout (``init_cache(..., n_pages=, page_size=)``): row ``b``'s
+        logical position ``i`` lives in page ``block_tables[b, i // ps]``.
+        The one table is shared by every layer (each layer has its own pool).
         """
         mem = self._memory(params, memory)
         x = embed(params["embed"], token).astype(self.dtype)
@@ -394,7 +413,7 @@ class Model:
                 with scope(f"block{p}"):
                     x, c = block_decode(
                         layer_params[p], x, layer_cache[p], pos, spec,
-                        self.dims, mem_kv_src=mem)
+                        self.dims, mem_kv_src=mem, block_tables=block_tables)
                 new_cache.append(c)
             return x, tuple(new_cache)
 

@@ -9,18 +9,33 @@ keeps the device busy across many concurrent requests instead:
   * ``scheduler`` — arrival-ordered admission queue + Poisson trace builder;
   * ``batcher``   — the serve loop: prefill-on-admit into a free slot's cache
                     region, one jitted chunk of decode steps over all live
-                    slots, then a host-side admit/retire pass.
+                    slots, then a host-side admit/retire pass;
+  * ``paged``     — block-granular KV cache: page allocator + block tables
+                    backing the batcher's ``paged=True`` mode, where a
+                    request occupies only the pages its tokens need.
 """
 from repro.serving.batcher import Completion, ContinuousBatcher, ServeReport
+from repro.serving.paged import (
+    BlockTableSet,
+    PageAllocator,
+    PageStats,
+    pages_needed,
+)
 from repro.serving.scheduler import FIFOScheduler, Request, poisson_trace
-from repro.serving.slots import SlotPool
+from repro.serving.slots import PoolExhausted, SlotError, SlotPool
 
 __all__ = [
+    "BlockTableSet",
     "Completion",
     "ContinuousBatcher",
     "FIFOScheduler",
+    "PageAllocator",
+    "PageStats",
+    "PoolExhausted",
     "Request",
     "ServeReport",
+    "SlotError",
     "SlotPool",
+    "pages_needed",
     "poisson_trace",
 ]

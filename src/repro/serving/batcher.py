@@ -25,6 +25,26 @@ At temperature 0 the emitted tokens per request are identical to the static
 scan pipeline's: the same decode_step runs at the same positions with the
 same cache contents, and padded cache tail positions drop out of the
 softmax exactly.
+
+**Paged mode** (``paged=True``) swaps the dense ``[B_max, max_len]`` cache
+rows for a block-granular page pool (repro.serving.paged +
+``Model.init_cache(n_pages=, page_size=)``): admission *reserves* exactly
+the pages the request's prompt + gen budget needs (re-queuing the request
+via :class:`PoolExhausted` when the pool is momentarily full), prefill
+scatters the prompt's K/V page-by-page instead of into a batch row, the
+decode chunk addresses every cache through per-slot block tables, and
+retirement releases the pages immediately — so resident cache HBM tracks
+the *live token count*, not ``n_slots * max_len``. Tokens stay bit-exact
+vs the dense slot pool at temperature 0 (same math at the same logical
+positions; see attention_layers).
+
+Prompts may be **ragged**: shorter than ``prompt_len`` prompts are
+right-padded to the one compiled prefill shape, the first token is sampled
+from the logits at the request's true last prompt position, and decode
+starts there — pad positions are never attended (causal prefill + the
+per-slot length mask) and are overwritten one-by-one as generation
+advances. Ragged prompts need a fused-prefill pattern (attention-family
+mixers); SSM/hybrid patterns keep the fixed-length requirement.
 """
 from __future__ import annotations
 
@@ -36,8 +56,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.generate import _make_sampler, make_chunked_decode
+from repro.models.blocks import PAGED_MIXERS
+from repro.serving.paged import BlockTableSet, PageAllocator, pages_needed
 from repro.serving.scheduler import FIFOScheduler, Request
-from repro.serving.slots import SlotPool
+from repro.serving.slots import PoolExhausted, SlotPool
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serving").info
@@ -72,6 +94,8 @@ class ServeReport:
     n_chunks: int = 0
     n_prefills: int = 0
     peak_active: int = 0
+    total_admitted: int = 0
+    pages: dict | None = None      # PageStats.summary() when serving paged
 
     @property
     def generated_tokens(self) -> int:
@@ -89,7 +113,7 @@ class ServeReport:
         return {c.rid: c.tokens for c in self.completions}
 
     def summary(self) -> dict:
-        return {
+        out = {
             "n_requests": len(self.completions),
             "generated_tokens": self.generated_tokens,
             "wall_s": self.wall_s,
@@ -99,24 +123,36 @@ class ServeReport:
             "n_chunks": self.n_chunks,
             "n_prefills": self.n_prefills,
             "peak_active_slots": self.peak_active,
+            "total_admitted": self.total_admitted,
         }
+        if self.pages is not None:
+            out["pages"] = dict(self.pages)
+        return out
 
 
 class ContinuousBatcher:
     """Slot-pooled continuous batching over a (model, params) pair.
 
     ``n_slots`` is the fixed decode batch (B_max); ``prompt_len`` and
-    ``max_new_tokens`` bound the pooled cache at
-    ``prompt_len + max_new_tokens`` positions per slot. All requests must
-    use exactly ``prompt_len`` prompt tokens (one prefill compile) and at
-    most ``max_new_tokens`` generated tokens (cache capacity); gen lengths
-    below the bound finish early and free their slot.
+    ``max_new_tokens`` bound each request at
+    ``prompt_len + max_new_tokens`` positions. Prompts may be shorter than
+    ``prompt_len`` (ragged — right-padded into the one compiled prefill
+    shape; fused-prefill patterns only) and gen lengths below the bound
+    finish early and free their slot.
+
+    ``paged=True`` backs the cache with a page pool instead of dense
+    ``[n_slots, max_len]`` rows: ``page_size`` tokens per page,
+    ``n_pages`` device pages per layer (default: full provisioning —
+    every slot can hold a max-length request — plus the reserved null
+    page; undersize it to oversubscribe memory and let admission re-queue
+    on :class:`PoolExhausted`).
     """
 
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
                  max_new_tokens: int, chunk_steps: int = 8,
                  temperature: float = 0.0, prefill_mode: str = "auto",
-                 seed: int = 0):
+                 seed: int = 0, paged: bool = False, page_size: int = 16,
+                 n_pages: int | None = None):
         if model.cfg.encoder is not None or model.cfg.vision is not None:
             raise NotImplementedError(
                 "continuous batching serves decoder-only archs; "
@@ -131,12 +167,33 @@ class ContinuousBatcher:
         self.max_len = prompt_len + max_new_tokens
         self.chunk_steps = chunk_steps
         self.key = jax.random.PRNGKey(seed)
+        self.paged = paged
+        # ragged prompts need per-position prefill logits to sample at the
+        # true last prompt token; scan-mode prefill (forced or SSM-required)
+        # returns last-padded-position logits only, so it pins prompts to
+        # the full compiled length (_admit enforces this)
+        self._fused_prefill = (model.can_fused_prefill
+                               and prefill_mode != "scan")
+        if paged:
+            assert page_size > 0
+            self.page_size = page_size
+            self.max_blocks = -(-self.max_len // page_size)
+            self.prompt_blocks = -(-prompt_len // page_size)
+            # default: fully provisioned (n_slots max-length requests) +
+            # the reserved null page
+            self.n_pages = n_pages or 1 + n_slots * self.max_blocks
 
         sample = _make_sampler(model.cfg.vocab, temperature)
 
-        def prefill(params, caches, prompt, key):
+        def prefill(params, caches, prompt, tlen, key):
             logits, caches = model.prefill(params, caches, prompt,
                                            mode=prefill_mode)
+            if self._fused_prefill:
+                # ragged prompts: the request's real last position, not the
+                # padded one (scan-mode prefill already returns last-only
+                # logits and requires tlen == prompt_len)
+                logits = jax.lax.dynamic_slice_in_dim(logits, tlen - 1, 1,
+                                                      axis=1)
             return sample(logits, key), caches
 
         def write_slot(pool, one, slot):
@@ -144,30 +201,87 @@ class ContinuousBatcher:
                 p, o.astype(p.dtype), slot, axis=1)   # axis 1 = batch (post
             return jax.tree.map(scatter, pool, one)   # group-stacking)
 
+        def write_paged(pool, one, slot, pages):
+            # pages: [prompt_blocks] page ids (null-padded past the prompt's
+            # own pages). Attention caches scatter page-by-page; stateful
+            # mixers keep dense [G, B, ...] rows and scatter by slot.
+            out = []
+            for entry_pool, entry_one, spec in zip(pool, one, model.pattern):
+                if spec.mixer in PAGED_MIXERS:
+                    def scat(p, o):
+                        g = o.shape[0]
+                        o = o[:, 0].reshape(g, self.prompt_blocks,
+                                            self.page_size, *o.shape[3:])
+                        return p.at[:, pages].set(o.astype(p.dtype))
+                    out.append(jax.tree.map(scat, entry_pool, entry_one))
+                else:
+                    scatter = lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+                        p, o.astype(p.dtype), slot, axis=1)
+                    out.append(jax.tree.map(scatter, entry_pool, entry_one))
+            return tuple(out)
+
         self._prefill = jax.jit(prefill)
         self._write = jax.jit(write_slot, donate_argnums=(0,))
+        self._write_pg = jax.jit(write_paged, donate_argnums=(0,))
         self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
-                                          temperature=temperature)
+                                          temperature=temperature, paged=paged)
         # one zeroed batch-1 cache template shared by every admission:
         # _prefill doesn't donate or mutate its cache arg, and the prompt
         # prefill overwrites [0, prompt_len) while the per-slot length mask
-        # hides the (zero) tail, so reuse is safe
-        self._fresh = self.model.init_cache(1, self.max_len)
+        # hides the (zero/stale) tail, so reuse is safe. Paged mode only
+        # needs the prompt's pages' worth of positions.
+        fresh_len = (self.prompt_blocks * page_size if paged else self.max_len)
+        self._fresh = self.model.init_cache(1, fresh_len)
+        # per-run paged state (fresh in run())
+        self._alloc: PageAllocator | None = None
+        self._tables: BlockTableSet | None = None
 
-    def _admit(self, req: Request, slot: int, caches, tok, pos, rem, key):
+    def _reserve(self, req: Request) -> list[int] | None:
+        """Claim the pages ``req`` needs up front (so it can never run out
+        mid-flight); raises PoolExhausted for the run loop to re-queue."""
+        if not self.paged:
+            return None
+        need = pages_needed(len(np.asarray(req.prompt)), req.max_new_tokens,
+                            self.page_size)
+        return self._alloc.alloc(need)
+
+    def _admit(self, req: Request, slot: int, pages, caches, tok, pos, rem,
+               key):
         """Prefill ``req`` into ``slot``'s cache region; update slot state."""
         prompt = np.asarray(req.prompt)
-        assert prompt.shape == (self.prompt_len,), (
-            f"request {req.rid}: prompt len {prompt.shape} != batcher's "
-            f"compiled {self.prompt_len}")
-        assert req.max_new_tokens <= self.max_new_tokens, (
-            f"request {req.rid}: gen len {req.max_new_tokens} exceeds slot "
-            f"capacity {self.max_new_tokens}")
+        tlen = int(prompt.shape[0])
+        if not 0 < tlen <= self.prompt_len:
+            raise ValueError(
+                f"request {req.rid}: prompt len {tlen} outside the batcher's "
+                f"compiled (0, {self.prompt_len}]")
+        if tlen != self.prompt_len and not self._fused_prefill:
+            raise ValueError(
+                f"request {req.rid}: ragged prompt ({tlen} != "
+                f"{self.prompt_len}) needs a fused-prefill pattern; this "
+                f"pattern prefills by scan and returns last-position logits "
+                f"only")
+        if req.max_new_tokens > self.max_new_tokens:
+            raise ValueError(
+                f"request {req.rid}: gen len {req.max_new_tokens} exceeds "
+                f"slot capacity {self.max_new_tokens}")
+        padded = np.zeros(self.prompt_len, np.int32)
+        padded[:tlen] = prompt
         tok0, one = self._prefill(self.params, self._fresh,
-                                  jnp.asarray(prompt[None, :]), key)
-        caches = self._write(caches, one, jnp.int32(slot))
+                                  jnp.asarray(padded[None, :]),
+                                  jnp.int32(tlen), key)
+        if self.paged:
+            self._tables.assign(slot, pages)
+            # scatter only the pages the prompt itself occupies; the jit's
+            # static prompt_blocks shape is padded with null-page targets
+            n_prompt = -(-tlen // self.page_size)
+            scat = np.zeros(self.prompt_blocks, np.int32)
+            scat[:n_prompt] = pages[:n_prompt]
+            caches = self._write_pg(caches, one, jnp.int32(slot),
+                                    jnp.asarray(scat))
+        else:
+            caches = self._write(caches, one, jnp.int32(slot))
         tok[slot, 0] = int(np.asarray(tok0)[0, 0])
-        pos[slot] = self.prompt_len
+        pos[slot] = tlen
         rem[slot] = req.max_new_tokens
         return caches
 
@@ -185,7 +299,14 @@ class ContinuousBatcher:
                         for r in requests]
         sched = FIFOScheduler(requests)
         pool = SlotPool(self.n_slots)
-        caches = self.model.init_cache(self.n_slots, self.max_len)
+        if self.paged:
+            self._alloc = PageAllocator(self.n_pages, self.page_size)
+            self._tables = BlockTableSet(self.n_slots, self.max_blocks)
+            caches = self.model.init_cache(
+                self.n_slots, self.max_len, n_pages=self.n_pages,
+                page_size=self.page_size)
+        else:
+            caches = self.model.init_cache(self.n_slots, self.max_len)
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros(self.n_slots, np.int32)
         rem = np.zeros(self.n_slots, np.int32)
@@ -202,9 +323,28 @@ class ContinuousBatcher:
             # ---- admit: fill free slots from the arrived queue -----------
             while pool.free_slots() and sched.ready(clock()):
                 req = sched.pop(clock())
-                slot = pool.admit(req, clock())
+                try:
+                    pages = self._reserve(req)
+                    try:
+                        slot = pool.admit(req, clock())
+                    except PoolExhausted:
+                        if pages:
+                            self._alloc.free(pages)
+                        raise
+                except PoolExhausted as e:
+                    # momentary capacity shortfall: put the request back and
+                    # retry once a retirement frees pages/slots
+                    sched.push_front(req)
+                    if not pool.any_active():
+                        # nothing in flight will ever release capacity —
+                        # the request simply doesn't fit this pool
+                        raise PoolExhausted(
+                            f"request {req.rid} can never be admitted "
+                            f"(empty pool): {e}") from e
+                    break
                 self.key, k = jax.random.split(self.key)
-                caches = self._admit(req, slot, caches, tok, pos, rem, k)
+                caches = self._admit(req, slot, pages, caches, tok, pos,
+                                     rem, k)
                 n_prefills += 1
 
             if not pool.any_active():
@@ -217,9 +357,14 @@ class ContinuousBatcher:
 
             # ---- decode one chunk over all slots -------------------------
             self.key, k = jax.random.split(self.key)
-            toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
-                self.params, caches, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(rem), None, k)
+            chunk_args = (jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(rem))
+            if self.paged:
+                toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
+                    self.params, caches, *chunk_args,
+                    jnp.asarray(self._tables.array), None, k)
+            else:
+                toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
+                    self.params, caches, *chunk_args, None, k)
             toks = np.asarray(toks)          # the chunk's single host sync
             valid = np.asarray(valid)
             tok = np.array(tok_d)            # writable copies: admissions
@@ -234,6 +379,10 @@ class ContinuousBatcher:
                 rec = pool.get(slot)
                 if rec.done:
                     rec, fin = pool.retire(slot, now)
+                    if self.paged:
+                        # release immediately: out-of-order completion hands
+                        # pages to the next queued prompt at this boundary
+                        self._alloc.free(self._tables.release(slot))
                     completions.append(Completion(
                         rid=rec.request.rid,
                         tokens=np.asarray(rec.emitted, np.int32),
@@ -246,12 +395,23 @@ class ContinuousBatcher:
         report = ServeReport(
             completions=sorted(completions, key=lambda c: c.rid),
             wall_s=clock(), n_chunks=n_chunks, n_prefills=n_prefills,
-            peak_active=pool.peak_active)
+            peak_active=pool.peak_active,
+            total_admitted=pool.total_admitted,
+            pages=self._alloc.stats().summary() if self.paged else None)
         s = report.summary()
+        paged_note = ""
+        if self.paged:
+            p = s["pages"]
+            paged_note = (f", pages {p['peak_pages_in_use']}/"
+                          f"{p['n_pages'] - 1} peak "
+                          f"({p['peak_page_occupancy']:.0%} occupancy, "
+                          f"size {p['page_size']})")
         log(f"continuous: {s['n_requests']} reqs, "
             f"{s['generated_tokens']} toks in {s['wall_s']:.2f}s "
             f"({s['throughput_tok_s']:.1f} tok/s, "
             f"p50 {s['p50_latency_s']:.2f}s p95 {s['p95_latency_s']:.2f}s, "
             f"{n_chunks} chunks x {self.chunk_steps} steps, "
-            f"{n_prefills} prefills)")
+            f"{n_prefills} prefills, "
+            f"peak {s['peak_active_slots']}/{self.n_slots} slots, "
+            f"{s['total_admitted']} admitted{paged_note})")
         return report

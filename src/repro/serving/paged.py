@@ -1,0 +1,186 @@
+"""Paged KV cache: host-side page allocator + block-table bookkeeping.
+
+The dense slot pool (slots.py) gives every slot a ``[B_max, max_len]`` cache
+row, so HBM is sized by the *longest possible* request times the slot count
+— padding for short prompts and unreached gen tails is resident for the
+whole serve. This module instead treats cache memory as a pool of fixed-size
+**pages** (``[n_pages, page_size, ...]`` per layer on device, built by
+``Model.init_cache(..., n_pages=, page_size=)``) and hands each request only
+the pages its own token count needs:
+
+  * ``PageAllocator`` — a free list over page ids. Page 0 is reserved as the
+    **null page**: block-table entries of retired/empty slots point at it, so
+    the chunked decode loop's inert rows scribble there instead of into pages
+    that may since have been re-issued to a new request.
+  * ``BlockTable`` rows (one per slot, built by the batcher) map a slot's
+    logical token position ``i`` to device page ``table[i // page_size]``,
+    offset ``i % page_size``. Tables carry one extra trailing column that is
+    always the null page, absorbing the one-past-the-end write a finished
+    slot's frozen position performs during the rest of its chunk.
+  * Admission **reserves** every page the request could touch
+    (``pages_needed(prompt_len, gen_len, page_size)``) up front, so a request
+    can never run out of cache mid-flight; retirement releases them
+    immediately — out-of-order completion returns memory to the pool without
+    waiting for the batch.
+
+The device side (page pools in the cache pytree, the block-table gather in
+``attention_layers``/``kernels.paged_attn``) never sees this module — the
+batcher passes it plain ``[B, max_blocks + 1]`` int32 tables.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serving.slots import PoolExhausted, SlotError
+
+NULL_PAGE = 0
+
+
+def pages_needed(prompt_len: int, gen_len: int, page_size: int) -> int:
+    """Pages a request with ``prompt_len`` prompt + ``gen_len`` generated
+    tokens occupies (ceil division; the trailing null-sentinel column of the
+    block table is not counted — it is shared)."""
+    assert prompt_len > 0 and gen_len > 0 and page_size > 0
+    return -(-(prompt_len + gen_len) // page_size)
+
+
+@dataclass(frozen=True)
+class PageStats:
+    """Allocator counters for the serve summary / benchmarks."""
+
+    n_pages: int           # total device pages (incl. the reserved null page)
+    page_size: int
+    in_use: int            # pages currently held by live requests
+    peak_in_use: int       # high-water mark over the trace
+    avg_in_use: float      # time-weighted mean pages resident over the trace
+    total_allocs: int      # pages handed out over the allocator's lifetime
+
+    @property
+    def usable(self) -> int:
+        return self.n_pages - 1    # minus the null page
+
+    @property
+    def peak_occupancy(self) -> float:
+        return self.peak_in_use / max(self.usable, 1)
+
+    def summary(self) -> dict:
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.in_use,
+            "peak_pages_in_use": self.peak_in_use,
+            "avg_pages_in_use": self.avg_in_use,
+            "peak_page_occupancy": self.peak_occupancy,
+            "total_page_allocs": self.total_allocs,
+        }
+
+
+class PageAllocator:
+    """Free-list allocator over device page ids ``1 .. n_pages - 1``.
+
+    Page 0 (``NULL_PAGE``) is never issued — it is the scribble target for
+    inert slots. ``alloc`` raises :class:`PoolExhausted` (leaving the free
+    list untouched) when the request cannot be satisfied, so the batcher can
+    re-queue the request instead of crashing; ``free`` raises
+    :class:`SlotError` on a double-free or an unknown page id.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 usable + null), got {n_pages}")
+        assert page_size > 0
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: deque[int] = deque(range(1, n_pages))
+        self._held: set[int] = set()
+        self.peak_in_use = 0
+        self.total_allocs = 0
+        self._t0 = self._t_last = time.perf_counter()
+        self._page_seconds = 0.0   # integral of in_use over time
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._held)
+
+    def _tick(self) -> None:
+        now = time.perf_counter()
+        self._page_seconds += len(self._held) * (now - self._t_last)
+        self._t_last = now
+
+    def alloc(self, n: int) -> list[int]:
+        """Claim ``n`` pages; all-or-nothing."""
+        assert n > 0
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free "
+                f"(pool of {self.n_pages - 1} usable)")
+        self._tick()
+        pages = [self._free.popleft() for _ in range(n)]
+        self._held.update(pages)
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, len(self._held))
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        """Return ``pages`` to the free list (double-free is an error)."""
+        self._tick()
+        for p in pages:
+            if p not in self._held:
+                raise SlotError(f"freeing page {p} that is not allocated "
+                                f"(double-free or foreign id)")
+            self._held.discard(p)
+            self._free.append(p)
+
+    def stats(self) -> PageStats:
+        self._tick()
+        elapsed = max(self._t_last - self._t0, 1e-9)
+        return PageStats(n_pages=self.n_pages, page_size=self.page_size,
+                         in_use=self.in_use, peak_in_use=self.peak_in_use,
+                         avg_in_use=self._page_seconds / elapsed,
+                         total_allocs=self.total_allocs)
+
+
+class BlockTableSet:
+    """Per-slot block tables as one ``[n_slots, max_blocks + 1]`` int32 array.
+
+    The trailing column is permanently ``NULL_PAGE``: a finished slot whose
+    frozen position sits one past its last token indexes that column, so the
+    write lands in the null page instead of clamping onto the slot's own
+    (about-to-be-freed) last page.
+    """
+
+    def __init__(self, n_slots: int, max_blocks: int):
+        self.max_blocks = max_blocks
+        self.array = np.zeros((n_slots, max_blocks + 1), np.int32)
+        self._slot_pages: dict[int, list[int]] = {}
+
+    def assign(self, slot: int, pages: list[int]) -> None:
+        if slot in self._slot_pages:
+            raise SlotError(f"slot {slot} already holds pages")
+        if len(pages) > self.max_blocks:
+            raise SlotError(
+                f"slot {slot}: {len(pages)} pages exceed the table's "
+                f"{self.max_blocks} blocks (the trailing column must stay "
+                f"the null sentinel)")
+        self.array[slot, :] = NULL_PAGE
+        self.array[slot, :len(pages)] = pages
+        self._slot_pages[slot] = list(pages)
+
+    def release(self, slot: int) -> list[int]:
+        """Zero the slot's row; returns the pages it held (for the allocator)."""
+        pages = self._slot_pages.pop(slot, None)
+        if pages is None:
+            raise SlotError(f"slot {slot} holds no pages")
+        self.array[slot, :] = NULL_PAGE
+        return pages
+
+    def pages_of(self, slot: int) -> list[int]:
+        return list(self._slot_pages.get(slot, ()))

@@ -52,6 +52,11 @@ class FIFOScheduler:
         """Admit the head request if it has arrived; None otherwise."""
         return self._queue.popleft() if self.ready(now) else None
 
+    def push_front(self, request: Request) -> None:
+        """Return a popped request to the head of the queue (admission was
+        rolled back — e.g. the page pool could not cover it this chunk)."""
+        self._queue.appendleft(request)
+
     def next_arrival(self) -> float | None:
         """Arrival time of the head request (None when the queue is empty)."""
         return self._queue[0].arrival_s if self._queue else None
@@ -64,22 +69,31 @@ def poisson_trace(
     vocab: int,
     rate_rps: float = 16.0,
     gen_lens: tuple[int, ...] = (8, 16, 32),
+    prompt_lens: tuple[int, ...] | None = None,
     seed: int = 0,
 ) -> list[Request]:
-    """Build a Poisson arrival trace with mixed gen lengths.
+    """Build a Poisson arrival trace with mixed gen (and prompt) lengths.
 
     Inter-arrival gaps are exponential with mean ``1 / rate_rps`` seconds;
     each request draws its gen length uniformly from ``gen_lens`` and a
-    random prompt of ``prompt_len`` tokens. Deterministic in ``seed`` so the
-    serving benchmark replays the identical trace for the continuous and
-    static baselines.
+    random prompt of ``prompt_len`` tokens — or, with ``prompt_lens``, a
+    ragged prompt whose length is drawn uniformly from that tuple (every
+    entry must be <= ``prompt_len``, the batcher's compiled pad length).
+    Deterministic in ``seed`` so benchmark runs (and the CI bench-gate's
+    baseline comparison) replay the identical arrival trace.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
+    if prompt_lens is not None:
+        assert all(0 < pl <= prompt_len for pl in prompt_lens), (
+            prompt_lens, prompt_len)
     return [
         Request(
             rid=i,
-            prompt=rng.integers(0, vocab, prompt_len, dtype=np.int32),
+            prompt=rng.integers(
+                0, vocab,
+                int(rng.choice(prompt_lens)) if prompt_lens else prompt_len,
+                dtype=np.int32),
             max_new_tokens=int(rng.choice(gen_lens)),
             arrival_s=float(arrivals[i]),
         )

@@ -19,6 +19,19 @@ import numpy as np
 from repro.serving.scheduler import Request
 
 
+class PoolExhausted(RuntimeError):
+    """A pooled resource (decode slots, cache pages) has no free capacity.
+
+    Raised instead of crashing with a bare assert so the serve loop can catch
+    it, re-queue the request, and retry at the next chunk boundary."""
+
+
+class SlotError(LookupError):
+    """A slot/page operation that violates the pool's bookkeeping invariants
+    (reading a free slot, retiring an unfinished request, double-freeing a
+    page) — a bug in the caller, not a transient capacity condition."""
+
+
 @dataclass
 class SlotRecord:
     """One slot's host state while a request occupies it."""
@@ -54,13 +67,19 @@ class SlotPool:
 
     def get(self, index: int) -> SlotRecord:
         rec = self._slots[index]
-        assert rec is not None, f"slot {index} is free"
+        if rec is None:
+            raise SlotError(f"slot {index} is free")
         return rec
 
     def admit(self, request: Request, now: float) -> int:
-        """Claim the lowest free slot for ``request``; returns its index."""
+        """Claim the lowest free slot for ``request``; returns its index.
+
+        Raises :class:`PoolExhausted` when every slot is occupied — the
+        batcher re-queues the request instead of dying mid-trace."""
         free = self.free_slots()
-        assert free, "admit() with no free slot — check free_slots() first"
+        if not free:
+            raise PoolExhausted(
+                f"all {self.n_slots} slots occupied (request {request.rid})")
         index = free[0]
         self._slots[index] = SlotRecord(index, request, admitted_s=now)
         self.total_admitted += 1
@@ -75,8 +94,9 @@ class SlotPool:
     def retire(self, index: int, now: float) -> tuple[SlotRecord, float]:
         """Free the slot; returns its final record + finish timestamp."""
         rec = self.get(index)
-        assert rec.done, (
-            f"retiring slot {index} after {len(rec.emitted)} of "
-            f"{rec.request.max_new_tokens} tokens")
+        if not rec.done:
+            raise SlotError(
+                f"retiring slot {index} after {len(rec.emitted)} of "
+                f"{rec.request.max_new_tokens} tokens")
         self._slots[index] = None
         return rec, now

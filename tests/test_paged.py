@@ -1,0 +1,342 @@
+"""Paged KV cache: allocator invariants, the Pallas paged-attention kernel
+vs its oracle, block-table decode equivalence, and paged-vs-dense serve-loop
+bit-exactness over ragged traces (repro.serving.paged + kernels.paged_attn).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs.registry import get_smoke_config
+from repro.kernels.paged_attn import (
+    paged_decode_attention,
+    paged_decode_attention_ref,
+)
+from repro.launch.generate import make_generate
+from repro.models.model import build_model
+from repro.serving import (
+    ContinuousBatcher,
+    PageAllocator,
+    PoolExhausted,
+    Request,
+    SlotError,
+    pages_needed,
+)
+
+CFG = get_smoke_config("granite-3-8b")
+PROMPT_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = build_model(CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(spec, seed=0):
+    """spec: list of (prompt_len, gen_len) — ragged prompts allowed."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=rng.integers(0, CFG.vocab, pl, dtype=np.int32),
+                max_new_tokens=g)
+        for i, (pl, g) in enumerate(spec)
+    ]
+
+
+def _static_tokens(model, params, req):
+    """Per-request ground truth: the two-dispatch pipeline at the request's
+    exact prompt length (no padding at all)."""
+    plen = len(np.asarray(req.prompt))
+    pipe = make_generate(model, prompt_len=plen, gen_len=req.max_new_tokens)
+    caches = model.init_cache(1, plen + req.max_new_tokens)
+    return np.asarray(
+        pipe.run(params, caches, jnp.asarray(req.prompt[None, :])))[0]
+
+
+# --------------------------------------------------------------- allocator
+def test_allocator_alloc_free_cycle():
+    alloc = PageAllocator(n_pages=6, page_size=4)
+    a = alloc.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a      # unique ids, null reserved
+    assert alloc.in_use == 3 and alloc.available == 2
+    b = alloc.alloc(2)
+    assert not set(a) & set(b)
+    with pytest.raises(PoolExhausted):
+        alloc.alloc(1)
+    assert alloc.in_use == 5                    # failed alloc takes nothing
+    alloc.free(a)
+    assert alloc.available == 3
+    c = alloc.alloc(3)                          # freed pages recycle
+    assert set(c) == set(a)
+    assert alloc.stats().peak_in_use == 5
+    assert alloc.stats().total_allocs == 8
+
+
+def test_allocator_double_free_and_foreign_free():
+    alloc = PageAllocator(n_pages=4, page_size=2)
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(SlotError):
+        alloc.free(pages)                       # double-free
+    with pytest.raises(SlotError):
+        alloc.free([0])                         # null page was never issued
+
+
+def test_pages_needed():
+    assert pages_needed(8, 8, 8) == 2
+    assert pages_needed(1, 1, 8) == 1
+    assert pages_needed(9, 8, 8) == 3           # 17 tokens -> 3 pages
+    assert pages_needed(16, 32, 8) == 6
+
+
+def test_allocator_random_traces_never_leak_or_alias():
+    """Property: under arbitrary alloc/free interleavings the allocator never
+    double-issues a live page, never issues the null page, and conserves
+    pages exactly (held + available == usable)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = hypothesis.strategies
+
+    @hypothesis.given(
+        n_pages=st.integers(2, 24),
+        ops=st.lists(st.tuples(st.booleans(), st.integers(1, 6),
+                               st.integers(0, 5)), max_size=40),
+    )
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def run(n_pages, ops):
+        alloc = PageAllocator(n_pages, page_size=4)
+        held: list[list[int]] = []
+        for is_alloc, n, pick in ops:
+            if is_alloc:
+                try:
+                    pages = alloc.alloc(n)
+                except PoolExhausted:
+                    assert n > alloc.available
+                    continue
+                live = {p for grp in held for p in grp}
+                assert not live & set(pages)        # no aliasing
+                assert 0 not in pages               # null never issued
+                held.append(pages)
+            elif held:
+                alloc.free(held.pop(pick % len(held)))
+            usable = n_pages - 1
+            assert alloc.in_use + alloc.available == usable
+        for grp in held:
+            alloc.free(grp)
+        assert alloc.in_use == 0 and alloc.available == n_pages - 1
+
+    run()
+
+
+# ------------------------------------------------------------------ kernel
+@pytest.mark.parametrize("b,kh,g,d,ps,nb", [
+    (2, 1, 8, 64, 16, 4), (3, 2, 4, 32, 8, 6), (1, 4, 1, 128, 32, 2),
+])
+def test_paged_kernel_matches_oracle(rng, b, kh, g, d, ps, nb):
+    n_pages = nb * b + 1
+    q = jnp.asarray(rng.normal(size=(b, kh, g, d)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kh, d)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (n_pages, ps, kh)), jnp.float32)
+    vp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kh, d)), jnp.int8)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (n_pages, ps, kh)), jnp.float32)
+    # each slot owns a disjoint page range, like the allocator hands out
+    tables = jnp.asarray(
+        1 + np.arange(b * nb).reshape(b, nb), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, nb * ps, b), jnp.int32)
+    out_k = paged_decode_attention(q, kp, ks, vp, vs, tables, lens,
+                                   interpret=True)
+    out_r = paged_decode_attention_ref(q, kp, ks, vp, vs, tables, lens)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_paged_kernel_equals_contiguous_dense(rng):
+    """Scattering a contiguous cache into (shuffled) pages and attending via
+    the block table reproduces the dense int8 decode-attention oracle."""
+    from repro.kernels.decode_attn import decode_attention_int8_ref
+    b, s, kh, g, d, ps = 2, 64, 2, 2, 32, 8
+    nb = s // ps
+    q = jnp.asarray(rng.normal(size=(b, kh, g, d)), jnp.float32)
+    kc = rng.integers(-127, 128, (b, s, kh, d)).astype(np.int8)
+    ks = rng.uniform(0.005, 0.02, (b, s, kh)).astype(np.float32)
+    vc = rng.integers(-127, 128, (b, s, kh, d)).astype(np.int8)
+    vs = rng.uniform(0.005, 0.02, (b, s, kh)).astype(np.float32)
+    perm = rng.permutation(b * nb)               # arbitrary page placement
+    tables = 1 + perm.reshape(b, nb)
+    n_pages = b * nb + 1
+    kp = np.zeros((n_pages, ps, kh, d), np.int8)
+    ksp = np.zeros((n_pages, ps, kh), np.float32)
+    vp = np.zeros((n_pages, ps, kh, d), np.int8)
+    vsp = np.zeros((n_pages, ps, kh), np.float32)
+    for i in range(b):
+        for j in range(nb):
+            sl = slice(j * ps, (j + 1) * ps)
+            kp[tables[i, j]] = kc[i, sl]
+            ksp[tables[i, j]] = ks[i, sl]
+            vp[tables[i, j]] = vc[i, sl]
+            vsp[tables[i, j]] = vs[i, sl]
+    lens = jnp.asarray([s - 3, s // 2], jnp.int32)
+    out_dense = decode_attention_int8_ref(
+        q, jnp.asarray(kc), jnp.asarray(ks), jnp.asarray(vc),
+        jnp.asarray(vs), lens)
+    out_paged = paged_decode_attention(
+        q, jnp.asarray(kp), jnp.asarray(ksp), jnp.asarray(vp),
+        jnp.asarray(vsp), jnp.asarray(tables, jnp.int32), lens,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- serve-loop equivalence
+def test_paged_matches_dense_and_static_ragged(served):
+    """Acceptance: ragged prompts (incl. ones spanning >1 page) + mixed gen
+    lengths through oversubscribed slots — paged tokens == dense-slot tokens
+    == the per-request static pipeline, bit-exact at temperature 0."""
+    model, params = served
+    # page_size 4: prompts of 3 (sub-page), 5/6 (spanning two pages), 8
+    reqs = _requests([(8, 6), (3, 2), (5, 4), (6, 3), (8, 6)])
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+              chunk_steps=2)
+    dense = ContinuousBatcher(model, params, **kw)
+    got_d = dense.run(reqs, wait_for_arrivals=False).tokens_by_rid()
+    paged = ContinuousBatcher(model, params, paged=True, page_size=4, **kw)
+    report = paged.run(reqs, wait_for_arrivals=False)
+    got_p = report.tokens_by_rid()
+    for req in reqs:
+        static = _static_tokens(model, params, req)
+        np.testing.assert_array_equal(
+            got_p[req.rid], static,
+            err_msg=f"paged vs static, request {req.rid}")
+        np.testing.assert_array_equal(
+            got_p[req.rid], got_d[req.rid],
+            err_msg=f"paged vs dense, request {req.rid}")
+    assert report.pages is not None
+    assert report.pages["pages_in_use"] == 0     # full trace leaks nothing
+
+
+def test_paged_matches_dense_mla(served):
+    """The MLA latent cache pages the same way (minicpm3 pattern)."""
+    cfg = get_smoke_config("minicpm3-4b")
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests([(8, 4), (5, 6), (8, 2)], seed=1)
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+              chunk_steps=2)
+    got_d = ContinuousBatcher(model, params, **kw).run(
+        reqs, wait_for_arrivals=False).tokens_by_rid()
+    got_p = ContinuousBatcher(model, params, paged=True, page_size=4,
+                              **kw).run(
+        reqs, wait_for_arrivals=False).tokens_by_rid()
+    for req in reqs:
+        np.testing.assert_array_equal(got_p[req.rid], got_d[req.rid],
+                                      err_msg=f"request {req.rid}")
+
+
+def test_paged_matches_dense_int8_kv(served):
+    """kv_quant: pages carry the int8 + scales layout the Pallas kernel
+    consumes; CPU gather path must still match the dense int8 pool."""
+    model, params = served
+    model = replace(model, kv_quant=True)
+    reqs = _requests([(8, 4), (6, 3), (8, 2)], seed=2)
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+              chunk_steps=2)
+    got_d = ContinuousBatcher(model, params, **kw).run(
+        reqs, wait_for_arrivals=False).tokens_by_rid()
+    got_p = ContinuousBatcher(model, params, paged=True, page_size=4,
+                              **kw).run(
+        reqs, wait_for_arrivals=False).tokens_by_rid()
+    for req in reqs:
+        np.testing.assert_array_equal(got_p[req.rid], got_d[req.rid],
+                                      err_msg=f"request {req.rid}")
+
+
+def test_undersized_pool_requeues_and_completes(served):
+    """A page pool too small for two concurrent requests serializes them via
+    PoolExhausted re-queueing instead of crashing, and still emits the exact
+    static-pipeline tokens."""
+    model, params = served
+    reqs = _requests([(8, 4), (8, 4), (8, 4)])
+    # each request needs pages_needed(8, 4, 4) = 3 pages; 4 usable pages
+    # fit only one at a time even though 2 slots are free
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2, paged=True, page_size=4,
+                                n_pages=5)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    assert len(report.completions) == 3
+    assert report.peak_active == 1               # never two in flight
+    assert report.pages["peak_pages_in_use"] == 3
+    for req in reqs:
+        np.testing.assert_array_equal(
+            report.tokens_by_rid()[req.rid],
+            _static_tokens(model, params, req),
+            err_msg=f"request {req.rid}")
+
+
+def test_unservable_request_raises(served):
+    """A request that cannot fit even an empty pool fails loudly instead of
+    spinning forever."""
+    model, params = served
+    reqs = _requests([(8, 8)])                   # needs 4 pages of size 4
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=8,
+                                chunk_steps=2, paged=True, page_size=4,
+                                n_pages=4)       # only 3 usable
+    with pytest.raises(PoolExhausted):
+        batcher.run(reqs, wait_for_arrivals=False)
+
+
+def test_dense_batcher_serves_ragged_prompts(served):
+    """Ragged prompts are not paged-only: the dense slot pool pads to the
+    compiled prefill shape and still matches the static pipeline."""
+    model, params = served
+    reqs = _requests([(3, 3), (8, 2), (6, 4)], seed=3)
+    batcher = ContinuousBatcher(model, params, n_slots=3,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2)
+    got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
+    for req in reqs:
+        np.testing.assert_array_equal(
+            got[req.rid], _static_tokens(model, params, req),
+            err_msg=f"request {req.rid}")
+
+
+def test_paged_decode_step_matches_dense_rows(served):
+    """One decode_step against pages == the dense cache rows, bit-exact:
+    build both layouts from the same per-slot histories."""
+    model, params = served
+    rng = np.random.default_rng(7)
+    b, ps, nb = 2, 4, 3
+    max_len = ps * nb
+    pos = jnp.asarray([5, 9], jnp.int32)
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (b, 1), dtype=np.int32))
+    dense_caches = model.init_cache(b, max_len)
+    dense_caches = jax.tree.map(
+        lambda a: jnp.asarray(rng.normal(size=a.shape), a.dtype), dense_caches)
+    # disjoint per-slot pages, shuffled placement; table gets the sentinel col
+    perm = 1 + rng.permutation(b * nb)
+    tables = perm.reshape(b, nb)
+    # build page pools by scattering the dense rows through the tables
+    paged_caches = []
+    for entry in dense_caches:
+        sub = {}
+        for name, leaf in entry["mixer"].items():
+            g = leaf.shape[0]
+            pool = np.zeros((g, b * nb + 1, ps) + leaf.shape[3:],
+                            np.asarray(leaf).dtype)
+            arr = np.asarray(leaf)
+            for i in range(b):
+                for j in range(nb):
+                    pool[:, tables[i, j]] = arr[:, i, j * ps:(j + 1) * ps]
+            sub[name] = jnp.asarray(pool)
+        paged_caches.append({"mixer": sub})
+    paged_caches = tuple(paged_caches)
+    tables_j = jnp.asarray(
+        np.concatenate([tables, np.zeros((b, 1), np.int64)], axis=1),
+        jnp.int32)
+
+    logits_d, _ = model.decode_step(params, dense_caches, tok, pos)
+    logits_p, _ = model.decode_step(params, paged_caches, tok, pos,
+                                    block_tables=tables_j)
+    np.testing.assert_array_equal(np.asarray(logits_d), np.asarray(logits_p))

@@ -181,18 +181,22 @@ def test_poisson_trace_is_deterministic():
 
 
 def test_slot_pool_guards():
+    from repro.serving import PoolExhausted, SlotError
+
     pool = SlotPool(2)
     reqs = _requests([2, 2, 2])
     pool.admit(reqs[0], 0.0)
     pool.admit(reqs[1], 0.0)
     assert pool.free_slots() == []
-    with pytest.raises(AssertionError):
+    with pytest.raises(PoolExhausted):      # typed: the batcher re-queues
         pool.admit(reqs[2], 0.0)
     pool.extend(0, [1, 2])
     rec, _ = pool.retire(0, 1.0)
     assert rec.request.rid == 0 and pool.free_slots() == [0]
-    with pytest.raises(AssertionError):
+    with pytest.raises(SlotError):
         pool.retire(1, 1.0)                 # rid 1 hasn't finished
+    with pytest.raises(SlotError):
+        pool.get(0)                         # slot 0 is free again
 
 
 # --------------------------------------------------------- regression gate
