@@ -83,7 +83,11 @@ def _legacy_decode_s(model, params, prompts, gen_len: int) -> float:
     return _median(run)
 
 
-def decode_pipeline_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
+def decode_pipeline_bench(rows: Row, out_json: str = OUT_JSON,
+                          seed: int = 0) -> dict:
+    """``seed`` fixes the benchmark prompts (explicit, like the serving and
+    paged benches) so the CI bench-gate replays the identical decode
+    workload its committed baseline measured."""
     model, res, packed_params = _prepare()
     avg_plane_bits = float(np.mean(
         [packed_format_bits(p) for p in res.packed.values()]))
@@ -92,11 +96,12 @@ def decode_pipeline_bench(rows: Row, out_json: str = OUT_JSON) -> dict:
                    "gen_len": GEN_LEN, "nm": "4:8",
                    "packed_layers": len(res.packed),
                    "plane_bits_per_weight": avg_plane_bits,
+                   "seed": seed,
                    "backend": jax.devices()[0].platform},
         "pipeline": {},
     }
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     for batch in BATCHES:
         prompts = jnp.asarray(rng.integers(
             0, DECODE_CFG.vocab, (batch, PROMPT_LEN), dtype=np.int32))

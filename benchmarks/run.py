@@ -6,6 +6,8 @@
   PYTHONPATH=src python -m benchmarks.run --only decode   # BENCH_decode.json
   PYTHONPATH=src python -m benchmarks.run --only serving  # BENCH_serving.json
   PYTHONPATH=src python -m benchmarks.run --only paged    # BENCH_paged.json
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m benchmarks.run --only sharded  # BENCH_sharded.json
 
 Prints ``name,us_per_call,derived`` CSV lines; the trained tiny-LM substrate
 is cached under experiments/bench_model/ (first run trains it, ~1 min CPU).
@@ -35,11 +37,12 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode serving paged")
+                         "decode serving paged sharded")
     ap.add_argument("--seed", type=int, default=0,
-                    help="arrival-trace seed for the serving/paged benches "
-                         "(explicit so the CI bench-gate replays the same "
-                         "trace as its committed baseline)")
+                    help="workload seed for the decode/serving/paged/sharded "
+                         "benches (explicit so the CI bench-gate replays the "
+                         "same prompts and arrival trace as its committed "
+                         "baseline)")
     args = ap.parse_args(argv)
 
     rows = Row()
@@ -81,11 +84,14 @@ def main(argv=None) -> int:
     if want("roofline"):
         roofline_report.roofline_table(rows)
     if want("decode"):
-        decode_bench.decode_pipeline_bench(rows)
+        decode_bench.decode_pipeline_bench(rows, seed=args.seed)
     if want("serving"):
         serving_bench.serving_bench(rows, seed=args.seed)
     if want("paged"):
         serving_bench.paged_bench(rows, seed=args.seed)
+    if want("sharded"):
+        from benchmarks import sharded_bench
+        sharded_bench.sharded_serve_bench(rows, seed=args.seed)
     return 0
 
 

@@ -1,0 +1,200 @@
+"""Tensor-parallel serving throughput: sharded vs unsharded serve paths.
+
+``sharded_serve_bench`` measures the mesh-aware serve stacks on a forced
+multi-device host mesh and writes ``BENCH_sharded.json`` at the repo root:
+
+  * ``static_packed`` — the two-dispatch scan pipeline serving PackedLinear
+    planes, unsharded vs TP over 'model' (each device streams only its slice
+    of the packed bytes — on CPU meshes the win is *correctness coverage*,
+    not speed: GSPMD partitioning of the dequantize-in-HLO path costs
+    collectives that only pay for themselves against real HBM);
+  * ``continuous_paged`` — the slot-pooled continuous batcher over the paged
+    KV pool (kv_heads sharded over 'model'), unsharded vs TP.
+
+Every cell replays the identical ``seed``-fixed workload, and the
+``sharded_matches_unsharded`` flag (CI's regression gate fails on false)
+asserts the TP tokens are bit-exact vs the single-device path at
+temperature 0.
+
+Needs >= 2 visible devices; run locally with
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.run --only sharded
+
+On a single device the bench records a skipped json instead of failing, so
+the non-forced CI lanes stay green.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.base import ModelConfig
+from repro.core.pipeline import pack_model_params, quantize_model
+from repro.core.stbllm import STBConfig
+from repro.data import calibration_batch
+from repro.launch.generate import make_generate, serve_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+from repro.serving import ContinuousBatcher, Request
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_JSON = os.path.join(ROOT, "BENCH_sharded.json")
+
+# n_kv_heads divisible by the TP degree so the KV pool actually shards;
+# d_model 128-aligned so every transformer linear packs
+SHARD_CFG = ModelConfig(
+    arch_id="sharded-bench", family="dense", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=4, d_ff=384, vocab=512, head_dim=32)
+
+TP = 2
+N_REQUESTS = 8
+PROMPT_LEN = 16
+GEN_LEN = 32
+N_SLOTS = 4
+CHUNK_STEPS = 8
+PAGE_SIZE = 8
+REPEAT = 3
+
+
+def _median(fn, repeat: int = REPEAT) -> float:
+    fn()                                     # warm compiles untimed
+    ts = sorted(fn() for _ in range(repeat))
+    return ts[len(ts) // 2]
+
+
+def _static_cell(model, params, prompts, mesh) -> tuple[dict, np.ndarray]:
+    shardings = None
+    if mesh is not None:
+        shardings = serve_shardings(model, mesh, params, N_REQUESTS,
+                                    PROMPT_LEN + GEN_LEN)
+    pipe = make_generate(model, prompt_len=PROMPT_LEN, gen_len=GEN_LEN,
+                         mesh=mesh, shardings=shardings)
+
+    def fresh_caches():
+        caches = model.init_cache(N_REQUESTS, PROMPT_LEN + GEN_LEN)
+        if shardings is not None:
+            caches = jax.device_put(caches, shardings[1])
+        return caches
+
+    def run() -> float:
+        caches = fresh_caches()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        tok0, caches = pipe.prefill_fn(params, caches, prompts, None, k1)
+        jax.block_until_ready(tok0)
+        t0 = time.perf_counter()
+        toks, _ = pipe.decode_fn(params, caches, tok0, None, k2)
+        np.asarray(toks)
+        return time.perf_counter() - t0
+
+    s = _median(run)
+    toks = np.asarray(pipe.run(params, fresh_caches(), prompts))
+    return {"decode_seconds": s, "tok_s": N_REQUESTS * GEN_LEN / s}, toks
+
+
+def _continuous_cell(model, params, requests, mesh) -> tuple[dict, dict]:
+    batcher = ContinuousBatcher(
+        model, params, n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+        max_new_tokens=GEN_LEN, chunk_steps=CHUNK_STEPS, paged=True,
+        page_size=PAGE_SIZE, mesh=mesh)
+    batcher.run(requests, wait_for_arrivals=False)      # warm compiles
+    rep = min((batcher.run(requests, wait_for_arrivals=False)
+               for _ in range(REPEAT)), key=lambda r: r.wall_s)
+    return ({"wall_s": rep.wall_s, "tok_s": rep.throughput_tok_s},
+            rep.tokens_by_rid())
+
+
+def sharded_serve_bench(rows: Row, out_json: str = OUT_JSON,
+                        seed: int = 0) -> dict:
+    n_dev = len(jax.devices())
+    config = {
+        "arch": SHARD_CFG.arch_id, "tp": TP, "n_devices": n_dev,
+        "n_requests": N_REQUESTS, "prompt_len": PROMPT_LEN,
+        "gen_len": GEN_LEN, "n_slots": N_SLOTS, "chunk_steps": CHUNK_STEPS,
+        "page_size": PAGE_SIZE, "seed": seed,
+        "backend": jax.devices()[0].platform,
+    }
+    if n_dev < TP or n_dev % TP:
+        results = {"config": config, "skipped":
+                   f"needs a multiple of tp={TP} devices (have {n_dev}); "
+                   f"set XLA_FLAGS=--xla_force_host_platform_device_count=8"}
+        if not os.path.exists(out_json):
+            # record the skip only on machines with no baseline: a committed
+            # multi-device BENCH_sharded.json must never be clobbered by a
+            # plain single-device `benchmarks.run` (the regression gate
+            # would then flag every gated leaf as GONE)
+            with open(out_json, "w") as f:
+                json.dump(results, f, indent=2)
+        rows.add("sharded/skipped", 0, results["skipped"])
+        return results
+
+    # pin BOTH sides of the A/B to the GSPMD jnp dispatch up front: on a
+    # multi-device TPU host the unsharded baseline would otherwise trace the
+    # Pallas kernels (~=jnp at 1e-4, not bit-equal) while the tp cell uses
+    # jnp, and the match flag would compare two kernel implementations
+    # instead of sharded-vs-unsharded
+    from repro.kernels.ops import set_sharded_serving
+    set_sharded_serving(True)
+
+    model = build_model(SHARD_CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batch(SHARD_CFG.vocab, n_samples=4,
+                              seq_len=PROMPT_LEN)
+    res = quantize_model(model, params, calib,
+                         STBConfig(n=4, m=8, beta=128), pack=True)
+    packed = pack_model_params(res.params, res.packed)
+    mesh = make_host_mesh(model=TP)
+    packed_tp = pack_model_params(res.params, res.packed, mesh=mesh)
+
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(
+        0, SHARD_CFG.vocab, (N_REQUESTS, PROMPT_LEN), dtype=np.int32))
+    requests = [Request(rid=i, prompt=np.asarray(prompts[i]),
+                        max_new_tokens=GEN_LEN) for i in range(N_REQUESTS)]
+
+    base_cell, base_toks = _static_cell(model, packed, prompts, None)
+    tp_cell, tp_toks = _static_cell(model, packed_tp, prompts, mesh)
+    static_match = bool(np.array_equal(base_toks, tp_toks))
+
+    cont_base, cont_base_toks = _continuous_cell(model, res.params, requests,
+                                                 None)
+    cont_tp, cont_tp_toks = _continuous_cell(model, res.params, requests,
+                                             mesh)
+    cont_match = all(np.array_equal(cont_base_toks[r.rid],
+                                    cont_tp_toks[r.rid]) for r in requests)
+
+    results = {
+        "config": config,
+        "static_packed": {
+            "unsharded": base_cell,
+            f"tp{TP}": tp_cell,
+            "sharded_matches_unsharded": static_match,
+        },
+        "continuous_paged": {
+            "unsharded": cont_base,
+            f"tp{TP}": cont_tp,
+            "sharded_matches_unsharded": bool(cont_match),
+        },
+    }
+
+    for name, cell in (("static_packed", results["static_packed"]),
+                       ("continuous_paged", results["continuous_paged"])):
+        ratio = cell[f"tp{TP}"]["tok_s"] / max(cell["unsharded"]["tok_s"],
+                                               1e-9)
+        rows.add(f"sharded/{name}/unsharded", 0,
+                 f"tok_s={cell['unsharded']['tok_s']:.1f}")
+        rows.add(f"sharded/{name}/tp{TP}", 0,
+                 f"tok_s={cell[f'tp{TP}']['tok_s']:.1f} (x{ratio:.2f})")
+        rows.add(f"sharded/{name}/match", 0,
+                 str(cell["sharded_matches_unsharded"]))
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.add("sharded/json", 0, out_json)
+    return results

@@ -159,7 +159,7 @@ def quantize_model(
                           allocation=alloc, avg_bits=avg, storage_bits=sto)
 
 
-def pack_model_params(params, packed: dict[str, Any]):
+def pack_model_params(params, packed: dict[str, Any], mesh=None):
     """Substitute PackedLinear leaves into a params pytree for serving.
 
     ``packed`` is ``ModelPTQResult.packed`` (path -> PackedLinear, stacked
@@ -169,6 +169,13 @@ def pack_model_params(params, packed: dict[str, Any]):
     so the substituted tree is always servable. ``dense()`` / ``swiglu()``
     then route the packed leaves through the Pallas kernels (TPU) or the
     dequantize-in-HLO path (elsewhere).
+
+    With ``mesh`` (tensor-parallel serving) the substituted tree is
+    device_put under the weight-stationary serving specs
+    (``param_specs(serve_replicated=True)``): packed bit-planes shard their
+    N dim over 'model' — each device holds only its slice of the
+    mask/sign/region bytes, which is the paper's HBM-roofline win multiplied
+    across the mesh — and unpackable dense weights shard TP the same way.
     """
     from repro.quant.packing import stack_packed
 
@@ -183,7 +190,11 @@ def pack_model_params(params, packed: dict[str, Any]):
                 g is not None for g in groups) else leaf)
         else:
             out.append(leaf)
-    return jax.tree.unflatten(jax.tree.structure(params), out)
+    tree = jax.tree.unflatten(jax.tree.structure(params), out)
+    if mesh is not None:
+        from repro.sharding.rules import place_serve_params
+        tree = place_serve_params(tree, mesh)
+    return tree
 
 
 def _base(sub: str) -> str:

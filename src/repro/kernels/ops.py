@@ -29,6 +29,42 @@ def _platform() -> str:
     return jax.devices()[0].platform
 
 
+# Sharded serving (launch/serve --tp/--mesh) lowers every packed matmul
+# through the jnp dequantize-in-HLO path so GSPMD can partition it along the
+# TP-sharded N dim; the Pallas kernels are a single-device fast path (their
+# grids index the *global* plane shapes) and must not see sharded operands.
+# serve_shardings() flips this flag when the mesh has more than one device;
+# auto-dispatch then picks "jnp" even on TPU, and an explicit impl="pallas"
+# request fails loudly instead of miscomputing. The flag is deliberately
+# process-wide and sticky: a process that has served sharded once keeps the
+# conservative jnp dispatch for later unsharded serves too (correct, slower
+# on TPU — call set_sharded_serving(False) to reclaim the fast path; a
+# mesh-scoped guard arrives with the shard_map'd kernels, see ROADMAP).
+_SHARDED_SERVING = False
+
+
+def set_sharded_serving(on: bool) -> None:
+    """Mark the process as serving over a >1-device mesh (GSPMD paths only)."""
+    global _SHARDED_SERVING
+    _SHARDED_SERVING = bool(on)
+
+
+def sharded_serving() -> bool:
+    return _SHARDED_SERVING
+
+
+def _dispatch_impl(impl: str | None) -> str:
+    if impl is None:
+        if _SHARDED_SERVING:
+            return "jnp"
+        return "pallas" if _platform() == "tpu" else "jnp"
+    if impl == "pallas" and _SHARDED_SERVING:
+        raise AssertionError(
+            "Pallas STB kernels are the single-device fast path; a >1-device "
+            "serve mesh must lower the GSPMD jnp path (impl='jnp')")
+    return impl
+
+
 # ---------------------------------------------------------------------------
 # block-size heuristic table (v5e-shaped; interpret-mode uses the same shapes)
 #
@@ -64,8 +100,7 @@ def select_stb_blocks(m: int) -> tuple[str, dict]:
 def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
                **kw) -> jnp.ndarray:
     """y = x @ decode(W).  x: [..., K] -> [..., N]."""
-    if impl is None:
-        impl = "pallas" if _platform() == "tpu" else "jnp"
+    impl = _dispatch_impl(impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if impl == "pallas":
@@ -99,8 +134,7 @@ def _stb_swiglu_jnp(x2: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
 def stb_swiglu(x: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
                pd: PackedLinear, impl: str | None = None) -> jnp.ndarray:
     """y = swiglu(x; decode(Wg), decode(Wu), decode(Wd)). x: [..., D]."""
-    if impl is None:
-        impl = "pallas" if _platform() == "tpu" else "jnp"
+    impl = _dispatch_impl(impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if impl == "pallas":

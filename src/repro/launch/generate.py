@@ -14,11 +14,22 @@ into exactly two device computations:
 
 Build with ``make_generate(model, ...)``; both returned functions are jitted
 with cache donation so decode runs in-place over the cache buffers.
+
+**Sharded serving** (``mesh=``): both builders accept a ``jax.sharding.Mesh``
+and jit with explicit ``in_shardings``/``out_shardings`` — params under
+``param_specs(serve_replicated=True)`` (weight-stationary TP: packed planes
+and dense weights shard their N dim over 'model', no per-token FSDP gathers),
+caches under the serve-pool specs (kv_heads over 'model'), scalars/tokens
+replicated. Cache donation is preserved, so the decode scan still runs
+in-place over each device's pool shard. The math lowers through GSPMD on the
+jnp paths; the Pallas kernels stay the single-device TPU fast path
+(``repro.kernels.ops`` asserts they are unreachable under a >1-device mesh).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from functools import partial
 from typing import Callable
 
 import jax
@@ -81,6 +92,39 @@ def legacy_generate(model, params, caches, prompts, gen_len: int, *,
     return out, prefill_s, decode_s
 
 
+def serve_shardings(model, mesh, params, batch: int, max_len: int, *,
+                    n_pages: int | None = None,
+                    page_size: int | None = None):
+    """(param, cache, replicated) NamedSharding trees for a serve mesh.
+
+    Params get the weight-stationary serving specs (TP over 'model', the FSDP
+    'data' axis stripped); caches get the serve-pool specs (kv_heads over
+    'model', batch/page axes unsharded). ``params`` may be the real tree or a
+    ShapeDtypeStruct tree — only shapes and pytree structure are read, so
+    PackedLinear-substituted trees spec their planes per leaf.
+
+    Every mesh-aware serve path funnels through here, so this is also where
+    a >1-device mesh pins the packed-kernel dispatch to the GSPMD jnp path
+    (the Pallas kernels index global plane/pool shapes and must never see
+    sharded operands) — callers don't have to remember the guard.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding.rules import cache_specs, named_shardings, param_specs
+
+    if mesh.size > 1:
+        from repro.kernels.ops import set_sharded_serving
+        set_sharded_serving(True)
+
+    p_shard = named_shardings(
+        param_specs(params, mesh, serve_replicated=True), mesh)
+    c_shapes = jax.eval_shape(partial(model.init_cache, batch, max_len,
+                                      n_pages=n_pages, page_size=page_size))
+    c_shard = named_shardings(
+        cache_specs(c_shapes, mesh, batch, serve_pool=True), mesh)
+    return p_shard, c_shard, NamedSharding(mesh, P())
+
+
 def _make_sampler(vocab: int, temperature: float):
     def sample(logits, key):
         logits = logits[:, -1, :vocab]
@@ -94,15 +138,43 @@ def _make_sampler(vocab: int, temperature: float):
 
 def make_generate(model, *, prompt_len: int, gen_len: int,
                   temperature: float = 0.0, prefill_mode: str = "auto",
-                  donate: bool = True) -> GeneratePipeline:
+                  donate: bool = True, mesh=None, params=None,
+                  batch: int | None = None,
+                  shardings=None) -> GeneratePipeline:
     """Compile the serve hot path for a fixed (prompt_len, gen_len) shape.
 
     ``temperature=0`` is greedy argmax; otherwise temperature sampling with
     per-step folded keys, all on device. ``prefill_mode`` is forwarded to
     ``Model.prefill`` ("auto" | "fused" | "scan").
+
+    With ``mesh`` (tensor-parallel serving) prefill and decode are jitted
+    with explicit in/out shardings; ``params`` (the tree that will be served,
+    so packed substitutions spec their planes) and ``batch`` (the request
+    batch the caches are sized for) are then required. Callers should
+    device_put params and caches under the same shardings
+    (:func:`serve_shardings`) so dispatch never re-lays anything out — and
+    may pass that ``(params, cache, replicated)`` triple as ``shardings=``
+    to skip the param-tree re-walk here.
     """
     vocab = model.cfg.vocab
     sample = _make_sampler(vocab, temperature)
+    jit_kw: dict = {}
+    decode_jit_kw: dict = {}
+    if mesh is not None:
+        if shardings is not None:
+            p_shard, c_shard, repl = shardings
+        else:
+            if params is None or batch is None:
+                raise ValueError("sharded make_generate needs the served "
+                                 "params tree and the request batch size "
+                                 "(or shardings=) alongside mesh=")
+            p_shard, c_shard, repl = serve_shardings(
+                model, mesh, params, batch, prompt_len + gen_len)
+        # prefill(params, caches, prompts, memory, key); memory (None or a
+        # [B, T, D] frontend stub) stays replicated alongside the tokens
+        jit_kw = dict(in_shardings=(p_shard, c_shard, repl, repl, repl),
+                      out_shardings=(repl, c_shard))
+        decode_jit_kw = dict(jit_kw)
 
     def prefill(params, caches, prompts, memory, key):
         logits, caches = model.prefill(params, caches, prompts, memory,
@@ -127,15 +199,21 @@ def make_generate(model, *, prompt_len: int, gen_len: int,
     # alias through the depth scan (a spurious warning); donate only the
     # decode loop, where in-place cache reuse matters for memory.
     return GeneratePipeline(
-        prefill_fn=jax.jit(prefill),
-        decode_fn=jax.jit(decode, donate_argnums=(1,) if donate else ()),
+        prefill_fn=jax.jit(prefill, **jit_kw),
+        decode_fn=jax.jit(decode, donate_argnums=(1,) if donate else (),
+                          **decode_jit_kw),
         prompt_len=prompt_len,
         gen_len=gen_len,
     )
 
 
 def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
-                        donate: bool = True, paged: bool = False) -> Callable:
+                        donate: bool = True, paged: bool = False,
+                        mesh=None, params=None, n_slots: int | None = None,
+                        max_len: int | None = None,
+                        n_pages: int | None = None,
+                        page_size: int | None = None,
+                        shardings=None) -> Callable:
     """Compile a fixed-size decode chunk over per-slot positions.
 
     The continuous-batching serve loop (repro.serving) can't scan a whole
@@ -166,8 +244,34 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
     and every decode step addresses the paged caches through them (the
     tables are constant within a chunk — admissions and retirements only
     remap pages at chunk boundaries, on the host).
+
+    With ``mesh`` (sharded continuous serve) the chunk is jitted with
+    explicit shardings: params TP over 'model' (``params`` — the served
+    tree — and ``n_slots``/``max_len``, plus ``n_pages``/``page_size`` when
+    paged, are then required to spec the pooled caches), the pool under the
+    serve-pool specs, and all per-slot vectors / block tables replicated
+    (they are host scheduler state). A caller that already ran
+    :func:`serve_shardings` can pass its ``(params, pool, replicated)``
+    triple as ``shardings=`` instead, skipping the param-tree re-walk.
     """
     sample = _make_sampler(model.cfg.vocab, temperature)
+    jit_kw: dict = {}
+    if mesh is not None:
+        if shardings is not None:
+            p_shard, c_shard, repl = shardings
+        else:
+            if params is None or n_slots is None or max_len is None:
+                raise ValueError("sharded make_chunked_decode needs params=, "
+                                 "n_slots= and max_len= (or shardings=) "
+                                 "alongside mesh=")
+            p_shard, c_shard, repl = serve_shardings(
+                model, mesh, params, n_slots, max_len,
+                n_pages=n_pages, page_size=page_size)
+        # chunk(params, caches, tok, pos, remaining[, tables], memory, key):
+        # everything beyond params/caches is replicated host scheduler state
+        jit_kw = dict(
+            in_shardings=(p_shard, c_shard) + (repl,) * (6 if paged else 5),
+            out_shardings=(repl, repl, repl, c_shard, repl, repl))
 
     def chunk(params, caches, tok, pos, remaining, tables, memory, key):
         def step(carry, i):
@@ -188,9 +292,9 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
 
     donate = (1,) if donate else ()
     if paged:
-        return jax.jit(chunk, donate_argnums=donate)
+        return jax.jit(chunk, donate_argnums=donate, **jit_kw)
 
     def dense_chunk(params, caches, tok, pos, remaining, memory, key):
         return chunk(params, caches, tok, pos, remaining, None, memory, key)
 
-    return jax.jit(dense_chunk, donate_argnums=donate)
+    return jax.jit(dense_chunk, donate_argnums=donate, **jit_kw)

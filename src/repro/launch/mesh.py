@@ -29,6 +29,16 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
 
 
 def make_host_mesh(model: int = 1):
-    """Small mesh over whatever devices exist (tests / single host)."""
+    """Small mesh over whatever devices exist (tests / single host).
+
+    ``model`` is the TP degree; the remaining devices form the 'data' axis.
+    Local multi-device testing needs the host-platform flag set before the
+    first jax call: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
     n = len(jax.devices())
+    if model <= 0 or n % model != 0:
+        raise ValueError(
+            f"TP degree {model} must evenly divide the {n} visible "
+            f"device(s); force more host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
     return jax.make_mesh((n // model, model), ("data", "model"))

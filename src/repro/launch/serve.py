@@ -30,6 +30,17 @@ block-granular page pool (``--page-size`` tokens per page, ``--n-pages``
 per layer): admission reserves pages, retirement frees them, and cache HBM
 tracks live tokens instead of ``n_slots * max_len`` — tokens stay bit-exact
 vs the dense pool at temperature 0.
+
+``--tp N`` / ``--mesh DxM`` serve tensor-parallel over a device mesh: params
+are device_put under the weight-stationary TP specs (packed bit-planes shard
+their N dim over 'model' — each device streams only its slice of the
+mask/sign/region bytes), KV pools shard kv_heads over 'model', and every
+serve loop (static, continuous, paged) jits with explicit in/out shardings.
+For local testing force a host mesh first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \\
+      --smoke --tp 2 --packed --continuous --paged
 """
 from __future__ import annotations
 
@@ -44,11 +55,33 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.core.pipeline import pack_model_params, quantize_model
 from repro.core.stbllm import STBConfig
 from repro.data import calibration_batch
-from repro.launch.generate import legacy_generate, make_generate
+from repro.launch.generate import legacy_generate, make_generate, serve_shardings
+from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models.model import build_model
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serve").info
+
+
+def build_serve_mesh(tp: int | None = None, mesh_shape: str | None = None):
+    """Resolve the serve CLI's mesh knobs to a Mesh (or None, unsharded).
+
+    ``mesh_shape`` is "DxM" (e.g. "2x4": 2-way data axis, 4-way TP) built via
+    :func:`repro.launch.mesh.make_mesh`; ``tp`` alone spreads whatever
+    devices exist as ``(n_devices // tp, tp)`` via :func:`make_host_mesh`.
+    """
+    if tp is not None and mesh_shape is not None:
+        raise ValueError("--tp and --mesh are two spellings of the same "
+                         "mesh; pass one")
+    if mesh_shape is not None:
+        dims = tuple(int(v) for v in mesh_shape.lower().split("x"))
+        if len(dims) != 2:
+            raise ValueError(f"--mesh wants DxM (data x model), got "
+                             f"{mesh_shape!r}")
+        return make_mesh(dims, ("data", "model"))
+    if tp is not None:
+        return make_host_mesh(model=tp)
+    return None
 
 
 def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
@@ -58,10 +91,17 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           legacy_loop: bool = False, prefill_mode: str = "auto",
           continuous: bool = False, n_slots: int = 4, chunk_steps: int = 8,
           gen_lens: tuple[int, ...] | None = None, paged: bool = False,
-          page_size: int = 16, n_pages: int | None = None) -> dict:
+          page_size: int = 16, n_pages: int | None = None,
+          mesh=None, tp: int | None = None,
+          mesh_shape: str | None = None) -> dict:
     if continuous and legacy_loop:
         raise ValueError("--continuous and --legacy-loop are exclusive "
                          "serve loops")
+    if mesh is None:
+        mesh = build_serve_mesh(tp, mesh_shape)
+    if mesh is not None and legacy_loop:
+        raise ValueError("--legacy-loop is the single-device dispatch "
+                         "baseline; drop --tp/--mesh")
     if gen_lens is not None and not continuous:
         raise ValueError("--gen-lens (mixed gen lengths) needs --continuous; "
                          "the static pipeline pads every request to one "
@@ -87,7 +127,9 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
                              STBConfig(n=n, m=m, beta=beta), pack=packed)
         params = res.params
         if packed:
-            params = pack_model_params(params, res.packed)
+            # mesh: the packed planes land TP-sharded over N — each device
+            # holds only its slice of the mask/sign/region bytes
+            params = pack_model_params(params, res.packed, mesh=mesh)
             stats["packed_layers"] = len(res.packed)
         stats.update({"avg_bits": res.avg_bits,
                       "storage_bits": res.storage_bits,
@@ -95,6 +137,11 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         log(f"PTQ {nm}: avg_bits={res.avg_bits:.3f} "
             f"({stats['ptq_seconds']:.1f}s"
             f"{', packed' if packed else ''})")
+    if mesh is not None:
+        # packed params were already placed by pack_model_params(mesh=); the
+        # continuous batcher places its own — only the static dense path
+        # still needs a put, and it reuses the shardings computed below
+        log(f"serving over mesh {dict(mesh.shape)}")
 
     prompts = np.random.default_rng(seed).integers(
         0, cfg.vocab, (n_requests, prompt_len), dtype=np.int32)
@@ -119,7 +166,7 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
             model, params, n_slots=n_slots, prompt_len=prompt_len,
             max_new_tokens=max(lens), chunk_steps=chunk_steps,
             temperature=temperature, prefill_mode=prefill_mode, seed=seed,
-            paged=paged, page_size=page_size, n_pages=n_pages)
+            paged=paged, page_size=page_size, n_pages=n_pages, mesh=mesh)
         report = batcher.run(requests, wait_for_arrivals=False)
         return {"tokens": report.tokens_by_rid(),
                 "throughput": report.throughput_tok_s,
@@ -127,6 +174,11 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
 
     max_len = prompt_len + gen_len
     caches = model.init_cache(n_requests, max_len)
+    shardings = None
+    if mesh is not None:
+        shardings = serve_shardings(model, mesh, params, n_requests, max_len)
+        params = jax.device_put(params, shardings[0])   # no-op when packed
+        caches = jax.device_put(caches, shardings[1])
 
     if legacy_loop:
         if temperature != 0.0:
@@ -138,7 +190,8 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
     else:
         pipe = make_generate(model, prompt_len=prompt_len, gen_len=gen_len,
                              temperature=temperature,
-                             prefill_mode=prefill_mode)
+                             prefill_mode=prefill_mode, mesh=mesh,
+                             shardings=shardings)
         key = jax.random.PRNGKey(seed)
         k1, k2 = jax.random.split(key)
         t0 = time.time()
@@ -195,6 +248,12 @@ def main() -> None:
                     help="device pages per layer incl. the reserved null "
                          "page (--paged; default fully provisions n_slots "
                          "max-length requests)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree: serve over a "
+                         "(n_devices // tp, tp) ('data', 'model') host mesh")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit DxM serve mesh, e.g. 2x4 (data x model); "
+                         "exclusive with --tp")
     args = ap.parse_args()
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
@@ -204,7 +263,8 @@ def main() -> None:
           temperature=args.temperature, legacy_loop=args.legacy_loop,
           continuous=args.continuous, n_slots=args.n_slots,
           chunk_steps=args.chunk_steps, gen_lens=gen_lens,
-          paged=args.paged, page_size=args.page_size, n_pages=args.n_pages)
+          paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
+          tp=args.tp, mesh_shape=args.mesh)
 
 
 if __name__ == "__main__":

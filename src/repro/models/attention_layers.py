@@ -200,8 +200,11 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
                 "k_scale": _cache_write(cache["k_scale"], ks, pos, axis=1),
                 "v_scale": _cache_write(cache["v_scale"], vs, pos, axis=1),
             }
-            if jax.devices()[0].platform == "tpu":
-                # fused Pallas path: int8 cache never dequantized in HBM
+            from repro.kernels.ops import sharded_serving
+            if jax.devices()[0].platform == "tpu" and not sharded_serving():
+                # fused Pallas path: int8 cache never dequantized in HBM.
+                # Like the STB kernels, it indexes global cache shapes, so a
+                # >1-device serve mesh takes the GSPMD jnp path below instead.
                 from repro.kernels.decode_attn import decode_attention_int8
                 b_, _, h, dh = q.shape
                 kh = cache["k"].shape[2]
@@ -244,9 +247,12 @@ def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
                 "k_scale": _page_write(cache["k_scale"], ks, page, off),
                 "v_scale": _page_write(cache["v_scale"], vs, page, off),
             }
-            if jax.devices()[0].platform == "tpu":
+            from repro.kernels.ops import sharded_serving
+            if jax.devices()[0].platform == "tpu" and not sharded_serving():
                 # fused Pallas path: pages gathered in VMEM via scalar-
-                # prefetched block tables, never materialized in HBM
+                # prefetched block tables, never materialized in HBM. Under
+                # a >1-device serve mesh the pool is KH-sharded and the
+                # kernel's global-shape grid is wrong — take the jnp gather.
                 from repro.kernels.paged_attn import paged_decode_attention
                 b_, _, h, dh = q.shape
                 kh = cache["k"].shape[2]

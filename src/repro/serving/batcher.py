@@ -45,6 +45,15 @@ starts there — pad positions are never attended (causal prefill + the
 per-slot length mask) and are overwritten one-by-one as generation
 advances. Ragged prompts need a fused-prefill pattern (attention-family
 mixers); SSM/hybrid patterns keep the fixed-length requirement.
+
+**Sharded mode** (``mesh=``): the pooled cache is allocated under the
+serve-pool NamedShardings (kv_heads over 'model'; batch/page axes
+unsharded so per-slot admission scatters stay shard-local), params are
+device_put under the weight-stationary TP specs, and every jitted edge —
+prefill, the admit scatters, the decode chunk — carries explicit
+out_shardings so the pool's layout survives donation round trips. Block
+tables, the scheduler queue, and the tok/pos/remaining vectors remain
+replicated host state: scheduling is not worth a collective.
 """
 from __future__ import annotations
 
@@ -55,11 +64,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.generate import _make_sampler, make_chunked_decode
+from repro.launch.generate import (
+    _make_sampler,
+    make_chunked_decode,
+    serve_shardings,
+)
 from repro.models.blocks import PAGED_MIXERS
 from repro.serving.paged import BlockTableSet, PageAllocator, pages_needed
 from repro.serving.scheduler import FIFOScheduler, Request
-from repro.serving.slots import PoolExhausted, SlotPool
+from repro.serving.slots import PoolExhausted, SlotError, SlotPool
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serving").info
@@ -146,19 +159,28 @@ class ContinuousBatcher:
     every slot can hold a max-length request — plus the reserved null
     page; undersize it to oversubscribe memory and let admission re-queue
     on :class:`PoolExhausted`).
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with a 'model' axis) serves
+    tensor-parallel: params and the pooled cache are sharded (see module
+    docstring) and the packed-kernel dispatch is pinned to the GSPMD jnp
+    path for the life of the process.
     """
 
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
                  max_new_tokens: int, chunk_steps: int = 8,
                  temperature: float = 0.0, prefill_mode: str = "auto",
                  seed: int = 0, paged: bool = False, page_size: int = 16,
-                 n_pages: int | None = None):
+                 n_pages: int | None = None, mesh=None):
         if model.cfg.encoder is not None or model.cfg.vision is not None:
             raise NotImplementedError(
                 "continuous batching serves decoder-only archs; "
                 "encoder/vision memory is per-request state the slot pool "
                 "does not carry yet")
-        assert chunk_steps > 0
+        if chunk_steps <= 0:
+            raise ValueError(
+                f"chunk_steps must be positive (got {chunk_steps}); the "
+                f"serve loop decodes chunk_steps tokens between admit/retire "
+                f"passes")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -175,13 +197,31 @@ class ContinuousBatcher:
         self._fused_prefill = (model.can_fused_prefill
                                and prefill_mode != "scan")
         if paged:
-            assert page_size > 0
+            if page_size <= 0:
+                raise ValueError(
+                    f"page_size must be positive (got {page_size}); pages "
+                    f"hold page_size tokens of KV cache each")
             self.page_size = page_size
             self.max_blocks = -(-self.max_len // page_size)
             self.prompt_blocks = -(-prompt_len // page_size)
             # default: fully provisioned (n_slots max-length requests) +
             # the reserved null page
             self.n_pages = n_pages or 1 + n_slots * self.max_blocks
+
+        self.mesh = mesh
+        self._pool_shard = self._fresh_shard = None
+        mesh_kw: dict = {}
+        if mesh is not None:
+            # one serve_shardings call covers params + pool (and pins the
+            # packed-kernel dispatch to the GSPMD jnp path); the chunk jit
+            # reuses the triple instead of re-walking the param tree
+            pool_kw = (dict(n_pages=self.n_pages, page_size=page_size)
+                       if paged else {})
+            p_shard, self._pool_shard, repl = serve_shardings(
+                model, mesh, params, n_slots, self.max_len, **pool_kw)
+            self.params = jax.device_put(params, p_shard)
+            mesh_kw = dict(mesh=mesh,
+                           shardings=(p_shard, self._pool_shard, repl))
 
         sample = _make_sampler(model.cfg.vocab, temperature)
 
@@ -220,18 +260,44 @@ class ContinuousBatcher:
                     out.append(jax.tree.map(scatter, entry_pool, entry_one))
             return tuple(out)
 
-        self._prefill = jax.jit(prefill)
-        self._write = jax.jit(write_slot, donate_argnums=(0,))
-        self._write_pg = jax.jit(write_paged, donate_argnums=(0,))
+        fresh_len = (self.prompt_blocks * page_size if paged else self.max_len)
+        if mesh is not None:
+            # admission jits carry explicit shardings so the pool layout
+            # (kv_heads over 'model') survives the donated scatters and the
+            # batch-1 prefill cache lands pre-sharded for them; specs only —
+            # no param-tree walk
+            from repro.sharding.rules import cache_specs, named_shardings
+            fresh_shapes = jax.eval_shape(
+                lambda: self.model.init_cache(1, fresh_len))
+            self._fresh_shard = named_shardings(
+                cache_specs(fresh_shapes, mesh, 1, serve_pool=True), mesh)
+            self._prefill = jax.jit(
+                prefill,
+                in_shardings=(p_shard, self._fresh_shard, repl, repl, repl),
+                out_shardings=(repl, self._fresh_shard))
+            self._write = jax.jit(
+                write_slot, donate_argnums=(0,),
+                in_shardings=(self._pool_shard, self._fresh_shard, repl),
+                out_shardings=self._pool_shard)
+            self._write_pg = jax.jit(
+                write_paged, donate_argnums=(0,),
+                in_shardings=(self._pool_shard, self._fresh_shard, repl, repl),
+                out_shardings=self._pool_shard)
+        else:
+            self._prefill = jax.jit(prefill)
+            self._write = jax.jit(write_slot, donate_argnums=(0,))
+            self._write_pg = jax.jit(write_paged, donate_argnums=(0,))
         self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
-                                          temperature=temperature, paged=paged)
+                                          temperature=temperature, paged=paged,
+                                          **mesh_kw)
         # one zeroed batch-1 cache template shared by every admission:
         # _prefill doesn't donate or mutate its cache arg, and the prompt
         # prefill overwrites [0, prompt_len) while the per-slot length mask
         # hides the (zero/stale) tail, so reuse is safe. Paged mode only
         # needs the prompt's pages' worth of positions.
-        fresh_len = (self.prompt_blocks * page_size if paged else self.max_len)
         self._fresh = self.model.init_cache(1, fresh_len)
+        if mesh is not None:
+            self._fresh = jax.device_put(self._fresh, self._fresh_shard)
         # per-run paged state (fresh in run())
         self._alloc: PageAllocator | None = None
         self._tables: BlockTableSet | None = None
@@ -307,6 +373,8 @@ class ContinuousBatcher:
                 page_size=self.page_size)
         else:
             caches = self.model.init_cache(self.n_slots, self.max_len)
+        if self.mesh is not None:
+            caches = jax.device_put(caches, self._pool_shard)
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros(self.n_slots, np.int32)
         rem = np.zeros(self.n_slots, np.int32)
@@ -351,7 +419,10 @@ class ContinuousBatcher:
                 # nothing live: sleep until the next arrival (idle bubble —
                 # the serving benchmark's static baseline pays this too)
                 nxt = sched.next_arrival()
-                assert nxt is not None
+                if nxt is None:
+                    raise SlotError(
+                        "serve loop idle with an empty queue and no active "
+                        "slots — scheduler and pool bookkeeping disagree")
                 time.sleep(max(0.0, min(nxt - clock(), 0.05)))
                 continue
 

@@ -44,7 +44,10 @@ def pages_needed(prompt_len: int, gen_len: int, page_size: int) -> int:
     """Pages a request with ``prompt_len`` prompt + ``gen_len`` generated
     tokens occupies (ceil division; the trailing null-sentinel column of the
     block table is not counted — it is shared)."""
-    assert prompt_len > 0 and gen_len > 0 and page_size > 0
+    if prompt_len <= 0 or gen_len <= 0 or page_size <= 0:
+        raise ValueError(
+            f"prompt_len ({prompt_len}), gen_len ({gen_len}) and page_size "
+            f"({page_size}) must all be positive")
     return -(-(prompt_len + gen_len) // page_size)
 
 
@@ -92,7 +95,8 @@ class PageAllocator:
     def __init__(self, n_pages: int, page_size: int):
         if n_pages < 2:
             raise ValueError(f"need >= 2 pages (1 usable + null), got {n_pages}")
-        assert page_size > 0
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive (got {page_size})")
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: deque[int] = deque(range(1, n_pages))
@@ -117,7 +121,8 @@ class PageAllocator:
 
     def alloc(self, n: int) -> list[int]:
         """Claim ``n`` pages; all-or-nothing."""
-        assert n > 0
+        if n <= 0:
+            raise ValueError(f"page allocation count must be positive, got {n}")
         if n > len(self._free):
             raise PoolExhausted(
                 f"need {n} pages, {len(self._free)} free "

@@ -30,8 +30,14 @@ class Request:
     arrival_s: float = 0.0
 
     def __post_init__(self):
-        assert self.max_new_tokens > 0, self
-        assert np.asarray(self.prompt).ndim == 1, "prompt must be [S]"
+        if self.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be positive "
+                f"(got {self.max_new_tokens})")
+        if np.asarray(self.prompt).ndim != 1:
+            raise ValueError(
+                f"request {self.rid}: prompt must be a 1-D [S] token vector "
+                f"(got ndim={np.asarray(self.prompt).ndim})")
 
 
 class FIFOScheduler:
@@ -85,8 +91,11 @@ def poisson_trace(
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
     if prompt_lens is not None:
-        assert all(0 < pl <= prompt_len for pl in prompt_lens), (
-            prompt_lens, prompt_len)
+        bad = [pl for pl in prompt_lens if not 0 < pl <= prompt_len]
+        if bad:
+            raise ValueError(
+                f"prompt_lens entries {bad} outside (0, {prompt_len}]; every "
+                f"ragged length must fit the batcher's compiled prompt_len")
     return [
         Request(
             rid=i,

@@ -50,7 +50,10 @@ class SlotPool:
     """Fixed set of ``n_slots`` decode slots, reused across requests."""
 
     def __init__(self, n_slots: int):
-        assert n_slots > 0
+        if n_slots <= 0:
+            raise ValueError(
+                f"n_slots must be positive (got {n_slots}); the pool needs "
+                f"at least one decode slot")
         self.n_slots = n_slots
         self._slots: list[SlotRecord | None] = [None] * n_slots
         self.peak_active = 0

@@ -60,6 +60,17 @@ _PACKED_PLANE = re.compile(
 
 
 def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    if "wk_rope" in path:
+        # MLA's decoupled rope key projection [d, qk_rope_dim] stays
+        # replicated, dense planes and packed planes alike: its output feeds
+        # apply_rope, whose split/rotate/concat over a 'model'-sharded last
+        # dim miscompiles under the jax 0.4.37 CPU SPMD backend (verified:
+        # split+concat on a sharded axis returns garbage, not reassociation
+        # noise). The weight is ~d * 32 floats, so replication is free.
+        # The per-head rope paths (gqa wq/wk, mla wq_b) are safe: their TP
+        # sharding lands on the head axis after the [B,S,H*D] reshape, never
+        # on the dim rope splits.
+        return P()
     if _PACKED_PLANE.search(path):
         # packed sub-1-bit weight planes [..., K', N(, 5)]: serving is
         # weight-stationary — replicate over 'data'/'pod' (no per-token FSDP
@@ -112,10 +123,60 @@ def param_specs(params_shapes: Any, mesh: Mesh,
     return tree_map_with_path(spec, params_shapes)
 
 
+_KV_CACHE = ("/k", "/v")          # gqa k/v planes + their int8 scales
+_MLA_CACHE = ("ckv", "k_rope")    # latent cache: no head axis to TP
+
+
+def _serve_pool_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Serving-pool cache layouts (slot pools and page pools).
+
+    Decode-TP attention partitions *heads*: each device streams only its
+    kv_heads slice of the pool, matching the head-sharded q/k/v projections.
+    Sequence-SP (the train/dryrun decode spec) is wrong here — admission
+    scatters one slot row (dense pool) or individual pages (paged pool) at a
+    time, and a sequence-sharded pool would turn every per-slot scatter into
+    cross-device traffic. Batch/page axes therefore stay unsharded:
+
+      gqa dense pool  [G, B_max, S, KH, D]         -> KH over 'model'
+      gqa paged pool  [G, n_pages, page_size, KH, D] -> KH over 'model'
+      int8 kv scales  [G, ..., ..., KH]            -> KH over 'model'
+      mla latent pools [G, ..., ..., R]            -> replicated (R is shared
+                                                      across heads)
+      SSM/conv states [G, B, din, ...]             -> din over 'model'
+
+    ``_guard`` drops the 'model' assignment whenever kv_heads (or din) does
+    not divide the mesh's model axis, falling back to a replicated pool.
+    """
+    if any(s in path for s in _MLA_CACHE):
+        return P()
+    if len(shape) >= 4 and any(s in path for s in _KV_CACHE):
+        # KH sits at axis 3 in both pool layouts, for planes and scales alike
+        spec = [None, None, None, "model"] + [None] * (len(shape) - 4)
+        return _guard(P(*spec), shape, mesh)
+    if len(shape) >= 3 and not any(s in path for s in _KV_CACHE):
+        # stateful mixers (mamba/xlstm) keep dense [G, B, din, ...] rows;
+        # the mamba conv buffer is [G, B, d_conv-1, d_in] — its d_in is the
+        # LAST axis, and sharding the tiny conv window would put every
+        # decode step's state roll across shards
+        if path.endswith("conv"):
+            spec = [None] * (len(shape) - 1) + ["model"]
+        else:
+            spec = [None, None, "model"] + [None] * (len(shape) - 3)
+        return _guard(P(*spec), shape, mesh)
+    return P()
+
+
 def cache_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh,
-                   batch: int) -> P:
+                   batch: int, *, serve_pool: bool = False) -> P:
     """Decode caches: stacked [G, B, ...]. Shard batch over DP when divisible,
-    sequence (KV caches) over 'model' (or everything when batch=1)."""
+    sequence (KV caches) over 'model' (or everything when batch=1).
+
+    ``serve_pool=True`` switches to the serving-pool layouts (continuous /
+    paged serve): kv_heads over 'model', batch and page axes unsharded — see
+    :func:`_serve_pool_spec`.
+    """
+    if serve_pool:
+        return _serve_pool_spec(path, shape, mesh)
     dp = dp_axes(mesh)
     ndp = int(np.prod([mesh.shape[a] for a in dp]))
     batch_ax = dp if batch % ndp == 0 else None
@@ -133,9 +194,11 @@ def cache_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh,
     return _guard(P(*spec), shape, mesh)
 
 
-def cache_specs(cache_shapes: Any, mesh: Mesh, batch: int) -> Any:
+def cache_specs(cache_shapes: Any, mesh: Mesh, batch: int, *,
+                serve_pool: bool = False) -> Any:
     return tree_map_with_path(
-        lambda path, leaf: cache_spec_for(path, tuple(leaf.shape), mesh, batch),
+        lambda path, leaf: cache_spec_for(path, tuple(leaf.shape), mesh,
+                                          batch, serve_pool=serve_pool),
         cache_shapes,
     )
 
@@ -144,6 +207,15 @@ def batch_spec(mesh: Mesh, batch: int) -> P:
     dp = dp_axes(mesh)
     ndp = int(np.prod([mesh.shape[a] for a in dp]))
     return P(dp) if batch % ndp == 0 else P()
+
+
+def place_serve_params(params: Any, mesh: Mesh) -> Any:
+    """device_put a serving param tree under the weight-stationary specs
+    (``param_specs(serve_replicated=True)``) — the single definition of
+    "where serving weights live" shared by serve.py, pack_model_params and
+    the continuous batcher."""
+    return jax.device_put(params, named_shardings(
+        param_specs(params, mesh, serve_replicated=True), mesh))
 
 
 def named_shardings(specs: Any, mesh: Mesh) -> Any:

@@ -1,0 +1,206 @@
+"""sharding/rules.py in isolation: packed-plane TP specs, _guard divisibility
+fallback, serve_replicated FSDP stripping, and the serving-pool cache specs.
+
+The rules only read ``mesh.shape`` / ``mesh.axis_names``, so these tests run
+against a duck-typed stand-in mesh — no multi-device runtime needed (the
+end-to-end sharded serve runs in tests/test_sharded_serving.py under the
+forced-8-device CI job).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (
+    _guard,
+    batch_spec,
+    cache_spec_for,
+    cache_specs,
+    param_spec_for,
+    param_specs,
+)
+
+
+class StubMesh:
+    """Duck-typed mesh: just the shape mapping + axis names the rules read."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = StubMesh(data=4, model=2)
+SDS = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- packed TP
+def test_packed_planes_tp_over_n():
+    """Bit-planes [..., K', N] put 'model' on N — each device holds only its
+    slice of the packed bytes."""
+    for plane in ("mask_bits", "sign_bits", "sign_res_bits", "region_bits"):
+        spec = param_spec_for(f"blocks/0/mixer/wq/w/{plane}",
+                              (2, 16, 128), MESH)
+        assert spec == P(None, None, "model"), plane
+
+
+def test_packed_scales_skip_trailing_tail():
+    """Scales [..., K/128, N, 5]: 'model' lands on N, not the 5-wide tail."""
+    spec = param_spec_for("blocks/0/mixer/wq/w/scales", (2, 1, 128, 5), MESH)
+    assert spec == P(None, None, "model", None)
+
+
+def test_packed_plane_unstacked():
+    spec = param_spec_for("encoder/thing/w/mask_bits", (16, 128), MESH)
+    assert spec == P(None, "model")
+
+
+def test_packed_plane_nondivisible_n_falls_back():
+    """N=100 does not divide model=8: _guard drops the TP assignment instead
+    of raising inside jit."""
+    mesh = StubMesh(data=1, model=8)
+    spec = param_spec_for("blocks/0/mixer/wq/w/mask_bits", (2, 16, 100), mesh)
+    assert spec == P(None, None, None)
+
+
+# ------------------------------------------------------------------- _guard
+def test_guard_drops_only_nondivisible_axes():
+    mesh = StubMesh(data=4, model=2)
+    spec = _guard(P("data", "model"), (6, 8), mesh)   # 6 % 4 != 0
+    assert spec == P(None, "model")
+    spec = _guard(P("data", "model"), (8, 8), mesh)
+    assert spec == P("data", "model")
+
+
+def test_guard_multi_axis_product():
+    """A dim assigned ('data', 'model') must divide the axis *product*."""
+    mesh = StubMesh(data=4, model=2)
+    assert _guard(P(("data", "model")), (16,), mesh) == P(("data", "model"))
+    assert _guard(P(("data", "model")), (12,), mesh) == P(None)  # 12 % 8
+
+
+# --------------------------------------------------------- serve_replicated
+def _tree():
+    return {
+        "embed": {"w": SDS(512, 64)},
+        "blocks": {
+            "mixer": {"wq": {"w": SDS(2, 64, 128)},
+                      "wo": {"w": SDS(2, 128, 64)}},
+            "ffn": {"wi_gate": {"w": SDS(2, 8, 64, 128)},
+                    "ffn_down": {"w": SDS(2, 8, 128, 64)}},
+            "norm1": {"scale": SDS(64)},
+        },
+    }
+
+
+def test_param_specs_fsdp_default():
+    specs = param_specs(_tree(), MESH)
+    assert specs["blocks"]["mixer"]["wq"]["w"] == P(None, "data", "model")
+    assert specs["blocks"]["mixer"]["wo"]["w"] == P(None, "model", "data")
+    assert specs["embed"]["w"] == P("model", "data")
+    assert specs["blocks"]["norm1"]["scale"] == P()
+
+
+def test_serve_replicated_strips_data_from_2d_3d():
+    """Weight-stationary serving: no per-token FSDP gathers — 'data' drops
+    from 2-D/3-D weight specs, TP stays."""
+    specs = param_specs(_tree(), MESH, serve_replicated=True)
+    assert specs["blocks"]["mixer"]["wq"]["w"] == P(None, None, "model")
+    assert specs["blocks"]["mixer"]["wo"]["w"] == P(None, "model", None)
+    assert specs["embed"]["w"] == P("model", None)
+
+
+def test_serve_replicated_keeps_expert_placement():
+    """4-D stacked experts keep EP over 'data': that is placement, not FSDP —
+    replicating every expert would blow HBM."""
+    specs = param_specs(_tree(), MESH, serve_replicated=True)
+    assert specs["blocks"]["ffn"]["wi_gate"]["w"] == \
+        P(None, "data", None, "model")
+    assert specs["blocks"]["ffn"]["ffn_down"]["w"] == \
+        P(None, "data", "model", None)
+
+
+# ------------------------------------------------------- serve-pool caches
+def test_serve_pool_dense_kv_shards_heads():
+    """Dense slot pool [G, B_max, S, KH, D]: kv_heads over 'model', batch
+    and sequence unsharded (admission scatters are per-slot)."""
+    spec = cache_spec_for("0/mixer/k", (2, 4, 48, 4, 32), MESH, 4,
+                          serve_pool=True)
+    assert spec == P(None, None, None, "model", None)
+    spec = cache_spec_for("0/mixer/v_scale", (2, 4, 48, 4), MESH, 4,
+                          serve_pool=True)
+    assert spec == P(None, None, None, "model")
+
+
+def test_serve_pool_paged_kv_shards_heads():
+    """Paged pool [G, n_pages, page_size, KH, D]: same KH axis position."""
+    spec = cache_spec_for("0/mixer/k", (2, 25, 8, 4, 32), MESH, 4,
+                          serve_pool=True)
+    assert spec == P(None, None, None, "model", None)
+    spec = cache_spec_for("0/mixer/k_scale", (2, 25, 8, 4), MESH, 4,
+                          serve_pool=True)
+    assert spec == P(None, None, None, "model")
+
+
+def test_serve_pool_mla_latent_replicated():
+    """MLA latent pools have no head axis — the latent is shared by every
+    head, so both pool layouts replicate."""
+    for shape in ((2, 4, 48, 16), (2, 25, 8, 16)):
+        assert cache_spec_for("0/mixer/ckv", shape, MESH, 4,
+                              serve_pool=True) == P()
+        assert cache_spec_for("0/mixer/k_rope", shape, MESH, 4,
+                              serve_pool=True) == P()
+
+
+def test_serve_pool_nondivisible_heads_fall_back():
+    mesh = StubMesh(data=1, model=8)
+    spec = cache_spec_for("0/mixer/k", (2, 4, 48, 6, 32), mesh, 4,
+                          serve_pool=True)                   # 6 % 8 != 0
+    assert spec == P(None, None, None, None, None)
+
+
+def test_serve_pool_ssm_state_shards_din():
+    spec = cache_spec_for("0/mixer/h", (2, 4, 128, 16), MESH, 4,
+                          serve_pool=True)
+    assert spec == P(None, None, "model", None)
+
+
+def test_serve_pool_mamba_conv_shards_din_not_window():
+    """The conv buffer is [G, B, d_conv-1, d_in]: 'model' must land on d_in
+    (last axis), never on the conv window — even when the window happens to
+    divide the mesh."""
+    spec = cache_spec_for("0/mixer/conv", (2, 4, 4, 256), MESH, 4,
+                          serve_pool=True)                   # window 4 % 2 == 0
+    assert spec == P(None, None, None, "model")
+
+
+def test_serve_pool_vs_decode_specs_differ():
+    """The train/dryrun decode spec SP-shards the sequence; the serving pool
+    must not (per-slot scatters would cross shards)."""
+    shape = (2, 4, 48, 4, 32)
+    decode = cache_spec_for("0/mixer/k", shape, MESH, 4)
+    pool = cache_spec_for("0/mixer/k", shape, MESH, 4, serve_pool=True)
+    assert decode == P(None, ("data",), "model", None, None)
+    assert pool == P(None, None, None, "model", None)
+
+
+def test_cache_specs_tree_serve_pool():
+    tree = ({"mixer": {"k": SDS(2, 4, 48, 4, 32), "v": SDS(2, 4, 48, 4, 32)}},
+            {"mixer": {"ckv": SDS(2, 4, 48, 16)}})
+    specs = cache_specs(tree, MESH, 4, serve_pool=True)
+    assert specs[0]["mixer"]["k"] == P(None, None, None, "model", None)
+    assert specs[1]["mixer"]["ckv"] == P()
+
+
+# ---------------------------------------------------------------- misc api
+def test_batch_spec_divisibility():
+    assert batch_spec(MESH, 8) == P(("data",))
+    assert batch_spec(MESH, 3) == P()
+
+
+@pytest.mark.parametrize("serve_pool", [False, True])
+def test_cache_specs_positional_compat(serve_pool):
+    """launch/steps.py calls cache_specs positionally; the serve_pool flag
+    must stay keyword-only."""
+    tree = {"mixer": {"k": SDS(2, 4, 48, 4, 32)}}
+    specs = cache_specs(tree, MESH, 4, serve_pool=serve_pool)
+    assert isinstance(specs["mixer"]["k"], P)
