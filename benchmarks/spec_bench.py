@@ -1,0 +1,161 @@
+"""Speculative decoding in the chunk loop: packed STB draft -> dense verify,
+A/B'd against the vanilla continuous-batching loop.
+
+``spec_bench`` replays one Poisson arrival trace with mixed gen lengths
+through the continuous batcher and writes ``BENCH_spec.json`` at the repo
+root, measuring two self-speculative pairs built from a single PTQ pass of
+the decode-bench model (2L d128, every linear 128-aligned so the whole
+model packs):
+
+  * ``self_draft`` — target = the PTQ'd dense params, draft = their own
+    packed bit-planes. Packing is a lossless re-encoding of the PTQ result,
+    so the draft's argmax always equals the target's: the accept rate must
+    be **exactly 1.0** (``self_draft_accept_match``, gated) and the cell
+    measures the pure loop-shape trade — ``draft_k`` cheap packed steps +
+    one ``draft_k + 1``-wide verify vs ``draft_k + 1`` sequential dense
+    steps. This is the deployment where the packed model *is* the serve
+    quality and the dense verify is bit-exactness insurance.
+  * ``quantized_draft`` — target = the ORIGINAL dense params, draft = the
+    packed PTQ planes (the paper pair: the sub-1-bit model pre-pays tokens
+    the full-precision reference then certifies). The accept rate is the
+    recorded fidelity signal. NOTE: on this random-init substrate the
+    PTQ'd draft rarely matches the dense argmax (near-uniform logits flip
+    under binarization error), so expect a near-zero rate here — the
+    trained-model accept rate is an open measurement, like the TPU
+    rooflines (training a substrate in the bench-gate job blows its time
+    budget; see ROADMAP PR 5).
+
+Both cells must emit tokens bit-exact with the vanilla chunk loop serving
+their target params (``*_matches_vanilla``, gated like packed/dense and
+continuous/static before them). Throughputs are best-of-``REPEAT`` wall
+minimum on the identical trace with compiles warmed untimed; on CPU the
+packed draft lowers dequantize-in-HLO, so tok/s tracks loop overhead, not
+the HBM roofline the TPU kernels realize. Takes an explicit ``seed`` so the
+CI bench-gate replays the identical trace against its committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.base import ModelConfig
+from repro.core.pipeline import pack_model_params, quantize_model
+from repro.core.stbllm import STBConfig
+from repro.data import calibration_batch
+from repro.launch.generate import spec_cache_len
+from repro.models.model import build_model
+from repro.serving import ContinuousBatcher, poisson_trace
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_JSON = os.path.join(ROOT, "BENCH_spec.json")
+
+# the decode bench's shape: smallest config where every linear is
+# 128-aligned, so the PTQ pass packs the whole model (proven cheap in CI)
+SPEC_CFG = ModelConfig(
+    arch_id="spec-bench", family="dense", n_layers=2, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=384, vocab=512, head_dim=32)
+
+N_REQUESTS = 16
+PROMPT_LEN = 16
+GEN_LENS = (8, 16, 32)
+N_SLOTS = 4
+CHUNK_STEPS = 8
+DRAFT_K = 4
+RATE_RPS = 96.0
+NM = "4:8"
+REPEAT = 3
+
+
+def _ab_cell(model, target_params, draft_params, trace, kw, rows: Row,
+             name: str) -> dict:
+    """One vanilla-vs-speculative A/B on ``target_params`` with compiles
+    warmed untimed and best-of-REPEAT wall minimums."""
+    vanilla_b = ContinuousBatcher(model, target_params, **kw)
+    spec_b = ContinuousBatcher(model, target_params, speculative=True,
+                               draft_params=draft_params, draft_k=DRAFT_K,
+                               **kw)
+    vanilla_b.run(trace, wait_for_arrivals=False)
+    spec_b.run(trace, wait_for_arrivals=False)
+    vanilla = min((vanilla_b.run(trace, wait_for_arrivals=True)
+                   for _ in range(REPEAT)), key=lambda r: r.wall_s)
+    spec = min((spec_b.run(trace, wait_for_arrivals=True)
+                for _ in range(REPEAT)), key=lambda r: r.wall_s)
+
+    van_toks = vanilla.tokens_by_rid()
+    spec_toks = spec.tokens_by_rid()
+    match = all(np.array_equal(van_toks[r.rid], spec_toks[r.rid])
+                for r in trace)
+    st = spec.spec or {}
+    cell = {
+        "vanilla": vanilla.summary(),
+        "speculative": spec.summary(),
+        "speedup_throughput": (spec.throughput_tok_s /
+                               max(vanilla.throughput_tok_s, 1e-9)),
+        f"{name}_matches_vanilla": bool(match),
+        "accept_rate": st.get("accept_rate", 0.0),
+    }
+    for kind, rep in (("vanilla", vanilla), ("speculative", spec)):
+        rows.add(f"spec/{name}/{kind}", rep.wall_s * 1e6,
+                 f"tok_s={rep.throughput_tok_s:.1f} "
+                 f"p50={rep.latency_percentile(50):.2f}s "
+                 f"p95={rep.latency_percentile(95):.2f}s")
+    rows.add(f"spec/{name}/accept_rate", 0,
+             f"{st.get('accept_rate', 0.0):.2%} "
+             f"({st.get('accepted_drafts', 0)}/{st.get('drafted', 0)} "
+             f"drafts, k={DRAFT_K})")
+    rows.add(f"spec/{name}/matches_vanilla", 0, str(match))
+    return cell
+
+
+def spec_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
+    model = build_model(SPEC_CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calibration_batch(SPEC_CFG.vocab, n_samples=4,
+                              seq_len=PROMPT_LEN)
+    n, m = (int(v) for v in NM.split(":"))
+    res = quantize_model(model, params, calib,
+                         STBConfig(n=n, m=m, beta=128), pack=True)
+    draft_params = pack_model_params(res.params, res.packed)
+
+    trace = poisson_trace(
+        N_REQUESTS, prompt_len=PROMPT_LEN, vocab=SPEC_CFG.vocab,
+        rate_rps=RATE_RPS, gen_lens=GEN_LENS, seed=seed)
+    kw = dict(n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+              max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS)
+
+    # packed planes decode to exactly the PTQ'd dense weights, so this cell
+    # must accept every usable draft — 1.0 is an invariant, not a measurement
+    self_cell = _ab_cell(model, res.params, draft_params, trace, kw, rows,
+                         "self_draft")
+    self_cell["self_draft_accept_match"] = bool(
+        self_cell.pop("accept_rate") == 1.0)
+    rows.add("spec/self_draft/accept_match", 0,
+             str(self_cell["self_draft_accept_match"]))
+    # the paper pair: full-precision reference verified, sub-1-bit drafts
+    quant_cell = _ab_cell(model, params, draft_params, trace, kw, rows,
+                          "quantized_draft")
+
+    results = {
+        "config": {
+            "arch": SPEC_CFG.arch_id, "n_requests": N_REQUESTS,
+            "prompt_len": PROMPT_LEN, "gen_lens": list(GEN_LENS),
+            "n_slots": N_SLOTS, "chunk_steps": CHUNK_STEPS,
+            "draft_k": DRAFT_K, "nm": NM, "rate_rps": RATE_RPS,
+            "seed": seed, "avg_bits": res.avg_bits,
+            "cache_len_per_slot": spec_cache_len(
+                PROMPT_LEN, max(GEN_LENS), DRAFT_K),
+            "backend": jax.devices()[0].platform,
+        },
+        "self_draft": self_cell,
+        "quantized_draft": quant_cell,
+    }
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.add("spec/json", 0, out_json)
+    return results

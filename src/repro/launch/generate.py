@@ -15,6 +15,14 @@ into exactly two device computations:
 Build with ``make_generate(model, ...)``; both returned functions are jitted
 with cache donation so decode runs in-place over the cache buffers.
 
+**Speculative decoding** (``make_speculative_decode`` /
+``make_speculative_chunked_decode``): self-speculation where the packed
+structured-binary planes draft ``draft_k`` tokens per round and the dense
+target scores them all in one multi-token verify step, emitting the longest
+greedy-matching prefix plus one corrected token — bit-exact with plain
+dense greedy decode for any draft. See ``_make_spec_round`` for the round
+anatomy and the cache-rollback contract (position masking, no cache edits).
+
 **Sharded serving** (``mesh=``): both builders accept a ``jax.sharding.Mesh``
 and jit with explicit ``in_shardings``/``out_shardings`` — params under
 ``param_specs(serve_replicated=True)`` (weight-stationary TP: packed planes
@@ -205,6 +213,342 @@ def make_generate(model, *, prompt_len: int, gen_len: int,
         prompt_len=prompt_len,
         gen_len=gen_len,
     )
+
+
+def draft_param_shardings(draft_params, mesh):
+    """NamedShardings for the draft tree (weight-stationary TP, like the
+    target's) — the packed draft has a different pytree structure (bit-plane
+    leaves), so it cannot reuse the target's sharding tree."""
+    from repro.sharding.rules import named_shardings, param_specs
+
+    return named_shardings(
+        param_specs(draft_params, mesh, serve_replicated=True), mesh)
+
+
+def _make_spec_round(model, draft_k: int):
+    """One speculative round over a [B] batch of independent rows.
+
+    Greedy (temperature-0) self-speculation: the draft model proposes
+    ``draft_k`` tokens with a scan of cheap single-token decode steps, the
+    target scores all of them plus the carried token in ONE multi-token
+    verify step (``Model.decode_step`` with T = draft_k + 1), and the round
+    emits the longest prefix of drafts matching the target's greedy argmax
+    plus one target-corrected token. Every emitted token is by construction
+    the target's greedy choice given its prefix, so the overall stream is
+    bit-exact with plain target-only greedy decode.
+
+    The draft scan runs ``draft_k + 1`` steps: the extra step's *logits* are
+    discarded, but it writes the last draft token's K/V so the draft cache
+    never has a hole when the whole draft is accepted and the bonus token
+    advances the position past it. Rejected suffixes need no cache surgery
+    in either model — positions simply don't advance past the accepted
+    prefix, later attention masks the stale tail out, and the next round
+    overwrites it (see ``Model.decode_step``).
+
+    Rows with ``rem == 0`` are inert: their position and carried token
+    freeze, their emissions are invalid, and their (garbage) cache writes
+    land in the ``draft_k + 1`` headroom positions past their final token
+    that every speculative cache allocation carries.
+
+    Returns ``(t_caches, d_caches, cur, pos, rem, emitted, valid,
+    accepted)`` where ``emitted``/``valid`` are [B, draft_k + 1] (tokens in
+    stream order, ``valid`` marking the ``min(n_acc + 1, rem)`` real ones)
+    and ``accepted`` [B] counts the *draft* tokens among them. The matching
+    denominator is ``min(draft_k, rem)`` — the drafts the row could still
+    have used — so a draft that always matches the target scores accept
+    rate exactly 1.0 even on requests whose budget ends mid-round.
+    """
+    vocab = model.cfg.vocab
+    k = draft_k
+
+    def round_fn(t_params, d_params, t_caches, d_caches, cur, pos, rem,
+                 tables, memory):
+        def dstep(carry, i):
+            tok, caches = carry
+            logits, caches = model.decode_step(d_params, caches, tok, pos + i,
+                                               memory, block_tables=tables)
+            nxt = jnp.argmax(logits[:, -1, :vocab],
+                             axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, caches), nxt[:, 0]
+
+        (_, d_caches), drafts = jax.lax.scan(
+            dstep, (cur, d_caches), jnp.arange(k + 1))
+        drafts = drafts.T                        # [B, k+1]; column k discarded
+        cand = jnp.concatenate([cur, drafts[:, :k]], axis=1)      # [B, k+1]
+        logits, t_caches = model.decode_step(t_params, t_caches, cand, pos,
+                                             memory, block_tables=tables)
+        greedy = jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+        match = (drafts[:, :k] == greedy[:, :k]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)            # [B] 0..k
+        corrected = jnp.take_along_axis(greedy, n_acc[:, None], axis=1)
+        idx = jnp.arange(k + 1)[None, :]
+        emitted = jnp.where(idx < n_acc[:, None], drafts, corrected)
+        m = jnp.minimum(n_acc + 1, rem).astype(rem.dtype)  # emitted this round
+        valid = idx < m[:, None]
+        cur = jnp.where((m > 0)[:, None],
+                        jnp.take_along_axis(emitted,
+                                            jnp.maximum(m - 1, 0)[:, None],
+                                            axis=1),
+                        cur)
+        accepted = jnp.minimum(n_acc, m)         # draft tokens among emitted
+        return (t_caches, d_caches, cur, pos + m, rem - m, emitted, valid,
+                accepted)
+
+    return round_fn
+
+
+def spec_cache_len(prompt_len: int, gen_len: int, draft_k: int) -> int:
+    """Positions a speculative cache must hold: the request's own
+    ``prompt_len + gen_len`` plus ``draft_k + 1`` headroom so the widest
+    verify/draft write starting at the final position never clamps its
+    window back onto accepted entries (and a finished row's frozen-position
+    scribbles stay past its real tokens)."""
+    return prompt_len + gen_len + draft_k + 1
+
+
+@dataclass(frozen=True)
+class SpeculativePipeline:
+    """Two-dispatch speculative generation over (target, draft) params.
+
+    ``run`` needs *two* cache trees sized ``model.init_cache(batch,
+    pipe.max_len)`` (the ``spec_cache_len`` headroom included) — one for the
+    dense target, one for the packed draft. Emitted tokens are bit-exact
+    with target-only greedy decode at temperature 0.
+    """
+    prefill_fn: Callable
+    decode_fn: Callable
+    prompt_len: int
+    gen_len: int
+    draft_k: int
+    max_len: int
+
+    def run(self, target_params, draft_params, t_caches, d_caches, prompts,
+            memory=None):
+        """prompts [B, S] -> (tokens [B, gen_len], stats dict).
+
+        ``stats``: rounds, accepted draft tokens, drafted tokens and the
+        derived accept rate / mean emitted-per-round over the whole batch.
+        """
+        tok0, t_caches, d_caches = self.prefill_fn(
+            target_params, draft_params, t_caches, d_caches, prompts, memory)
+        toks, stats, _, _ = self.decode_fn(
+            target_params, draft_params, t_caches, d_caches, tok0, memory)
+        rounds, accepted, drafted = (int(v) for v in np.asarray(stats))
+        return toks, {
+            "rounds": rounds,
+            "accepted_drafts": accepted,
+            "drafted": drafted,
+            "accept_rate": accepted / max(drafted, 1),
+            # the prefill-sampled first token is not a round's emission
+            "mean_emitted_per_round":
+                toks.shape[0] * (self.gen_len - 1) / max(rounds, 1),
+        }
+
+
+def make_speculative_decode(model, *, prompt_len: int, gen_len: int,
+                            draft_k: int = 4, prefill_mode: str = "auto",
+                            donate: bool = True, mesh=None,
+                            target_params=None, draft_params=None,
+                            batch: int | None = None,
+                            shardings=None) -> SpeculativePipeline:
+    """Compile the static speculative serve path (greedy only).
+
+    The decode loop is ONE jitted unit — a ``lax.while_loop`` of speculative
+    rounds (draft scan -> multi-token verify -> accept/correct, see
+    ``_make_spec_round``) with both cache trees donated — that exits as soon
+    as every row has emitted its ``gen_len`` tokens. Tokens are bit-exact
+    with ``make_generate(temperature=0)`` on the target params alone, for
+    *any* draft params; the draft only controls how many rounds that takes.
+
+    With ``mesh`` both param trees are spec'd independently (the packed
+    draft's bit-plane leaves don't share the target tree's structure):
+    pass ``target_params``/``draft_params``/``batch`` — or a pre-computed
+    ``(target, draft, cache, replicated)`` 4-tuple as ``shardings=``.
+    """
+    if draft_k <= 0:
+        raise ValueError(f"draft_k must be positive (got {draft_k}); each "
+                         f"round drafts draft_k tokens and verifies "
+                         f"draft_k + 1")
+    if not model.can_fused_prefill:
+        raise ValueError(
+            f"speculative decoding needs an attention-family pattern "
+            f"(rollback is position masking); {model.pattern} holds "
+            f"stateful mixers")
+    vocab = model.cfg.vocab
+    max_len = spec_cache_len(prompt_len, gen_len, draft_k)
+    round_fn = _make_spec_round(model, draft_k)
+
+    jit_kw: dict = {}
+    decode_jit_kw: dict = {}
+    if mesh is not None:
+        if shardings is not None:
+            pt_shard, pd_shard, c_shard, repl = shardings
+        else:
+            if target_params is None or draft_params is None or batch is None:
+                raise ValueError("sharded make_speculative_decode needs "
+                                 "target_params=, draft_params= and batch= "
+                                 "(or shardings=) alongside mesh=")
+            pt_shard, c_shard, repl = serve_shardings(
+                model, mesh, target_params, batch, max_len)
+            pd_shard = draft_param_shardings(draft_params, mesh)
+        jit_kw = dict(
+            in_shardings=(pt_shard, pd_shard, c_shard, c_shard, repl, repl),
+            out_shardings=(repl, c_shard, c_shard))
+        decode_jit_kw = dict(
+            in_shardings=(pt_shard, pd_shard, c_shard, c_shard, repl, repl),
+            out_shardings=(repl, repl, c_shard, c_shard))
+
+    def prefill(t_params, d_params, t_caches, d_caches, prompts, memory):
+        logits, t_caches = model.prefill(t_params, t_caches, prompts, memory,
+                                         mode=prefill_mode)
+        _, d_caches = model.prefill(d_params, d_caches, prompts, memory,
+                                    mode=prefill_mode)
+        tok0 = jnp.argmax(logits[:, -1, :vocab],
+                          axis=-1).astype(jnp.int32)[:, None]
+        return tok0, t_caches, d_caches
+
+    def decode(t_params, d_params, t_caches, d_caches, tok0, memory):
+        # like make_generate's scan, the prefill-sampled token is the first
+        # emission; the speculative rounds owe the remaining gen_len - 1
+        b = tok0.shape[0]
+        out0 = jnp.zeros((b, gen_len), jnp.int32).at[:, 0].set(tok0[:, 0])
+        state0 = (t_caches, d_caches, tok0,
+                  jnp.full((b,), prompt_len, jnp.int32),
+                  jnp.full((b,), gen_len - 1, jnp.int32),
+                  out0, jnp.zeros((3,), jnp.int32))
+
+        def cond(state):
+            return jnp.any(state[4] > 0)
+
+        def body(state):
+            t_c, d_c, cur, pos, rem, out, stats = state
+            # usable drafts this round: capped by each row's remaining budget
+            # (zero for inert rows), so a perfect draft scores exactly 1.0
+            drafted = jnp.sum(jnp.minimum(draft_k, rem))
+            t_c, d_c, cur, pos, rem2, emitted, valid, accepted = round_fn(
+                t_params, d_params, t_c, d_c, cur, pos, rem, None, memory)
+            done = gen_len - rem                       # [B] already emitted
+            cols = jnp.where(valid,
+                             done[:, None] + jnp.arange(draft_k + 1)[None, :],
+                             gen_len)                  # invalid -> OOB, dropped
+            out = out.at[jnp.arange(b)[:, None], cols].set(emitted,
+                                                           mode="drop")
+            stats = stats + jnp.stack(
+                [jnp.int32(1), jnp.sum(accepted), drafted])
+            return (t_c, d_c, cur, pos, rem2, out, stats)
+
+        t_caches, d_caches, _, _, _, out, stats = jax.lax.while_loop(
+            cond, body, state0)
+        return out, stats, t_caches, d_caches
+
+    return SpeculativePipeline(
+        prefill_fn=jax.jit(prefill, **jit_kw),
+        decode_fn=jax.jit(decode,
+                          donate_argnums=(2, 3) if donate else (),
+                          **decode_jit_kw),
+        prompt_len=prompt_len, gen_len=gen_len, draft_k=draft_k,
+        max_len=max_len)
+
+
+def make_speculative_chunked_decode(model, *, draft_k: int,
+                                    rounds_per_chunk: int,
+                                    paged: bool = False, mesh=None,
+                                    target_params=None, draft_params=None,
+                                    n_slots: int | None = None,
+                                    max_len: int | None = None,
+                                    n_pages: int | None = None,
+                                    page_size: int | None = None,
+                                    shardings=None) -> Callable:
+    """Compile a fixed-size chunk of speculative rounds over per-slot rows.
+
+    The continuous batcher's speculative inner loop: one jitted ``lax.scan``
+    of ``rounds_per_chunk`` rounds (``_make_spec_round``) over all B_max
+    slots at their own positions. Returned fn signature::
+
+        toks, valid, tok, t_caches, d_caches, pos, rem, accepted, drafted = \\
+            chunk_fn(t_params, d_params, t_caches, d_caches,
+                     tok, pos, remaining[, tables], memory)
+
+    ``toks``/``valid`` come back [B, rounds_per_chunk * (draft_k + 1)] in
+    stream order; ``accepted``/``drafted`` are per-slot counters for this
+    chunk (draft tokens emitted / draft tokens the slot's remaining budget
+    could have used) — the batcher accumulates them into per-request accept
+    rates.
+    Both cache trees are donated. With ``paged=True`` the per-slot block
+    tables ride between ``remaining`` and ``memory`` and are shared by the
+    draft and target pools (same page ids, two physical pools). Greedy
+    only — speculation at temperature > 0 would need distribution-level
+    acceptance sampling, not argmax matching.
+
+    ``mesh`` mirrors :func:`make_chunked_decode`: params TP'd per tree,
+    pools under the serve-pool specs, per-slot vectors replicated (pass the
+    ``(target, draft, cache, replicated)`` tuple as ``shardings=`` to skip
+    the tree walks).
+    """
+    if draft_k <= 0 or rounds_per_chunk <= 0:
+        raise ValueError(f"draft_k ({draft_k}) and rounds_per_chunk "
+                         f"({rounds_per_chunk}) must be positive")
+    if not model.can_fused_prefill:
+        raise ValueError(
+            f"speculative decoding needs an attention-family pattern "
+            f"(rollback is position masking); {model.pattern} holds "
+            f"stateful mixers")
+    round_fn = _make_spec_round(model, draft_k)
+
+    jit_kw: dict = {}
+    if mesh is not None:
+        if shardings is not None:
+            pt_shard, pd_shard, c_shard, repl = shardings
+        else:
+            if target_params is None or draft_params is None \
+                    or n_slots is None or max_len is None:
+                raise ValueError("sharded make_speculative_chunked_decode "
+                                 "needs target_params=, draft_params=, "
+                                 "n_slots= and max_len= (or shardings=) "
+                                 "alongside mesh=")
+            pt_shard, c_shard, repl = serve_shardings(
+                model, mesh, target_params, n_slots, max_len,
+                n_pages=n_pages, page_size=page_size)
+            pd_shard = draft_param_shardings(draft_params, mesh)
+        jit_kw = dict(
+            in_shardings=(pt_shard, pd_shard, c_shard, c_shard)
+            + (repl,) * (5 if paged else 4),
+            out_shardings=(repl, repl, repl, c_shard, c_shard,
+                           repl, repl, repl, repl))
+
+    def chunk(t_params, d_params, t_caches, d_caches, tok, pos, remaining,
+              tables, memory):
+        def step(carry, _):
+            t_c, d_c, cur, pos, rem, acc, drf = carry
+            # usable drafts: capped by the slot's remaining budget (zero for
+            # inert slots), so perfect drafts score accept rate exactly 1.0
+            drafted = jnp.minimum(draft_k, rem)
+            t_c, d_c, cur, pos, rem, emitted, valid, accepted = round_fn(
+                t_params, d_params, t_c, d_c, cur, pos, rem, tables, memory)
+            return ((t_c, d_c, cur, pos, rem, acc + accepted,
+                     drf + drafted),
+                    (emitted, valid))
+
+        zero = jnp.zeros_like(remaining)
+        carry, (toks, valid) = jax.lax.scan(
+            step, (t_caches, d_caches, tok, pos, remaining, zero, zero),
+            None, length=rounds_per_chunk)
+        t_caches, d_caches, tok, pos, rem, acc, drf = carry
+        b = tok.shape[0]
+        toks = toks.transpose(1, 0, 2).reshape(b, -1)      # [B, R*(k+1)]
+        valid = valid.transpose(1, 0, 2).reshape(b, -1)
+        return toks, valid, tok, t_caches, d_caches, pos, rem, acc, drf
+
+    donate = (2, 3)
+    if paged:
+        return jax.jit(chunk, donate_argnums=donate, **jit_kw)
+
+    def dense_chunk(t_params, d_params, t_caches, d_caches, tok, pos,
+                    remaining, memory):
+        return chunk(t_params, d_params, t_caches, d_caches, tok, pos,
+                     remaining, None, memory)
+
+    return jax.jit(dense_chunk, donate_argnums=donate, **jit_kw)
 
 
 def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,

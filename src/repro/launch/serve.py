@@ -31,6 +31,13 @@ per layer): admission reserves pages, retirement frees them, and cache HBM
 tracks live tokens instead of ``n_slots * max_len`` — tokens stay bit-exact
 vs the dense pool at temperature 0.
 
+``--speculative --draft-k K`` self-speculates: the packed PTQ planes draft
+K tokens per round with cheap single-token steps, the original dense params
+run ONE multi-token verify over the drafts, and the longest greedy-matching
+prefix (+1 corrected token) is emitted — tokens are bit-exact with dense
+greedy decode at temperature 0, on the static pipeline and inside the
+continuous/paged chunk loop alike (see README "Speculative decoding").
+
 ``--tp N`` / ``--mesh DxM`` serve tensor-parallel over a device mesh: params
 are device_put under the weight-stationary TP specs (packed bit-planes shard
 their N dim over 'model' — each device streams only its slice of the
@@ -55,7 +62,12 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.core.pipeline import pack_model_params, quantize_model
 from repro.core.stbllm import STBConfig
 from repro.data import calibration_batch
-from repro.launch.generate import legacy_generate, make_generate, serve_shardings
+from repro.launch.generate import (
+    legacy_generate,
+    make_generate,
+    make_speculative_decode,
+    serve_shardings,
+)
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models.model import build_model
 from repro.utils.logging import get_logger
@@ -93,10 +105,26 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           gen_lens: tuple[int, ...] | None = None, paged: bool = False,
           page_size: int = 16, n_pages: int | None = None,
           mesh=None, tp: int | None = None,
-          mesh_shape: str | None = None) -> dict:
+          mesh_shape: str | None = None, speculative: bool = False,
+          draft_k: int = 4) -> dict:
     if continuous and legacy_loop:
         raise ValueError("--continuous and --legacy-loop are exclusive "
                          "serve loops")
+    if speculative:
+        if not quantize:
+            raise ValueError("--speculative drafts with the packed PTQ "
+                             "planes; drop --no-quantize")
+        if packed:
+            raise ValueError("--speculative already serves the packed "
+                             "planes (as the draft) against the dense "
+                             "target; drop --packed")
+        if legacy_loop:
+            raise ValueError("--speculative and --legacy-loop are "
+                             "exclusive serve loops")
+        if temperature != 0.0:
+            raise ValueError("--speculative is greedy-only (temperature 0): "
+                             "acceptance matches drafts against the "
+                             "target's argmax")
     if mesh is None:
         mesh = build_serve_mesh(tp, mesh_shape)
     if mesh is not None and legacy_loop:
@@ -118,14 +146,25 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         raise ValueError("--packed requires quantization: the packed planes "
                          "come from the PTQ pass (drop --no-quantize)")
     stats = {}
+    draft_params = None
     if quantize:
         n, m = (int(v) for v in nm.split(":"))
         calib = calibration_batch(cfg.vocab, n_samples=4, seq_len=prompt_len)
         beta = min(128, cfg.d_model)
         t0 = time.time()
         res = quantize_model(model, params, calib,
-                             STBConfig(n=n, m=m, beta=beta), pack=packed)
-        params = res.params
+                             STBConfig(n=n, m=m, beta=beta),
+                             pack=packed or speculative)
+        if speculative:
+            # self-speculative pair: the original dense params stay the serve
+            # target (the reference distribution every emitted token matches),
+            # the PTQ'd packed planes become the cheap draft. The continuous
+            # batcher device_puts the draft under its own mesh specs.
+            draft_params = pack_model_params(
+                res.params, res.packed, mesh=None if continuous else mesh)
+            stats["packed_layers"] = len(res.packed)
+        else:
+            params = res.params
         if packed:
             # mesh: the packed planes land TP-sharded over N — each device
             # holds only its slice of the mask/sign/region bytes
@@ -136,7 +175,8 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
                       "ptq_seconds": time.time() - t0})
         log(f"PTQ {nm}: avg_bits={res.avg_bits:.3f} "
             f"({stats['ptq_seconds']:.1f}s"
-            f"{', packed' if packed else ''})")
+            f"{', packed' if packed else ''}"
+            f"{', speculative draft' if speculative else ''})")
     if mesh is not None:
         # packed params were already placed by pack_model_params(mesh=); the
         # continuous batcher places its own — only the static dense path
@@ -166,11 +206,56 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
             model, params, n_slots=n_slots, prompt_len=prompt_len,
             max_new_tokens=max(lens), chunk_steps=chunk_steps,
             temperature=temperature, prefill_mode=prefill_mode, seed=seed,
-            paged=paged, page_size=page_size, n_pages=n_pages, mesh=mesh)
+            paged=paged, page_size=page_size, n_pages=n_pages, mesh=mesh,
+            speculative=speculative, draft_params=draft_params,
+            draft_k=draft_k)
         report = batcher.run(requests, wait_for_arrivals=False)
         return {"tokens": report.tokens_by_rid(),
                 "throughput": report.throughput_tok_s,
                 "report": report.summary(), **stats}
+
+    if speculative:
+        from repro.launch.generate import draft_param_shardings, spec_cache_len
+        spec_shardings = None
+        if mesh is not None:
+            # one walk per tree, shared by device_put and the pipeline jits
+            # (mirrors the dense static path's shardings= threading below)
+            pt_shard, c_shard, repl = serve_shardings(
+                model, mesh, params, n_requests,
+                spec_cache_len(prompt_len, gen_len, draft_k))
+            pd_shard = draft_param_shardings(draft_params, mesh)
+            spec_shardings = (pt_shard, pd_shard, c_shard, repl)
+        pipe = make_speculative_decode(
+            model, prompt_len=prompt_len, gen_len=gen_len, draft_k=draft_k,
+            prefill_mode=prefill_mode, mesh=mesh, shardings=spec_shardings)
+        t_caches = model.init_cache(n_requests, pipe.max_len)
+        d_caches = model.init_cache(n_requests, pipe.max_len)
+        if mesh is not None:
+            params = jax.device_put(params, pt_shard)
+            draft_params = jax.device_put(draft_params, pd_shard)
+            t_caches = jax.device_put(t_caches, c_shard)
+            d_caches = jax.device_put(d_caches, c_shard)
+        t0 = time.time()
+        tok0, t_caches, d_caches = pipe.prefill_fn(
+            params, draft_params, t_caches, d_caches,
+            jnp.asarray(prompts), mem)
+        jax.block_until_ready(tok0)
+        t_prefill = time.time() - t0
+        t0 = time.time()
+        toks, st, _, _ = pipe.decode_fn(params, draft_params, t_caches,
+                                        d_caches, tok0, mem)
+        out = np.asarray(toks)                      # the single host sync
+        t_decode = time.time() - t0
+        rounds, accepted, drafted = (int(v) for v in np.asarray(st))
+        tput = n_requests * gen_len / max(t_decode, 1e-9)
+        spec_stats = {"draft_k": draft_k, "rounds": rounds,
+                      "accepted_drafts": accepted, "drafted": drafted,
+                      "accept_rate": accepted / max(drafted, 1)}
+        log(f"prefill {t_prefill:.2f}s decode {t_decode:.2f}s "
+            f"({tput:.1f} tok/s batch={n_requests} spec k={draft_k} "
+            f"accept {spec_stats['accept_rate']:.0%} in {rounds} rounds)")
+        return {"tokens": out, "throughput": tput, "prefill_s": t_prefill,
+                "decode_s": t_decode, "spec": spec_stats, **stats}
 
     max_len = prompt_len + gen_len
     caches = model.init_cache(n_requests, max_len)
@@ -254,6 +339,17 @@ def main() -> None:
     ap.add_argument("--mesh", default=None,
                     help="explicit DxM serve mesh, e.g. 2x4 (data x model); "
                          "exclusive with --tp")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding: the packed PTQ planes "
+                         "draft --draft-k tokens per round, one dense "
+                         "multi-token verify accepts the longest greedy-"
+                         "matching prefix (+1 corrected token) — emitted "
+                         "tokens are bit-exact with dense greedy decode")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per speculative round (--speculative; "
+                         "see README guidance — higher k amortizes the "
+                         "verify better but wastes more draft work when "
+                         "the accept rate is low)")
     args = ap.parse_args()
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
@@ -264,7 +360,8 @@ def main() -> None:
           continuous=args.continuous, n_slots=args.n_slots,
           chunk_steps=args.chunk_steps, gen_lens=gen_lens,
           paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
-          tp=args.tp, mesh_shape=args.mesh)
+          tp=args.tp, mesh_shape=args.mesh, speculative=args.speculative,
+          draft_k=args.draft_k)
 
 
 if __name__ == "__main__":

@@ -101,23 +101,46 @@ def flash_attention(
 
 
 def decode_attention(
-    q: jnp.ndarray,            # [B, 1, H, D]  (one new token)
-    k_cache: jnp.ndarray,      # [B, Sk, K, D]
+    q: jnp.ndarray,            # [B, T, H, D]  (T=1: one new token;
+    k_cache: jnp.ndarray,      # [B, Sk, K, D]  T>1: multi-token verify)
     v_cache: jnp.ndarray,      # [B, Sk, K, D]
-    cache_len,                 # scalar or [B]: number of valid cache entries
-) -> jnp.ndarray:
-    b, _, h, d = q.shape
+    cache_len,                 # scalar or [B]: valid entries for query 0;
+) -> jnp.ndarray:              # query t sees cache_len + t entries
+    """Masked softmax attention of T new queries against a decode cache.
+
+    The T=1 case is the per-token decode hot path. T>1 is the speculative
+    verify step: query ``t`` sits at absolute position ``cache_len - 1 + t``
+    and therefore attends to ``cache_len + t`` cache entries — the cache must
+    already hold the K/V the queries themselves produced (write-then-attend,
+    exactly like the single-token step). Per-query masking keeps each row of
+    the score matrix identical to what T sequential decode steps compute.
+    """
+    b, t, h, d = q.shape
     _, sk, kh, _ = k_cache.shape
     g = h // kh
-    qg = (q[:, 0] * (d ** -0.5)).reshape(b, kh, g, d)
+    if t == 1:
+        qg = (q[:, 0] * (d ** -0.5)).reshape(b, kh, g, d)
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+        )                                             # [B, K, G, Sk]
+        valid = jnp.arange(sk)[None, :] < jnp.reshape(cache_len, (-1, 1))
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum(
+            "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+    qg = (q * (d ** -0.5)).reshape(b, t, kh, g, d)
     s = jnp.einsum(
-        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
-    )                                                 # [B, K, G, Sk]
-    valid = jnp.arange(sk)[None, :] < jnp.reshape(cache_len, (-1, 1))
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        "btkgd,bskd->btkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )                                                 # [B, T, K, G, Sk]
+    lens = jnp.reshape(cache_len, (-1, 1)) + jnp.arange(t)[None, :]  # [B|1, T]
+    valid = jnp.arange(sk)[None, None, :] < lens[..., None]          # [B|1,T,S]
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum(
-        "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+        "btkgs,bskd->btkgd", p.astype(v_cache.dtype), v_cache,
         preferred_element_type=jnp.float32,
     )
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    return out.reshape(b, t, h, d).astype(q.dtype)

@@ -47,29 +47,34 @@ def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos,
     return jax.vmap(per_row)(cache, new, p.reshape(-1))
 
 
-def _page_coords(pos, block_tables: jnp.ndarray, page_size: int):
-    """Per-slot (page id, in-page offset) for a decode write at ``pos``.
+def _page_coords(positions: jnp.ndarray, block_tables: jnp.ndarray,
+                 page_size: int):
+    """Per-(slot, token) (page id, in-page offset) for writes at ``positions``.
 
-    ``block_tables`` is [B, NB] int32 with a trailing always-null column
-    (repro.serving.paged), so a finished slot's frozen one-past-the-end
-    position writes into the null page instead of clamping onto a real one.
+    ``positions`` is [B, T] int32 ([B, 1] for the single-token decode step,
+    T > 1 for the speculative multi-token verify). ``block_tables`` is
+    [B, NB] int32 with a trailing always-null column (repro.serving.paged),
+    so a finished slot's frozen one-past-the-end position writes into the
+    null page instead of clamping onto a real one; block indices past the
+    table (a frozen slot's verify tail) clamp onto that same null sentinel.
     """
     b = block_tables.shape[0]
-    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-    page = block_tables[jnp.arange(b), p // page_size]     # [B]
+    p = positions.astype(jnp.int32)
+    page = block_tables[jnp.arange(b)[:, None], p // page_size]   # [B, T]
     return page, p % page_size
 
 
 def _page_write(pool: jnp.ndarray, new: jnp.ndarray, page: jnp.ndarray,
                 off: jnp.ndarray) -> jnp.ndarray:
-    """Scatter one token per slot into the page pool.
+    """Scatter T tokens per slot into the page pool.
 
-    ``pool`` [P, page_size, ...], ``new`` [B, 1, ...] (the usual length-1
-    decode update) -> pool with ``new[b]`` written at ``(page[b], off[b])``.
-    Distinct live slots own disjoint pages, so indices collide only between
-    inert slots aimed at the null page (garbage nobody reads).
-    """
-    return pool.at[page, off].set(new[:, 0].astype(pool.dtype))
+    ``pool`` [P, page_size, ...], ``new`` [B, T, ...] (length-1 decode
+    updates and multi-token verify writes alike) -> pool with ``new[b, t]``
+    written at ``(page[b, t], off[b, t])``. Distinct live slots own disjoint
+    pages and a slot's T positions are consecutive (distinct coordinates), so
+    indices collide only between inert slots aimed at the null page (garbage
+    nobody reads)."""
+    return pool.at[page, off].set(new.astype(pool.dtype))
 
 
 def _gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
@@ -181,15 +186,21 @@ def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
 
 def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
                block_tables: jnp.ndarray | None = None):
-    """x: [B,1,D]; ``pos``: scalar index of this token, or a [B] vector of
-    per-slot positions (continuous batching). With ``block_tables`` the cache
-    is a page pool (``gqa_init_paged_cache``) addressed per slot through the
-    [B, NB] table. Returns (y, cache)."""
+    """x: [B,T,D]; ``pos``: scalar index of the first token, or a [B] vector
+    of per-slot first positions (continuous batching). T=1 is the per-token
+    decode step; T>1 is the speculative multi-token verify — token ``t``
+    ropes/writes/masks at ``pos + t``, K/V for all T positions land in the
+    cache, and each query attends exactly the prefix a sequential decode
+    would (rejected draft tail entries stay in the cache but are masked out
+    by ``pos`` not advancing past the accepted prefix — rollback is position
+    masking, not a cache edit). With ``block_tables`` the cache is a page
+    pool (``gqa_init_paged_cache``) addressed per slot through the [B, NB]
+    table. Returns (y, cache)."""
     if block_tables is not None:
         return _gqa_decode_paged(params, x, cache, pos, cfg, block_tables)
-    b = x.shape[0]
+    b, t = x.shape[:2]
     with scope("attn"):
-        positions = _pos_ids(pos, b)
+        positions = _pos_ids(pos, b) + jnp.arange(t)[None, :]     # [B, T]
         q, k, v = _qkv(params, x, cfg, positions)
         upd = lambda c, new: _cache_write(c, new, pos, axis=1)
         if "k_scale" in cache:  # int8 KV path
@@ -201,7 +212,8 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
                 "v_scale": _cache_write(cache["v_scale"], vs, pos, axis=1),
             }
             from repro.kernels.ops import sharded_serving
-            if jax.devices()[0].platform == "tpu" and not sharded_serving():
+            if t == 1 and jax.devices()[0].platform == "tpu" \
+                    and not sharded_serving():
                 # fused Pallas path: int8 cache never dequantized in HBM.
                 # Like the STB kernels, it indexes global cache shapes, so a
                 # >1-device serve mesh takes the GSPMD jnp path below instead.
@@ -221,22 +233,23 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
             vc = upd(cache["v"], v)
             cache = {"k": kc, "v": vc}
         o = decode_attention(q, kc, vc, cache_len=pos + 1)
-        y = dense(params["wo"], o.reshape(b, 1, -1), "wo")
+        y = dense(params["wo"], o.reshape(b, t, -1), "wo")
     return y, cache
 
 
 def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
                       cfg: GQAConfig, block_tables: jnp.ndarray):
-    """Paged decode: write this token's K/V into the slot's page, attend the
+    """Paged decode: write T tokens' K/V into the slot's pages, attend the
     slot's pages through the block table. Identical math to the dense path on
-    the same logical positions — entries past ``pos`` (null/stale pages) are
-    masked to exact zeros, so paged == dense bit-for-bit at temperature 0."""
-    b = x.shape[0]
+    the same logical positions — entries past each query's position
+    (null/stale pages, rejected speculative tails) are masked to exact zeros,
+    so paged == dense bit-for-bit at temperature 0."""
+    b, t = x.shape[:2]
     with scope("attn"):
-        positions = _pos_ids(pos, b)
+        positions = _pos_ids(pos, b) + jnp.arange(t)[None, :]     # [B, T]
         q, k, v = _qkv(params, x, cfg, positions)
         ps = cache["k"].shape[1]
-        page, off = _page_coords(pos, block_tables, ps)
+        page, off = _page_coords(positions, block_tables, ps)
         p1 = positions[:, 0] + 1                            # [B] cache lens
         if "k_scale" in cache:  # int8 pages (the paged_attn kernel layout)
             kq, ks = _kv_quantize(k)
@@ -248,7 +261,8 @@ def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
                 "v_scale": _page_write(cache["v_scale"], vs, page, off),
             }
             from repro.kernels.ops import sharded_serving
-            if jax.devices()[0].platform == "tpu" and not sharded_serving():
+            if t == 1 and jax.devices()[0].platform == "tpu" \
+                    and not sharded_serving():
                 # fused Pallas path: pages gathered in VMEM via scalar-
                 # prefetched block tables, never materialized in HBM. Under
                 # a >1-device serve mesh the pool is KH-sharded and the
@@ -276,7 +290,7 @@ def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
             kc = _gather_pages(cache["k"], block_tables)
             vc = _gather_pages(cache["v"], block_tables)
         o = decode_attention(q, kc, vc, cache_len=p1)
-        y = dense(params["wo"], o.reshape(b, 1, -1), "wo")
+        y = dense(params["wo"], o.reshape(b, t, -1), "wo")
     return y, cache
 
 
@@ -425,24 +439,28 @@ def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig,
     """Absorbed decode: attention runs in the latent space (DeepSeek-V2 style).
 
     ``pos`` is a scalar or a [B] vector of per-slot positions (continuous
-    batching); masking and cache writes are per-row in the vector case. With
-    ``block_tables`` the latent cache is a page pool
-    (``mla_init_paged_cache``): the new latent is scattered into the slot's
-    page and the attention reads the slot's pages gathered in logical order —
+    batching); masking and cache writes are per-row in the vector case.
+    ``x`` is [B, T, D]: T=1 is the per-token decode step, T>1 the speculative
+    multi-token verify — token ``t`` ropes/writes/masks at ``pos + t`` and
+    the per-query mask gives each query exactly the prefix a sequential
+    decode would see (the absorbed einsums already carry the query axis).
+    With ``block_tables`` the latent cache is a page pool
+    (``mla_init_paged_cache``): the new latents are scattered into the slot's
+    pages and the attention reads the slot's pages gathered in logical order —
     the same einsums on the same valid positions, so paged == dense
     bit-for-bit."""
-    b = x.shape[0]
+    b, t = x.shape[:2]
     h = cfg.n_heads
     with scope("mla"):
-        positions = _pos_ids(pos, b)
-        q_nope, q_rope = _mla_q(params, x, cfg, positions)      # [B,1,H,*]
+        positions = _pos_ids(pos, b) + jnp.arange(t)[None, :]   # [B, T]
+        q_nope, q_rope = _mla_q(params, x, cfg, positions)      # [B,T,H,*]
         ckv_t = rmsnorm(params["kv_norm"], dense(params["wkv_a"], x, "wkv_a"))
         k_rope_t = apply_rope(
             dense(params["wk_rope"], x, "wk_rope"), positions, cfg.rope_theta
         )
         if block_tables is not None:
             ps = cache["ckv"].shape[1]
-            page, off = _page_coords(pos, block_tables, ps)
+            page, off = _page_coords(positions, block_tables, ps)
             new_cache = {
                 "ckv": _page_write(cache["ckv"], ckv_t, page, off),
                 "k_rope": _page_write(cache["k_rope"], k_rope_t, page, off),
@@ -473,7 +491,7 @@ def mla_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: MLAConfig,
         p = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bohs,bsr->bohr", p.astype(x.dtype), ckv)
         o = jnp.einsum("bohr,rhd->bohd", ctx, w_uv.astype(x.dtype))
-        y = dense(params["wo"], o.reshape(b, 1, h * cfg.v_dim), "wo")
+        y = dense(params["wo"], o.reshape(b, t, h * cfg.v_dim), "wo")
     return y, new_cache
 
 

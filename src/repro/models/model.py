@@ -389,7 +389,20 @@ class Model:
     def decode_step(self, params: dict, caches: tuple, token: jnp.ndarray,
                     pos, memory: jnp.ndarray | None = None,
                     block_tables: jnp.ndarray | None = None):
-        """token: [B, 1] -> (logits [B, 1, V], new caches).
+        """token: [B, T] -> (logits [B, T, V], new caches).
+
+        T=1 is the per-token decode step. T>1 is the **multi-token verify**
+        of speculative decoding: token ``t`` is processed at position
+        ``pos + t``, K/V for all T positions are written into the caches, and
+        each query attends exactly the prefix a sequential decode would —
+        so ``logits[:, t]`` equals the logits T single-token steps would
+        produce after feeding ``token[:, :t + 1]``. A rejected draft suffix
+        needs no cache edit to roll back: the caller simply does not advance
+        ``pos`` past the accepted prefix, and the stale entries are masked
+        out of every later attention (and overwritten as decoding proceeds).
+        Only attention-family patterns support T>1 — stateful mixers
+        (mamba/xlstm) fold every fed token into their recurrent state, which
+        cannot be rolled back.
 
         ``pos`` is a scalar (static pipeline: the whole batch sits at one
         position) or a [B] vector of per-slot positions (continuous batching:
@@ -402,6 +415,12 @@ class Model:
         logical position ``i`` lives in page ``block_tables[b, i // ps]``.
         The one table is shared by every layer (each layer has its own pool).
         """
+        if token.shape[1] > 1 and not self.can_fused_prefill:
+            raise ValueError(
+                f"multi-token verify (T={token.shape[1]}) needs an "
+                f"attention-family pattern; {self.pattern} holds stateful "
+                f"mixers whose recurrent state cannot roll back a rejected "
+                f"draft suffix")
         mem = self._memory(params, memory)
         x = embed(params["embed"], token).astype(self.dtype)
         x = self._constrain(x)

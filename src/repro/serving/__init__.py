@@ -13,6 +13,12 @@ keeps the device busy across many concurrent requests instead:
   * ``paged``     — block-granular KV cache: page allocator + block tables
                     backing the batcher's ``paged=True`` mode, where a
                     request occupies only the pages its tokens need.
+
+The batcher's ``speculative=True`` mode swaps the chunk's inner loop for
+speculative rounds (packed structured-binary draft -> one dense multi-token
+verify; see repro.launch.generate) — emitted tokens stay bit-exact with the
+vanilla chunk loop at temperature 0 while accepted drafts convert expensive
+sequential dense steps into cheap packed ones.
 """
 from repro.serving.batcher import Completion, ContinuousBatcher, ServeReport
 from repro.serving.paged import (

@@ -65,9 +65,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.generate import (
+    draft_param_shardings,
     _make_sampler,
     make_chunked_decode,
+    make_speculative_chunked_decode,
     serve_shardings,
+    spec_cache_len,
 )
 from repro.models.blocks import PAGED_MIXERS
 from repro.serving.paged import BlockTableSet, PageAllocator, pages_needed
@@ -88,6 +91,10 @@ class Completion:
     arrival_s: float
     admitted_s: float
     finished_s: float
+    # speculative serving only: draft tokens this request emitted / was
+    # proposed (accepted_drafts / drafted = the request's accept rate)
+    accepted_drafts: int = 0
+    drafted: int = 0
 
     @property
     def latency_s(self) -> float:
@@ -109,6 +116,7 @@ class ServeReport:
     peak_active: int = 0
     total_admitted: int = 0
     pages: dict | None = None      # PageStats.summary() when serving paged
+    spec: dict | None = None       # accept stats when serving speculatively
 
     @property
     def generated_tokens(self) -> int:
@@ -140,6 +148,8 @@ class ServeReport:
         }
         if self.pages is not None:
             out["pages"] = dict(self.pages)
+        if self.spec is not None:
+            out["spec"] = dict(self.spec)
         return out
 
 
@@ -164,13 +174,28 @@ class ContinuousBatcher:
     tensor-parallel: params and the pooled cache are sharded (see module
     docstring) and the packed-kernel dispatch is pinned to the GSPMD jnp
     path for the life of the process.
+
+    ``speculative=True`` (with ``draft_params``, usually the packed
+    structured-binary planes of the served model) swaps the chunk's inner
+    loop for speculative rounds: the draft drafts ``draft_k`` tokens per
+    round with cheap single-token steps, one target multi-token verify
+    scores them, and the longest greedy-matching prefix (+1 corrected
+    token) is emitted — bit-exact with the vanilla chunk loop's tokens at
+    temperature 0 for any draft. The draft keeps its own cache pool
+    (mirroring the target's layout; paged mode shares the block tables, so
+    one page reservation covers both pools), every slot's allocation
+    carries ``draft_k + 1`` headroom positions for rejected-tail scribbles,
+    and per-slot accept counters roll up into ``Completion.accepted_drafts``
+    and the report's ``spec`` summary.
     """
 
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
                  max_new_tokens: int, chunk_steps: int = 8,
                  temperature: float = 0.0, prefill_mode: str = "auto",
                  seed: int = 0, paged: bool = False, page_size: int = 16,
-                 n_pages: int | None = None, mesh=None):
+                 n_pages: int | None = None, mesh=None,
+                 speculative: bool = False, draft_params=None,
+                 draft_k: int = 4):
         if model.cfg.encoder is not None or model.cfg.vision is not None:
             raise NotImplementedError(
                 "continuous batching serves decoder-only archs; "
@@ -181,6 +206,21 @@ class ContinuousBatcher:
                 f"chunk_steps must be positive (got {chunk_steps}); the "
                 f"serve loop decodes chunk_steps tokens between admit/retire "
                 f"passes")
+        if speculative:
+            if draft_params is None:
+                raise ValueError(
+                    "speculative serving needs draft_params (typically the "
+                    "pack_model_params planes of the served model)")
+            if temperature != 0.0:
+                raise ValueError(
+                    "speculative serving is greedy-only (temperature 0): "
+                    "acceptance matches draft tokens against the target's "
+                    "argmax")
+            if draft_k <= 0:
+                raise ValueError(f"draft_k must be positive (got {draft_k})")
+        elif draft_params is not None:
+            raise ValueError("draft_params without speculative=True; pass "
+                             "both or neither")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -190,6 +230,18 @@ class ContinuousBatcher:
         self.chunk_steps = chunk_steps
         self.key = jax.random.PRNGKey(seed)
         self.paged = paged
+        self.speculative = speculative
+        self.draft_params = draft_params
+        self.draft_k = draft_k
+        # every slot allocation carries draft_k + 1 positions of headroom so
+        # speculative writes past a row's last real token (rejected tails,
+        # finished-slot scribbles) never clamp back onto accepted entries
+        self.alloc_len = (spec_cache_len(prompt_len, max_new_tokens, draft_k)
+                          if speculative else self.max_len)
+        # a chunk of speculative rounds can emit up to chunk_steps tokens per
+        # slot at full acceptance (same admission-latency budget as the
+        # vanilla chunk loop; fewer host syncs per token when drafts land)
+        self.rounds_per_chunk = -(-chunk_steps // (draft_k + 1))
         # ragged prompts need per-position prefill logits to sample at the
         # true last prompt token; scan-mode prefill (forced or SSM-required)
         # returns last-padded-position logits only, so it pins prompts to
@@ -202,7 +254,10 @@ class ContinuousBatcher:
                     f"page_size must be positive (got {page_size}); pages "
                     f"hold page_size tokens of KV cache each")
             self.page_size = page_size
-            self.max_blocks = -(-self.max_len // page_size)
+            # speculative slots reserve their headroom pages too — "draft
+            # tokens borrow pages" is literal: the scribble region is part
+            # of the request's all-or-nothing reservation
+            self.max_blocks = -(-self.alloc_len // page_size)
             self.prompt_blocks = -(-prompt_len // page_size)
             # default: fully provisioned (n_slots max-length requests) +
             # the reserved null page
@@ -211,6 +266,7 @@ class ContinuousBatcher:
         self.mesh = mesh
         self._pool_shard = self._fresh_shard = None
         mesh_kw: dict = {}
+        spec_mesh_kw: dict = {}
         if mesh is not None:
             # one serve_shardings call covers params + pool (and pins the
             # packed-kernel dispatch to the GSPMD jnp path); the chunk jit
@@ -218,10 +274,18 @@ class ContinuousBatcher:
             pool_kw = (dict(n_pages=self.n_pages, page_size=page_size)
                        if paged else {})
             p_shard, self._pool_shard, repl = serve_shardings(
-                model, mesh, params, n_slots, self.max_len, **pool_kw)
+                model, mesh, params, n_slots, self.alloc_len, **pool_kw)
             self.params = jax.device_put(params, p_shard)
             mesh_kw = dict(mesh=mesh,
                            shardings=(p_shard, self._pool_shard, repl))
+            if speculative:
+                # the packed draft tree has its own structure — spec it
+                # separately and land its planes TP-sharded like the target's
+                pd_shard = draft_param_shardings(draft_params, mesh)
+                self.draft_params = jax.device_put(draft_params, pd_shard)
+                spec_mesh_kw = dict(mesh=mesh,
+                                    shardings=(p_shard, pd_shard,
+                                               self._pool_shard, repl))
 
         sample = _make_sampler(model.cfg.vocab, temperature)
 
@@ -275,6 +339,14 @@ class ContinuousBatcher:
                 prefill,
                 in_shardings=(p_shard, self._fresh_shard, repl, repl, repl),
                 out_shardings=(repl, self._fresh_shard))
+            # the draft tree has its own pytree structure (PackedLinear
+            # planes), so the target-tree in_shardings must not be prefix-
+            # broadcast onto it — jit the draft prefill with its own specs
+            self._d_prefill = (jax.jit(
+                prefill,
+                in_shardings=(pd_shard, self._fresh_shard, repl, repl, repl),
+                out_shardings=(repl, self._fresh_shard))
+                if speculative else None)
             self._write = jax.jit(
                 write_slot, donate_argnums=(0,),
                 in_shardings=(self._pool_shard, self._fresh_shard, repl),
@@ -285,11 +357,18 @@ class ContinuousBatcher:
                 out_shardings=self._pool_shard)
         else:
             self._prefill = jax.jit(prefill)
+            self._d_prefill = self._prefill   # same jit, separate trace
             self._write = jax.jit(write_slot, donate_argnums=(0,))
             self._write_pg = jax.jit(write_paged, donate_argnums=(0,))
-        self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
-                                          temperature=temperature, paged=paged,
-                                          **mesh_kw)
+        if speculative:
+            self._chunk = make_speculative_chunked_decode(
+                model, draft_k=draft_k,
+                rounds_per_chunk=self.rounds_per_chunk, paged=paged,
+                **spec_mesh_kw)
+        else:
+            self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
+                                              temperature=temperature,
+                                              paged=paged, **mesh_kw)
         # one zeroed batch-1 cache template shared by every admission:
         # _prefill doesn't donate or mutate its cache arg, and the prompt
         # prefill overwrites [0, prompt_len) while the per-slot length mask
@@ -304,16 +383,27 @@ class ContinuousBatcher:
 
     def _reserve(self, req: Request) -> list[int] | None:
         """Claim the pages ``req`` needs up front (so it can never run out
-        mid-flight); raises PoolExhausted for the run loop to re-queue."""
+        mid-flight); raises PoolExhausted for the run loop to re-queue.
+        Speculative serving reserves the draft/verify scribble headroom as
+        part of the same all-or-nothing claim."""
         if not self.paged:
             return None
-        need = pages_needed(len(np.asarray(req.prompt)), req.max_new_tokens,
-                            self.page_size)
+        headroom = self.draft_k + 1 if self.speculative else 0
+        need = pages_needed(len(np.asarray(req.prompt)),
+                            req.max_new_tokens + headroom, self.page_size)
         return self._alloc.alloc(need)
 
-    def _admit(self, req: Request, slot: int, pages, caches, tok, pos, rem,
-               key):
-        """Prefill ``req`` into ``slot``'s cache region; update slot state."""
+    def _admit(self, req: Request, slot: int, pages, caches, d_caches, tok,
+               pos, rem, key):
+        """Prefill ``req`` into ``slot``'s cache region; update slot state.
+
+        Returns ``(caches, d_caches, first_tok)``: speculative serving also
+        prefills the draft pool (same prompt, same slot/pages — paged mode
+        shares the block tables) and hands back the target-prefill-sampled
+        first token for the host to emit immediately (the vanilla chunk loop
+        emits its carried token at the first step; speculative rounds only
+        emit what they draft/verify, so admission emits it instead).
+        """
         prompt = np.asarray(req.prompt)
         tlen = int(prompt.shape[0])
         if not 0 < tlen <= self.prompt_len:
@@ -335,6 +425,11 @@ class ContinuousBatcher:
         tok0, one = self._prefill(self.params, self._fresh,
                                   jnp.asarray(padded[None, :]),
                                   jnp.int32(tlen), key)
+        d_one = None
+        if self.speculative:
+            _, d_one = self._d_prefill(self.draft_params, self._fresh,
+                                       jnp.asarray(padded[None, :]),
+                                       jnp.int32(tlen), key)
         if self.paged:
             self._tables.assign(slot, pages)
             # scatter only the pages the prompt itself occupies; the jit's
@@ -344,12 +439,22 @@ class ContinuousBatcher:
             scat[:n_prompt] = pages[:n_prompt]
             caches = self._write_pg(caches, one, jnp.int32(slot),
                                     jnp.asarray(scat))
+            if self.speculative:
+                d_caches = self._write_pg(d_caches, d_one, jnp.int32(slot),
+                                          jnp.asarray(scat))
         else:
             caches = self._write(caches, one, jnp.int32(slot))
-        tok[slot, 0] = int(np.asarray(tok0)[0, 0])
+            if self.speculative:
+                d_caches = self._write(d_caches, d_one, jnp.int32(slot))
+        first = int(np.asarray(tok0)[0, 0])
+        tok[slot, 0] = first
         pos[slot] = tlen
+        if self.speculative:
+            # the first token is emitted by admission; rounds owe the rest
+            rem[slot] = req.max_new_tokens - 1
+            return caches, d_caches, first
         rem[slot] = req.max_new_tokens
-        return caches
+        return caches, d_caches, None
 
     def run(self, requests: list[Request],
             wait_for_arrivals: bool = True) -> ServeReport:
@@ -365,19 +470,30 @@ class ContinuousBatcher:
                         for r in requests]
         sched = FIFOScheduler(requests)
         pool = SlotPool(self.n_slots)
+        d_caches = None
         if self.paged:
             self._alloc = PageAllocator(self.n_pages, self.page_size)
             self._tables = BlockTableSet(self.n_slots, self.max_blocks)
-            caches = self.model.init_cache(
-                self.n_slots, self.max_len, n_pages=self.n_pages,
-                page_size=self.page_size)
+            pool_kw = dict(n_pages=self.n_pages, page_size=self.page_size)
+            caches = self.model.init_cache(self.n_slots, self.alloc_len,
+                                           **pool_kw)
+            if self.speculative:
+                d_caches = self.model.init_cache(self.n_slots, self.alloc_len,
+                                                 **pool_kw)
         else:
-            caches = self.model.init_cache(self.n_slots, self.max_len)
+            caches = self.model.init_cache(self.n_slots, self.alloc_len)
+            if self.speculative:
+                d_caches = self.model.init_cache(self.n_slots, self.alloc_len)
         if self.mesh is not None:
             caches = jax.device_put(caches, self._pool_shard)
+            if self.speculative:
+                d_caches = jax.device_put(d_caches, self._pool_shard)
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros(self.n_slots, np.int32)
         rem = np.zeros(self.n_slots, np.int32)
+        # per-slot accept counters for the request currently in each slot
+        acc_slots = np.zeros(self.n_slots, np.int64)
+        drf_slots = np.zeros(self.n_slots, np.int64)
         # latencies are measured against the arrival times admission actually
         # honored (all zero when wait_for_arrivals=False)
         arrivals = {r.rid: r.arrival_s for r in requests}
@@ -411,8 +527,11 @@ class ContinuousBatcher:
                             f"(empty pool): {e}") from e
                     break
                 self.key, k = jax.random.split(self.key)
-                caches = self._admit(req, slot, pages, caches, tok, pos,
-                                     rem, k)
+                caches, d_caches, first = self._admit(
+                    req, slot, pages, caches, d_caches, tok, pos, rem, k)
+                if first is not None:
+                    pool.extend(slot, [first])
+                acc_slots[slot] = drf_slots[slot] = 0
                 n_prefills += 1
 
             if not pool.any_active():
@@ -429,7 +548,19 @@ class ContinuousBatcher:
             # ---- decode one chunk over all slots -------------------------
             self.key, k = jax.random.split(self.key)
             chunk_args = (jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(rem))
-            if self.paged:
+            if self.speculative:
+                spec_args = (self.params, self.draft_params, caches, d_caches,
+                             *chunk_args)
+                if self.paged:
+                    (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
+                     acc_d, drf_d) = self._chunk(
+                        *spec_args, jnp.asarray(self._tables.array), None)
+                else:
+                    (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
+                     acc_d, drf_d) = self._chunk(*spec_args, None)
+                acc_slots += np.asarray(acc_d)
+                drf_slots += np.asarray(drf_d)
+            elif self.paged:
                 toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
                     self.params, caches, *chunk_args,
                     jnp.asarray(self._tables.array), None, k)
@@ -461,14 +592,28 @@ class ContinuousBatcher:
                         arrival_s=arrivals[rec.request.rid],
                         admitted_s=rec.admitted_s,
                         finished_s=fin,
+                        accepted_drafts=int(acc_slots[slot]),
+                        drafted=int(drf_slots[slot]),
                     ))
 
+        spec_summary = None
+        if self.speculative:
+            accepted = sum(c.accepted_drafts for c in completions)
+            drafted = sum(c.drafted for c in completions)
+            spec_summary = {
+                "draft_k": self.draft_k,
+                "rounds_per_chunk": self.rounds_per_chunk,
+                "accepted_drafts": accepted,
+                "drafted": drafted,
+                "accept_rate": accepted / max(drafted, 1),
+            }
         report = ServeReport(
             completions=sorted(completions, key=lambda c: c.rid),
             wall_s=clock(), n_chunks=n_chunks, n_prefills=n_prefills,
             peak_active=pool.peak_active,
             total_admitted=pool.total_admitted,
-            pages=self._alloc.stats().summary() if self.paged else None)
+            pages=self._alloc.stats().summary() if self.paged else None,
+            spec=spec_summary)
         s = report.summary()
         paged_note = ""
         if self.paged:
@@ -477,6 +622,11 @@ class ContinuousBatcher:
                           f"{p['n_pages'] - 1} peak "
                           f"({p['peak_page_occupancy']:.0%} occupancy, "
                           f"size {p['page_size']})")
+        if self.speculative:
+            paged_note += (f", spec k={self.draft_k} accept "
+                           f"{spec_summary['accept_rate']:.0%} "
+                           f"({spec_summary['accepted_drafts']}/"
+                           f"{spec_summary['drafted']} drafts)")
         log(f"continuous: {s['n_requests']} reqs, "
             f"{s['generated_tokens']} toks in {s['wall_s']:.2f}s "
             f"({s['throughput_tok_s']:.1f} tok/s, "

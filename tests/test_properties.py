@@ -192,3 +192,106 @@ def test_scheduler_fifo_property(seed, n):
         assert r is not None and r.arrival_s <= now
         popped.append((r.arrival_s, r.rid))
     assert popped == sorted(popped)
+
+
+# --------------------------------------------------------------------------
+# Paged-KV host bookkeeping (ISSUE 5): PageAllocator never leaks, never
+# double-allocates, never hands out the null page; BlockTableSet rows always
+# keep the trailing null sentinel. Example-based coverage lives in
+# tests/test_paged.py — these drive random interleavings.
+# --------------------------------------------------------------------------
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_page_allocator_random_interleavings(data):
+    from repro.serving.paged import NULL_PAGE, PageAllocator
+    from repro.serving.slots import PoolExhausted
+
+    n_pages = data.draw(st.integers(2, 32), label="n_pages")
+    alloc = PageAllocator(n_pages, page_size=4)
+    usable = n_pages - 1
+    live: list[list[int]] = []
+    for _ in range(data.draw(st.integers(0, 40), label="n_ops")):
+        do_alloc = data.draw(st.booleans(), label="op") or not live
+        if do_alloc:
+            want = data.draw(st.integers(1, usable), label="want")
+            if want > alloc.available:
+                before = alloc.available
+                with pytest.raises(PoolExhausted):
+                    alloc.alloc(want)
+                assert alloc.available == before    # all-or-nothing
+                continue
+            pages = alloc.alloc(want)
+            assert len(pages) == want
+            assert NULL_PAGE not in pages           # null page never issued
+            flat = [p for held in live for p in held]
+            assert not set(pages) & set(flat)       # never double-allocated
+            assert all(1 <= p < n_pages for p in pages)
+            live.append(pages)
+        else:
+            idx = data.draw(st.integers(0, len(live) - 1), label="which")
+            alloc.free(live.pop(idx))
+        held = sum(len(h) for h in live)
+        # conservation: every usable page is either free or held, never both
+        assert alloc.in_use == held
+        assert alloc.available == usable - held
+        assert alloc.peak_in_use >= held
+    for pages in live:
+        alloc.free(pages)
+    assert alloc.available == usable and alloc.in_use == 0  # nothing leaked
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_page_allocator_free_rejects_foreign_and_double(data):
+    from repro.serving.paged import PageAllocator
+    from repro.serving.slots import SlotError
+
+    alloc = PageAllocator(data.draw(st.integers(3, 16)), page_size=2)
+    pages = alloc.alloc(2)
+    alloc.free(pages)
+    with pytest.raises(SlotError):
+        alloc.free([pages[0]])                      # double-free
+    alloc.alloc(1)
+    with pytest.raises(SlotError):
+        alloc.free([0])                             # the null page is foreign
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_block_table_sentinel_invariants(data):
+    from repro.serving.paged import NULL_PAGE, BlockTableSet, PageAllocator
+    from repro.serving.slots import SlotError
+
+    n_slots = data.draw(st.integers(1, 6), label="n_slots")
+    max_blocks = data.draw(st.integers(1, 8), label="max_blocks")
+    tables = BlockTableSet(n_slots, max_blocks)
+    alloc = PageAllocator(1 + n_slots * max_blocks, page_size=4)
+    held: dict[int, list[int]] = {}
+    for _ in range(data.draw(st.integers(0, 30), label="n_ops")):
+        slot = data.draw(st.integers(0, n_slots - 1), label="slot")
+        if slot in held:
+            got = tables.release(slot)
+            assert got == held.pop(slot)            # pages round-trip exactly
+            alloc.free(got)
+            assert (tables.array[slot] == NULL_PAGE).all()
+        else:
+            n = data.draw(st.integers(1, max_blocks), label="n_pages")
+            pages = alloc.alloc(n)
+            tables.assign(slot, pages)
+            held[slot] = pages
+            with pytest.raises(SlotError):          # no double-assign
+                tables.assign(slot, pages)
+        # global invariants after every op
+        assert (tables.array[:, -1] == NULL_PAGE).all()   # sentinel column
+        for s in range(n_slots):
+            row = tables.array[s]
+            if s in held:
+                np.testing.assert_array_equal(row[:len(held[s])], held[s])
+                assert (row[len(held[s]):] == NULL_PAGE).all()
+            else:
+                assert (row == NULL_PAGE).all()
+    with pytest.raises(SlotError):                  # over-long assignment
+        big = BlockTableSet(1, 2)
+        big.assign(0, [1, 2, 3])
+    with pytest.raises(SlotError):                  # release of an empty slot
+        BlockTableSet(1, 2).release(0)

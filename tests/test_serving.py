@@ -199,6 +199,103 @@ def test_slot_pool_guards():
         pool.get(0)                         # slot 0 is free again
 
 
+# ------------------------------------------------------- scheduler edges
+def test_empty_trace_returns_empty_report(served):
+    """A trace with no requests must terminate immediately, not idle-spin."""
+    model, params = served
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4)
+    report = batcher.run([], wait_for_arrivals=True)
+    assert report.completions == []
+    assert report.generated_tokens == 0
+    assert report.n_chunks == 0 and report.n_prefills == 0
+    sched = FIFOScheduler([])
+    assert len(sched) == 0 and not sched.ready(0.0)
+    assert sched.pop(0.0) is None and sched.next_arrival() is None
+
+
+def test_all_arrivals_at_t0_admit_fifo(served):
+    """Every request eligible immediately (arrival_s=0, honored against the
+    wall clock): admission is pure rid-order FIFO and all complete."""
+    model, params = served
+    reqs = [Request(r.rid, r.prompt, r.max_new_tokens, arrival_s=0.0)
+            for r in _requests([2, 2, 2, 2, 2])]
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2)
+    report = batcher.run(reqs, wait_for_arrivals=True)
+    assert len(report.completions) == 5
+    by_rid = {c.rid: c for c in report.completions}
+    admitted = [by_rid[i].admitted_s for i in range(5)]
+    assert admitted == sorted(admitted)
+
+
+def test_gen_len_one_matches_static(served):
+    """gen_len 1: the request's single token is the prefill sample; the slot
+    retires after its first retire pass without a decode emission."""
+    model, params = served
+    reqs = _requests([1, 1, 1], seed=9)
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2)
+    got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
+    for req in reqs:
+        want = _static_tokens(model, params, req)
+        assert len(got[req.rid]) == 1
+        np.testing.assert_array_equal(got[req.rid], want)
+
+
+def test_push_front_restores_head_position():
+    """A popped-then-rolled-back request outranks everything, including a
+    request whose arrival predates its own (the rollback contract: the queue
+    returns to exactly its pre-pop state)."""
+    reqs = _requests([2, 2, 2])
+    reqs = [Request(r.rid, r.prompt, r.max_new_tokens, arrival_s=t)
+            for r, t in zip(reqs, (0.0, 0.5, 1.0))]
+    sched = FIFOScheduler(reqs)
+    first = sched.pop(2.0)
+    assert first.rid == 0
+    sched.push_front(first)
+    assert sched.next_arrival() == 0.0
+    assert [sched.pop(2.0).rid for _ in range(3)] == [0, 1, 2]
+
+
+def test_paged_requeue_preserves_fifo_order(served):
+    """The PoolExhausted -> push_front path (exercised directly, not via the
+    paged batcher test's incidental traffic): with a page pool that fits one
+    request, later arrivals must never overtake the re-queued head."""
+    model, params = served
+    reqs = _requests([4, 4, 4, 4])
+    need = -(-(PROMPT_LEN + 4) // 4)             # pages per request @ size 4
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2, paged=True, page_size=4,
+                                n_pages=1 + need)    # exactly one request
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    assert len(report.completions) == 4
+    by_rid = {c.rid: c for c in report.completions}
+    admitted = [by_rid[i].admitted_s for i in range(4)]
+    assert admitted == sorted(admitted)          # re-queue never reordered
+    assert report.peak_active == 1               # the pool really was the cap
+    for req in reqs:                             # and tokens still exact
+        np.testing.assert_array_equal(
+            by_rid[req.rid].tokens, _static_tokens(model, params, req))
+
+
+def test_unservable_request_raises_with_empty_pool(served):
+    """A request that can never fit (pool smaller than its reservation with
+    nothing in flight) raises the typed PoolExhausted instead of spinning."""
+    from repro.serving import PoolExhausted
+
+    model, params = served
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=4,
+                                chunk_steps=2, paged=True, page_size=4,
+                                n_pages=2)           # 1 usable page
+    with pytest.raises(PoolExhausted, match="never"):
+        batcher.run(_requests([4]), wait_for_arrivals=False)
+
+
 # --------------------------------------------------------- regression gate
 def test_check_regression_gate(tmp_path):
     """>25% tok/s drop or any match=False fails; small wobble passes."""

@@ -140,6 +140,70 @@ def test_continuous_sharded_matches_unsharded(arch, kind, paged, tp):
                     f"tp={tp} request {rid}")
 
 
+@needs_mesh
+def test_static_speculative_sharded_matches_unsharded(arch):
+    """The static speculative pipeline under a mesh (serve --speculative
+    --tp N without --continuous): both trees spec'd independently, caches
+    placed under the serve-pool shardings, tokens bit-exact with the
+    unsharded static dense pipeline."""
+    from repro.launch.generate import (
+        draft_param_shardings,
+        make_speculative_decode,
+        serve_shardings,
+        spec_cache_len,
+    )
+
+    name, model, dense_params, packed_params = arch
+    prompts = _prompts(model.cfg.vocab, seed=8)
+    want = _static_tokens(model, dense_params, prompts)
+    mesh = make_host_mesh(model=2)
+    n = prompts.shape[0]
+    max_len = spec_cache_len(PROMPT_LEN, GEN_LEN, 3)
+    pt, c_shard, repl = serve_shardings(model, mesh, dense_params, n, max_len)
+    pd = draft_param_shardings(packed_params, mesh)
+    pipe = make_speculative_decode(
+        model, prompt_len=PROMPT_LEN, gen_len=GEN_LEN, draft_k=3, mesh=mesh,
+        shardings=(pt, pd, c_shard, repl))
+    toks, stats = pipe.run(
+        jax.device_put(dense_params, pt), jax.device_put(packed_params, pd),
+        jax.device_put(model.init_cache(n, pipe.max_len), c_shard),
+        jax.device_put(model.init_cache(n, pipe.max_len), c_shard),
+        jnp.asarray(prompts))
+    np.testing.assert_array_equal(np.asarray(toks), want,
+                                  err_msg=f"{name} static spec tp=2")
+    assert stats["drafted"] > 0
+
+
+@needs_mesh
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["continuous", "paged"])
+def test_speculative_sharded_matches_unsharded_vanilla(arch, paged):
+    """Sharded self-speculative serve (packed draft TP'd like the target,
+    dual KV pools sharded over heads) emits the unsharded *vanilla* loop's
+    tokens — composing the PR-4 sharding matrix with the speculative chunk."""
+    name, model, dense_params, packed_params = arch
+    prompts = _prompts(model.cfg.vocab, seed=7)
+    want = _continuous_tokens(model, dense_params, prompts, paged=paged)
+    mesh = make_host_mesh(model=2)
+    reqs = [Request(rid=i, prompt=prompts[i][:PROMPT_LEN - (i % 2) * 2],
+                    max_new_tokens=GEN_LEN - (i % 2) * 4)
+            for i in range(prompts.shape[0])]
+    batcher = ContinuousBatcher(
+        model, dense_params, n_slots=2, prompt_len=PROMPT_LEN,
+        max_new_tokens=GEN_LEN, chunk_steps=2, paged=paged,
+        page_size=PAGE_SIZE, mesh=mesh, speculative=True,
+        draft_params=packed_params, draft_k=3)
+    report = batcher.run(reqs, wait_for_arrivals=False)
+    got = report.tokens_by_rid()
+    assert set(got) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"{name}/{'paged' if paged else 'dense-pool'} spec "
+                    f"tp=2 request {rid}")
+    assert report.spec["drafted"] > 0
+
+
 # ----------------------------------------------------- sharding is real
 @needs_mesh
 def test_packed_planes_are_tp_sliced(arch):

@@ -1,0 +1,295 @@
+"""Speculative decoding: bit-exact equivalence with vanilla dense greedy
+decode across {static, continuous, paged} x {GQA, MLA} x {fp, kv_quant int8},
+accept-rate semantics, rollback under adversarial drafts, and the
+stateful-mixer guard.
+
+The load-bearing claim (ISSUE 5 acceptance): whatever the draft proposes,
+the emitted tokens equal plain target-only greedy decode — the draft only
+changes how many rounds it takes. Every equivalence test therefore compares
+against ``make_generate`` on the target params alone.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.generate import (
+    make_generate,
+    make_speculative_decode,
+    spec_cache_len,
+)
+from repro.models.model import build_model
+from repro.serving import ContinuousBatcher, Request
+
+PROMPT_LEN = 8
+GEN_LENS = (5, 2, 4, 1)       # mixed budgets incl. the gen-1 edge
+MAX_NEW = 6
+DRAFT_K = 3
+PAGE_SIZE = 4
+
+CFGS = {
+    "gqa": get_smoke_config("granite-3-8b"),
+    "mla": get_smoke_config("minicpm3-4b"),
+}
+
+
+@pytest.fixture(scope="module", params=["gqa", "mla"])
+def arch(request):
+    """(name, {kv: model}, params) — one param tree serves both cache
+    layouts (kv_quant only changes the cache, not the weights)."""
+    cfg = CFGS[request.param]
+    models = {
+        "fp": build_model(cfg, dtype=jnp.float32, remat=False),
+        "int8": build_model(cfg, dtype=jnp.float32, remat=False,
+                            kv_quant=True),
+    }
+    params = models["fp"].init(jax.random.PRNGKey(0))
+    return request.param, models, params
+
+
+def _perturbed(params, scale=0.01, seed=1):
+    """A draft that is close-but-not-equal to the target: nontrivial accept
+    rate, guaranteed divergences to roll back."""
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda a: a + scale * jnp.asarray(rng.normal(size=a.shape), a.dtype),
+        params)
+
+
+def _adversarial(params):
+    """A draft whose argmax is systematically wrong (rolled unembedding):
+    every round must reject at position 0 and emit only corrected tokens."""
+    adv = dict(params)
+    adv["lm_head"] = jax.tree.map(lambda a: jnp.roll(a, 7, axis=0),
+                                  params["lm_head"])
+    return adv
+
+
+def _prompts(vocab, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, (n, PROMPT_LEN), dtype=np.int32)
+
+
+def _vanilla_tokens(model, params, prompts, gen_len):
+    pipe = make_generate(model, prompt_len=PROMPT_LEN, gen_len=gen_len)
+    caches = model.init_cache(prompts.shape[0], PROMPT_LEN + gen_len)
+    return np.asarray(pipe.run(params, caches, jnp.asarray(prompts)))
+
+
+def _spec_static(model, t_params, d_params, prompts, gen_len,
+                 draft_k=DRAFT_K):
+    pipe = make_speculative_decode(model, prompt_len=PROMPT_LEN,
+                                   gen_len=gen_len, draft_k=draft_k)
+    b = prompts.shape[0]
+    return pipe.run(t_params, d_params, model.init_cache(b, pipe.max_len),
+                    model.init_cache(b, pipe.max_len), jnp.asarray(prompts))
+
+
+def _spec_continuous(model, t_params, d_params, reqs, paged=False,
+                     draft_k=DRAFT_K, **extra):
+    batcher = ContinuousBatcher(
+        model, t_params, n_slots=2, prompt_len=PROMPT_LEN,
+        max_new_tokens=MAX_NEW, chunk_steps=4, paged=paged,
+        page_size=PAGE_SIZE, speculative=True, draft_params=d_params,
+        draft_k=draft_k, **extra)
+    return batcher.run(reqs, wait_for_arrivals=False)
+
+
+# ------------------------------------------------------- equivalence matrix
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+def test_static_spec_matches_vanilla(arch, kv):
+    """{static} x {GQA, MLA} x {fp, int8}: spec == vanilla greedy, bit-exact,
+    with a perturbed draft (real accept/reject traffic). int8 quantizes the
+    GQA K/V cache; MLA's latent cache has no int8 layout, so its int8 cell
+    degenerates to fp — kept for matrix literalness."""
+    name, models, params = arch
+    model = models[kv]
+    prompts = _prompts(model.cfg.vocab, 3)
+    want = _vanilla_tokens(model, params, prompts, MAX_NEW)
+    toks, stats = _spec_static(model, params, _perturbed(params), prompts,
+                               MAX_NEW)
+    np.testing.assert_array_equal(np.asarray(toks), want,
+                                  err_msg=f"{name}/{kv} static spec")
+    assert 0.0 <= stats["accept_rate"] <= 1.0
+
+
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+@pytest.mark.parametrize("paged", [False, True], ids=["continuous", "paged"])
+def test_chunk_loop_spec_matches_vanilla(arch, kv, paged):
+    """{continuous, paged} x {GQA, MLA} x {fp, int8}: the speculative chunk
+    loop emits, per request, exactly the static vanilla pipeline's tokens —
+    mixed gen lengths, slot reuse, and the gen-1 edge included."""
+    name, models, params = arch
+    model = models[kv]
+    prompts = _prompts(model.cfg.vocab, len(GEN_LENS), seed=2)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
+            for i, g in enumerate(GEN_LENS)]
+    report = _spec_continuous(model, params, _perturbed(params), reqs,
+                              paged=paged)
+    got = report.tokens_by_rid()
+    for req in reqs:
+        want = _vanilla_tokens(model, params,
+                               np.asarray(req.prompt)[None, :],
+                               req.max_new_tokens)[0]
+        np.testing.assert_array_equal(
+            got[req.rid], want,
+            err_msg=f"{name}/{kv}/{'paged' if paged else 'dense'} "
+                    f"request {req.rid} (gen {req.max_new_tokens})")
+
+
+# -------------------------------------------------------- accept semantics
+def test_accept_rate_one_when_draft_is_target(arch):
+    """A draft identical to the target must have every usable draft token
+    accepted — accept rate exactly 1.0, static and chunked."""
+    name, models, params = arch
+    model = models["fp"]
+    prompts = _prompts(model.cfg.vocab, 2, seed=3)
+    want = _vanilla_tokens(model, params, prompts, MAX_NEW)
+    toks, stats = _spec_static(model, params, params, prompts, MAX_NEW)
+    np.testing.assert_array_equal(np.asarray(toks), want)
+    assert stats["accept_rate"] == 1.0
+    assert stats["accepted_drafts"] == stats["drafted"] > 0
+
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
+            for i, g in enumerate((MAX_NEW, 2))]
+    report = _spec_continuous(model, params, params, reqs)
+    assert report.spec["accept_rate"] == 1.0
+    assert report.spec["accepted_drafts"] == report.spec["drafted"] > 0
+
+
+def test_adversarial_draft_rolls_back_correctly(arch):
+    """A draft that is always wrong degenerates to one corrected token per
+    round (accept rate 0) — and the emitted tokens are STILL bit-exact:
+    rejected K/V in both caches is masked/overwritten, never attended."""
+    name, models, params = arch
+    model = models["fp"]
+    adv = _adversarial(params)
+    prompts = _prompts(model.cfg.vocab, 2, seed=4)
+    want = _vanilla_tokens(model, params, prompts, MAX_NEW)
+    toks, stats = _spec_static(model, params, adv, prompts, MAX_NEW)
+    np.testing.assert_array_equal(np.asarray(toks), want,
+                                  err_msg=f"{name} adversarial static")
+    assert stats["accept_rate"] == 0.0
+    # every round emits exactly 1 corrected token per row (rows run in
+    # lockstep inside the one while_loop)
+    assert stats["rounds"] == MAX_NEW - 1
+
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=MAX_NEW)
+            for i in range(2)]
+    report = _spec_continuous(model, params, adv, reqs, paged=True)
+    got = report.tokens_by_rid()
+    for i in range(2):
+        np.testing.assert_array_equal(
+            got[i], want[i], err_msg=f"{name} adversarial paged req {i}")
+    assert report.spec["accept_rate"] == 0.0
+
+
+def test_spec_ragged_prompts_paged(arch):
+    """Ragged prompts through the speculative paged loop: the first token is
+    sampled at the true last prompt position and the draft pool prefills the
+    same ragged region (block tables shared)."""
+    name, models, params = arch
+    model = models["fp"]
+    full = _prompts(model.cfg.vocab, 3, seed=5)
+    lens = (PROMPT_LEN, PROMPT_LEN - 2, PROMPT_LEN - 5)
+    reqs = [Request(rid=i, prompt=full[i][:lens[i]], max_new_tokens=4)
+            for i in range(3)]
+    report = _spec_continuous(model, params, _perturbed(params), reqs,
+                              paged=True)
+    got = report.tokens_by_rid()
+    for req in reqs:
+        pl = len(req.prompt)
+        pipe = make_generate(model, prompt_len=pl, gen_len=4)
+        caches = model.init_cache(1, pl + 4)
+        want = np.asarray(pipe.run(params, caches,
+                                   jnp.asarray(req.prompt[None, :])))[0]
+        np.testing.assert_array_equal(
+            got[req.rid], want,
+            err_msg=f"{name} ragged prompt len {pl} request {req.rid}")
+
+
+# ------------------------------------------------------- counters + guards
+def test_per_slot_accept_counters_roll_up():
+    model = build_model(CFGS["gqa"], dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(model.cfg.vocab, 4, seed=6)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
+            for i, g in enumerate((MAX_NEW, 2, 4, 3))]
+    report = _spec_continuous(model, params, _perturbed(params), reqs)
+    for c in report.completions:
+        assert 0 <= c.accepted_drafts <= c.drafted
+        # a request never drafts more than it could use per round
+        assert c.drafted <= DRAFT_K * max(report.n_chunks, 1) * \
+            report.spec["rounds_per_chunk"]
+    assert report.spec["accepted_drafts"] == \
+        sum(c.accepted_drafts for c in report.completions)
+    assert report.spec["drafted"] == \
+        sum(c.drafted for c in report.completions)
+    assert report.spec["draft_k"] == DRAFT_K
+
+
+def test_multi_token_verify_needs_attention_pattern():
+    """Stateful mixers can't roll back: the model-level guard and both
+    builders refuse SSM patterns up front."""
+    cfg = get_smoke_config("xlstm-350m")
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention-family"):
+        make_speculative_decode(model, prompt_len=PROMPT_LEN, gen_len=4,
+                                draft_k=2)
+    with pytest.raises(ValueError, match="stateful"):
+        caches = model.init_cache(1, PROMPT_LEN)
+        model.decode_step(params, caches,
+                          jnp.zeros((1, 2), jnp.int32), 0)
+
+
+def test_speculative_validation_errors():
+    model = build_model(CFGS["gqa"], dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4)
+    with pytest.raises(ValueError, match="draft_params"):
+        ContinuousBatcher(model, params, speculative=True, **kw)
+    with pytest.raises(ValueError, match="greedy-only"):
+        ContinuousBatcher(model, params, speculative=True,
+                          draft_params=params, temperature=0.7, **kw)
+    with pytest.raises(ValueError, match="draft_k"):
+        ContinuousBatcher(model, params, speculative=True,
+                          draft_params=params, draft_k=0, **kw)
+    with pytest.raises(ValueError, match="speculative"):
+        ContinuousBatcher(model, params, draft_params=params, **kw)
+    with pytest.raises(ValueError, match="draft_k must be positive"):
+        make_speculative_decode(model, prompt_len=PROMPT_LEN, gen_len=4,
+                                draft_k=0)
+
+
+def test_serve_cli_flag_validation():
+    from repro.launch.serve import serve
+
+    with pytest.raises(ValueError, match="no-quantize"):
+        serve("granite-3-8b", speculative=True, quantize=False)
+    with pytest.raises(ValueError, match="packed"):
+        serve("granite-3-8b", speculative=True, packed=True)
+    with pytest.raises(ValueError, match="legacy-loop"):
+        serve("granite-3-8b", speculative=True, legacy_loop=True)
+    with pytest.raises(ValueError, match="greedy-only"):
+        serve("granite-3-8b", speculative=True, temperature=0.5)
+
+
+def test_spec_cache_len_headroom():
+    """The allocation contract: draft_k + 1 positions past prompt + gen, so
+    the widest write window starting at the final frozen position fits."""
+    assert spec_cache_len(8, 16, 4) == 8 + 16 + 5
+    batcher_len = spec_cache_len(PROMPT_LEN, MAX_NEW, DRAFT_K)
+    model = build_model(CFGS["gqa"], dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(model, params, n_slots=2, prompt_len=PROMPT_LEN,
+                          max_new_tokens=MAX_NEW, speculative=True,
+                          draft_params=params, draft_k=DRAFT_K)
+    assert b.alloc_len == batcher_len
+    # paged: the headroom pages are part of the all-or-nothing reservation
+    bp = ContinuousBatcher(model, params, n_slots=2, prompt_len=PROMPT_LEN,
+                           max_new_tokens=MAX_NEW, speculative=True,
+                           draft_params=params, draft_k=DRAFT_K, paged=True,
+                           page_size=PAGE_SIZE)
+    assert bp.max_blocks == -(-batcher_len // PAGE_SIZE)
