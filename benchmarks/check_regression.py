@@ -2,10 +2,14 @@
 
 Compares a freshly measured benchmark json (``BENCH_decode.json`` /
 ``BENCH_serving.json``) against the committed baseline and exits non-zero —
-failing the CI job — when either:
+failing the CI job — when any of:
 
-  * any throughput leaf (a key named ``tok_s`` or ``throughput_tok_s``)
-    drops more than ``--threshold`` (default 25%) below the baseline, or
+  * any throughput leaf (a key named ``tok_s``, ``throughput_tok_s``, or
+    ``goodput_tok_s``) drops more than ``--threshold`` (default 25%) below
+    the baseline,
+  * any latency leaf (a key named ``p95_ttft_s``) rises more than
+    ``--threshold`` above the baseline — latency regresses upward, so the
+    rule mirrors the throughput rule with the sign flipped, or
   * any correctness flag (a bool leaf whose key contains ``match``) is false
     in the fresh run — packed-vs-dense or continuous-vs-static output
     divergence is never tolerable, whatever the baseline says.
@@ -25,7 +29,9 @@ import json
 import os
 import sys
 
-THROUGHPUT_KEYS = ("tok_s", "throughput_tok_s")
+THROUGHPUT_KEYS = ("tok_s", "throughput_tok_s", "goodput_tok_s")
+# higher-is-worse leaves: gated against RISING past the baseline instead
+LATENCY_KEYS = ("p95_ttft_s",)
 
 
 def _walk(tree, path=()):
@@ -47,6 +53,7 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list, list]:
     # otherwise renaming a cell (or dropping a match flag) blinds the gate
     for path, value in base_leaves.items():
         gated = path and (path[-1] in THROUGHPUT_KEYS
+                          or path[-1] in LATENCY_KEYS
                           or ("match" in path[-1] and isinstance(value, bool)))
         if gated and path not in fresh_leaves:
             failures.append(
@@ -66,6 +73,19 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list, list]:
             else:
                 notes.append(
                     f"OK   {name}: {value:.1f} vs {base:.1f} "
+                    f"({(value / base - 1) * 100:+.0f}%)")
+        elif path and path[-1] in LATENCY_KEYS:
+            base = base_leaves.get(path)
+            if base is None or base == 0:
+                notes.append(f"NEW  {name}: {value:.3f}s (no usable baseline)")
+            elif value > base * (1.0 + threshold):
+                failures.append(
+                    f"LAT  {name}: {value:.3f}s vs baseline "
+                    f"{base:.3f}s (+{(value / base - 1) * 100:.0f}%, "
+                    f"threshold {threshold * 100:.0f}%)")
+            else:
+                notes.append(
+                    f"OK   {name}: {value:.3f}s vs {base:.3f}s "
                     f"({(value / base - 1) * 100:+.0f}%)")
         elif path and "match" in path[-1] and isinstance(value, bool):
             if value:

@@ -1,0 +1,160 @@
+"""Oversubscribed serving under bursty load: preemption + tiered scheduling.
+
+Replays one 2x-oversubscribed bursty trace (bursts of ``BURST_SIZE``
+requests against ``N_SLOTS`` slots, a page pool provisioned for half the
+slots' worth of max-length requests) through two overload policies and
+writes ``BENCH_preempt.json`` at the repo root. Burst tiers alternate —
+burst 0 is all best-effort, burst 1 all interactive, ... — with a burst
+gap shorter than a best-effort request's service time, so every
+interactive burst lands while best-effort work holds the pool and
+preemption is structural, not a timing accident:
+
+  * ``fifo`` — the pre-preemption behaviour: arrival-ordered admission,
+    failed admissions re-queued until in-flight work drains pages;
+  * ``tiered_preempt`` — TieredScheduler + page-level preemption: an
+    interactive arrival evicts a best-effort victim (resume-by-reprefill)
+    instead of queueing behind it, and interactive requests carry start
+    deadlines.
+
+A fully-provisioned dense FIFO run on the same trace is the token
+reference: every *served* request in both oversubscribed cells must emit
+bit-exact tokens (``fifo_matches_reference`` / ``preempt_matches_reference``
+— the CI gate fails on a mismatch, which is the headline correctness
+criterion for resume-by-reprefill). Both cells completing the trace at all
+is itself the termination criterion: an unhandled PoolExhausted would
+abort the bench.
+
+Gated metrics (benchmarks/check_regression.py): every ``goodput_tok_s``
+leaf (tokens of served requests per second — the overload-policy
+scoreboard), and ``interactive/p95_ttft_s`` — p95 time-to-first-token of
+the interactive tier under ``tiered_preempt``, the latency preemption
+exists to protect. Latency leaves gate on *rising* past the baseline. The
+bench takes an explicit ``seed`` so CI replays the identical trace, and
+keeps the best of ``REPEAT`` replays per cell (wall-clock minimum, least
+sensitive to host contention on shared runners).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from benchmarks.serving_bench import (
+    CHUNK_STEPS,
+    GEN_LENS,
+    PROMPT_LEN,
+    SERVE_CFG,
+)
+from repro.models.model import build_model
+from repro.serving import ContinuousBatcher, bursty_trace
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_JSON = os.path.join(ROOT, "BENCH_preempt.json")
+
+N_REQUESTS = 24
+N_SLOTS = 4
+BURST_SIZE = 2 * N_SLOTS     # every burst is 2x the slot pool
+BURST_GAP_S = 0.06           # shorter than a best-effort request's service
+                             # time, so interactive bursts land mid-decode
+PAGE_SIZE = 8
+OVERSUB = 2                  # page pool = full provisioning / OVERSUB
+DEADLINE_SLACK_S = 30.0      # interactive start deadline (generous: the
+                             # shed path is exercised by tests; the bench
+                             # measures latency, not give-ups)
+AGE_AFTER_S = 1.0            # best-effort aging window under tiered
+REPEAT = 3
+
+
+def preempt_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
+    model = build_model(SERVE_CFG, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = bursty_trace(
+        N_REQUESTS, prompt_len=PROMPT_LEN, vocab=SERVE_CFG.vocab,
+        burst_size=BURST_SIZE, burst_gap_s=BURST_GAP_S, gen_lens=GEN_LENS,
+        seed=seed)
+    # alternate whole-burst tiers: interactive bursts (odd) always arrive
+    # on top of a pool held by best-effort bursts (even)
+    trace = [replace(r, priority=(r.rid // BURST_SIZE) % 2,
+                     deadline_s=(r.arrival_s + DEADLINE_SLACK_S
+                                 if (r.rid // BURST_SIZE) % 2 else None))
+             for r in trace]
+
+    kw = dict(n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+              max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS)
+    full_blocks = -(-(PROMPT_LEN + max(GEN_LENS)) // PAGE_SIZE)
+    n_pages = 1 + (N_SLOTS * full_blocks) // OVERSUB
+
+    # token reference: fully provisioned dense FIFO on the same trace
+    ref_b = ContinuousBatcher(model, params, **kw)
+    ref_toks = ref_b.run(trace, wait_for_arrivals=False).tokens_by_rid()
+
+    over = dict(paged=True, page_size=PAGE_SIZE, n_pages=n_pages)
+    fifo_b = ContinuousBatcher(model, params, **kw, **over)
+    tier_b = ContinuousBatcher(model, params, **kw, **over,
+                               scheduler="tiered", age_after_s=AGE_AFTER_S,
+                               preemption=True)
+    fifo_b.run(trace, wait_for_arrivals=False)       # warm all compiles
+    tier_b.run(trace, wait_for_arrivals=False)
+    # best-of-REPEAT replays per cell: min wall time filters host contention
+    fifo = min((fifo_b.run(trace) for _ in range(REPEAT)),
+               key=lambda r: r.wall_s)
+    tier = min((tier_b.run(trace) for _ in range(REPEAT)),
+               key=lambda r: r.wall_s)
+
+    def matches(rep) -> bool:
+        # every SERVED request must be bit-exact with its un-preempted /
+        # un-requeued reference run; shed requests have no finished stream
+        return all(np.array_equal(c.tokens, ref_toks[c.rid])
+                   for c in rep.ok_completions)
+
+    for name, rep in (("fifo", fifo), ("tiered_preempt", tier)):
+        if len(rep.completions) != N_REQUESTS:
+            raise RuntimeError(
+                f"{name}: {len(rep.completions)} completions for "
+                f"{N_REQUESTS} requests — the oversubscribed trace did not "
+                f"terminate cleanly")
+
+    results = {
+        "config": {
+            "arch": SERVE_CFG.arch_id, "n_requests": N_REQUESTS,
+            "prompt_len": PROMPT_LEN, "gen_lens": list(GEN_LENS),
+            "n_slots": N_SLOTS, "chunk_steps": CHUNK_STEPS,
+            "burst_size": BURST_SIZE, "burst_gap_s": BURST_GAP_S,
+            "page_size": PAGE_SIZE, "n_pages": n_pages,
+            "oversubscription": OVERSUB, "tiering": "by_burst_parity",
+            "deadline_slack_s": DEADLINE_SLACK_S,
+            "age_after_s": AGE_AFTER_S, "seed": seed,
+            "backend": jax.devices()[0].platform,
+        },
+        "fifo": fifo.summary(),
+        "tiered_preempt": tier.summary(),
+        "interactive": {
+            # the latency preemption exists to protect, gated in CI; the
+            # fifo cell's figure rides along unGATED for the comparison
+            "p95_ttft_s": tier.ttft_percentile(95, priority=1),
+            "fifo_p95_ttft": fifo.ttft_percentile(95, priority=1),
+        },
+        "fifo_matches_reference": matches(fifo),
+        "preempt_matches_reference": matches(tier),
+    }
+
+    for name, rep in (("fifo", fifo), ("tiered_preempt", tier)):
+        rows.add(f"preempt/{name}", rep.wall_s * 1e6,
+                 f"goodput={rep.goodput_tok_s:.1f} tok/s "
+                 f"requeues={rep.n_requeues} preempt={rep.n_preemptions} "
+                 f"shed={rep.n_shed}")
+    rows.add("preempt/interactive_p95_ttft", 0,
+             f"tiered={results['interactive']['p95_ttft_s']:.3f}s "
+             f"fifo={results['interactive']['fifo_p95_ttft']:.3f}s")
+    rows.add("preempt/preempt_matches_reference", 0,
+             str(results["preempt_matches_reference"]))
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    rows.add("preempt/json", 0, out_json)
+    return results

@@ -7,6 +7,7 @@
   PYTHONPATH=src python -m benchmarks.run --only serving  # BENCH_serving.json
   PYTHONPATH=src python -m benchmarks.run --only paged    # BENCH_paged.json
   PYTHONPATH=src python -m benchmarks.run --only spec     # BENCH_spec.json
+  PYTHONPATH=src python -m benchmarks.run --only preempt  # BENCH_preempt.json
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m benchmarks.run --only sharded  # BENCH_sharded.json
 
@@ -38,7 +39,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode serving paged sharded spec")
+                         "decode serving paged sharded spec preempt")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed for the decode/serving/paged/sharded "
                          "benches (explicit so the CI bench-gate replays the "
@@ -96,6 +97,9 @@ def main(argv=None) -> int:
     if want("spec"):
         from benchmarks import spec_bench
         spec_bench.spec_bench(rows, seed=args.seed)
+    if want("preempt"):
+        from benchmarks import preempt_bench
+        preempt_bench.preempt_bench(rows, seed=args.seed)
     return 0
 
 

@@ -480,6 +480,13 @@ def make_speculative_chunked_decode(model, *, draft_k: int,
     only — speculation at temperature > 0 would need distribution-level
     acceptance sampling, not argmax matching.
 
+    The mid-trace slot revocation contract of :func:`make_chunked_decode`
+    holds here too, covering both pools at once: zeroing a slot's
+    ``remaining`` freezes its draft and target rows alike (rounds for
+    rem==0 rows scribble only into the shared headroom/null-page region),
+    so the batcher's preemption path needs no speculative special-casing
+    beyond releasing the shared page reservation.
+
     ``mesh`` mirrors :func:`make_chunked_decode`: params TP'd per tree,
     pools under the serve-pool specs, per-slot vectors replicated (pass the
     ``(target, draft, cache, replicated)`` tuple as ``shardings=`` to skip
@@ -588,6 +595,17 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
     and every decode step addresses the paged caches through them (the
     tables are constant within a chunk — admissions and retirements only
     remap pages at chunk boundaries, on the host).
+
+    **Mid-trace slot revocation contract**: because a ``remaining == 0``
+    row is fully inert — its position freezes, its emissions are marked
+    invalid, and its writes land in the null page (paged) or are confined
+    to its own soon-overwritten row (dense) — the host may *revoke* any
+    slot between chunks by simply zeroing its ``remaining`` entry, with no
+    device-side reset. This is what makes page-level preemption safe: the
+    batcher evicts a victim by releasing its pages and zeroing ``rem``;
+    the orphaned row computes garbage for at most the next chunk, touches
+    nothing another slot can observe, and the next admission's prefill
+    overwrites it.
 
     With ``mesh`` (sharded continuous serve) the chunk is jitted with
     explicit shardings: params TP over 'model' (``params`` — the served

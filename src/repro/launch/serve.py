@@ -38,6 +38,19 @@ prefix (+1 corrected token) is emitted — tokens are bit-exact with dense
 greedy decode at temperature 0, on the static pipeline and inside the
 continuous/paged chunk loop alike (see README "Speculative decoding").
 
+``--scheduler tiered --priority-tiers N`` (with ``--continuous``) admits
+through the priority/deadline-aware TieredScheduler: requests cycle over N
+priority tiers (higher admits first, FIFO within a tier, ``--age-after``
+chunks of waiting buys a queued tier head one effective tier so best-effort
+traffic is never starved). ``--deadline D`` gives every above-minimum tier
+a start deadline D decode-chunks out — requests still queued past it are
+shed with typed completions, never served late. ``--preemption`` lets a
+higher-priority admission evict a lower-priority victim when slots or
+pages run out; the victim resumes later by re-prefill, bit-exact at
+temperature 0. ``--max-requeues`` bounds failed-admission retries before a
+request is shed. Overload runs use the deterministic chunk clock, so the
+same flags replay the same schedule.
+
 ``--tp N`` / ``--mesh DxM`` serve tensor-parallel over a device mesh: params
 are device_put under the weight-stationary TP specs (packed bit-planes shard
 their N dim over 'model' — each device streams only its slice of the
@@ -106,10 +119,27 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           page_size: int = 16, n_pages: int | None = None,
           mesh=None, tp: int | None = None,
           mesh_shape: str | None = None, speculative: bool = False,
-          draft_k: int = 4) -> dict:
+          draft_k: int = 4, scheduler: str = "fifo",
+          priority_tiers: int | None = None, deadline: float | None = None,
+          preemption: bool = False, max_requeues: int | None = None,
+          age_after: float | None = None) -> dict:
     if continuous and legacy_loop:
         raise ValueError("--continuous and --legacy-loop are exclusive "
                          "serve loops")
+    oversub = (scheduler != "fifo" or priority_tiers is not None
+               or deadline is not None or preemption
+               or max_requeues is not None or age_after is not None)
+    if oversub and not continuous:
+        raise ValueError("--scheduler/--priority-tiers/--deadline/"
+                         "--preemption/--max-requeues/--age-after are "
+                         "continuous-batching knobs; add --continuous")
+    if (priority_tiers is not None or deadline is not None
+            or age_after is not None) and scheduler != "tiered":
+        raise ValueError("--priority-tiers/--deadline/--age-after need the "
+                         "tier-aware queue; add --scheduler tiered")
+    if priority_tiers is not None and priority_tiers <= 0:
+        raise ValueError(f"--priority-tiers must be positive "
+                         f"(got {priority_tiers})")
     if speculative:
         if not quantize:
             raise ValueError("--speculative drafts with the packed PTQ "
@@ -197,9 +227,15 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         from repro.serving import ContinuousBatcher, Request
 
         lens = tuple(gen_lens) if gen_lens else (gen_len,)
+        tiers = priority_tiers or 1
         requests = [
             Request(rid=i, prompt=prompts[i],
-                    max_new_tokens=lens[i % len(lens)])
+                    max_new_tokens=lens[i % len(lens)],
+                    priority=i % tiers,
+                    # above-minimum tiers carry start deadlines, measured in
+                    # decode chunks on the deterministic chunk clock
+                    deadline_s=(deadline if deadline is not None
+                                and i % tiers > 0 else None))
             for i in range(n_requests)
         ]
         batcher = ContinuousBatcher(
@@ -208,8 +244,16 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
             temperature=temperature, prefill_mode=prefill_mode, seed=seed,
             paged=paged, page_size=page_size, n_pages=n_pages, mesh=mesh,
             speculative=speculative, draft_params=draft_params,
-            draft_k=draft_k)
-        report = batcher.run(requests, wait_for_arrivals=False)
+            draft_k=draft_k, scheduler=scheduler, age_after_s=age_after,
+            preemption=preemption, max_requeues=max_requeues)
+        # wait_for_arrivals=False drops deadlines with the arrival times
+        # they anchor to; overload runs keep them (all arrivals are 0, so
+        # every request is still eligible immediately) and replay on the
+        # deterministic chunk clock instead of wall time
+        if oversub:
+            report = batcher.run(requests, clock="chunks")
+        else:
+            report = batcher.run(requests, wait_for_arrivals=False)
         return {"tokens": report.tokens_by_rid(),
                 "throughput": report.throughput_tok_s,
                 "report": report.summary(), **stats}
@@ -350,6 +394,29 @@ def main() -> None:
                          "see README guidance — higher k amortizes the "
                          "verify better but wastes more draft work when "
                          "the accept rate is low)")
+    ap.add_argument("--scheduler", choices=("fifo", "tiered"),
+                    default="fifo",
+                    help="admission policy (--continuous): arrival-ordered "
+                         "FIFO or priority/deadline tiers with aging")
+    ap.add_argument("--priority-tiers", type=int, default=None,
+                    help="cycle requests over N priority tiers "
+                         "(--scheduler tiered; higher tier admits first)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="start deadline for above-minimum tiers, in decode "
+                         "chunks — still-queued requests past it are shed "
+                         "(--scheduler tiered)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="evict a lower-priority victim when slots/pages "
+                         "run out; the victim resumes by re-prefill, "
+                         "bit-exact at temperature 0 (--continuous)")
+    ap.add_argument("--max-requeues", type=int, default=None,
+                    help="failed-admission retries before a request is "
+                         "shed (default: retry while in-flight work can "
+                         "still drain)")
+    ap.add_argument("--age-after", type=float, default=None,
+                    help="chunks of waiting that buy a queued tier head "
+                         "one effective priority tier (anti-starvation; "
+                         "--scheduler tiered)")
     args = ap.parse_args()
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
@@ -361,7 +428,10 @@ def main() -> None:
           chunk_steps=args.chunk_steps, gen_lens=gen_lens,
           paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
           tp=args.tp, mesh_shape=args.mesh, speculative=args.speculative,
-          draft_k=args.draft_k)
+          draft_k=args.draft_k, scheduler=args.scheduler,
+          priority_tiers=args.priority_tiers, deadline=args.deadline,
+          preemption=args.preemption, max_requeues=args.max_requeues,
+          age_after=args.age_after)
 
 
 if __name__ == "__main__":

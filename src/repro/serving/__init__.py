@@ -6,42 +6,70 @@ keeps the device busy across many concurrent requests instead:
 
   * ``slots``     — host-side view of the fixed B_max decode slots backing
                     one pooled KV cache (``Model.init_cache(n_slots, ...)``);
-  * ``scheduler`` — arrival-ordered admission queue + Poisson trace builder;
+  * ``scheduler`` — admission queues (arrival-ordered FIFO and
+                    priority/deadline tiers with anti-starvation aging),
+                    preemption victim selection, and trace builders;
   * ``batcher``   — the serve loop: prefill-on-admit into a free slot's cache
                     region, one jitted chunk of decode steps over all live
                     slots, then a host-side admit/retire pass;
   * ``paged``     — block-granular KV cache: page allocator + block tables
                     backing the batcher's ``paged=True`` mode, where a
-                    request occupies only the pages its tokens need.
+                    request occupies only the pages its tokens need;
+  * ``faults``    — deterministic fault injection (pool exhaustion,
+                    allocator failure, oversized bursts) so tests exercise
+                    the overload/recovery paths on purpose.
 
 The batcher's ``speculative=True`` mode swaps the chunk's inner loop for
 speculative rounds (packed structured-binary draft -> one dense multi-token
 verify; see repro.launch.generate) — emitted tokens stay bit-exact with the
 vanilla chunk loop at temperature 0 while accepted drafts convert expensive
-sequential dense steps into cheap packed ones.
+sequential dense steps into cheap packed ones. ``preemption=True`` adds
+page-level preemption for oversubscribed pools: lower-priority victims are
+evicted, snapshotted, and later resumed by re-prefill, bit-exact with their
+un-preempted runs at temperature 0.
 """
 from repro.serving.batcher import Completion, ContinuousBatcher, ServeReport
+from repro.serving.faults import (
+    AllocatorFault,
+    FaultInjector,
+    FaultPlan,
+    bursty_trace,
+)
 from repro.serving.paged import (
     BlockTableSet,
     PageAllocator,
     PageStats,
     pages_needed,
 )
-from repro.serving.scheduler import FIFOScheduler, Request, poisson_trace
+from repro.serving.scheduler import (
+    FIFOScheduler,
+    Request,
+    ResumeState,
+    TieredScheduler,
+    poisson_trace,
+    select_victim,
+)
 from repro.serving.slots import PoolExhausted, SlotError, SlotPool
 
 __all__ = [
+    "AllocatorFault",
     "BlockTableSet",
     "Completion",
     "ContinuousBatcher",
     "FIFOScheduler",
+    "FaultInjector",
+    "FaultPlan",
     "PageAllocator",
     "PageStats",
     "PoolExhausted",
     "Request",
+    "ResumeState",
     "ServeReport",
     "SlotError",
     "SlotPool",
+    "TieredScheduler",
+    "bursty_trace",
     "pages_needed",
     "poisson_trace",
+    "select_victim",
 ]

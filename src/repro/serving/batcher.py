@@ -54,11 +54,25 @@ prefill, the admit scatters, the decode chunk — carries explicit
 out_shardings so the pool's layout survives donation round trips. Block
 tables, the scheduler queue, and the tok/pos/remaining vectors remain
 replicated host state: scheduling is not worth a collective.
+
+**Oversubscribed mode** (``preemption=True``, usually with
+``scheduler="tiered"``): when admission cannot claim a slot or enough cache
+pages, the batcher evicts a strictly-lower-priority victim instead of
+waiting — the victim's pages (and, speculatively, its draft pool's shared
+reservation) are released, its emitted tokens are snapshotted into a
+re-queued :class:`~repro.serving.scheduler.Request`, and on re-admission
+one fused prefill over ``prompt + emitted`` rebuilds the evicted cache
+exactly, so at temperature 0 a preempted-then-resumed request emits tokens
+bit-exact with its un-preempted run. Deadline-expired and retry-exhausted
+requests leave the system as typed ``status="shed"`` completions rather
+than spinning or raising; every requeue/preemption/shed is counted in the
+:class:`ServeReport`. A :class:`~repro.serving.faults.FaultInjector` can
+force these paths deterministically for tests.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +87,15 @@ from repro.launch.generate import (
     spec_cache_len,
 )
 from repro.models.blocks import PAGED_MIXERS
+from repro.serving.faults import AllocatorFault, FaultInjector
 from repro.serving.paged import BlockTableSet, PageAllocator, pages_needed
-from repro.serving.scheduler import FIFOScheduler, Request
+from repro.serving.scheduler import (
+    FIFOScheduler,
+    Request,
+    ResumeState,
+    TieredScheduler,
+    select_victim,
+)
 from repro.serving.slots import PoolExhausted, SlotError, SlotPool
 from repro.utils.logging import get_logger
 
@@ -83,7 +104,18 @@ log = get_logger("repro.serving").info
 
 @dataclass(frozen=True)
 class Completion:
-    """One finished request with its timeline on the serve clock."""
+    """One finished (or shed) request with its timeline on the serve clock.
+
+    ``status`` is ``"ok"`` for served requests and ``"shed"`` for requests
+    the batcher gave up on (``shed_reason``: ``"deadline"`` — still queued
+    past its start deadline; ``"retries"`` — admission failed more than
+    ``max_requeues`` times). A shed completion has ``slot == -1`` and
+    carries whatever tokens were emitted before a preemption (empty if it
+    never ran). For preempted-then-resumed requests ``admitted_s`` is the
+    *first* admission and ``first_token_s`` the first token of the first
+    stint, so queue-time and TTFT describe the request's service history,
+    not its final re-admission.
+    """
 
     rid: int
     tokens: np.ndarray = field(repr=False)   # [max_new_tokens] int32
@@ -95,6 +127,12 @@ class Completion:
     # proposed (accepted_drafts / drafted = the request's accept rate)
     accepted_drafts: int = 0
     drafted: int = 0
+    priority: int = 0
+    status: str = "ok"                       # "ok" | "shed"
+    shed_reason: str = ""                    # "deadline" | "retries"
+    requeues: int = 0
+    preemptions: int = 0
+    first_token_s: float | None = None
 
     @property
     def latency_s(self) -> float:
@@ -103,6 +141,12 @@ class Completion:
     @property
     def queue_s(self) -> float:
         return self.admitted_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Time to first token (None if none was emitted before a shed)."""
+        return (None if self.first_token_s is None
+                else self.first_token_s - self.arrival_s)
 
 
 @dataclass
@@ -117,6 +161,14 @@ class ServeReport:
     total_admitted: int = 0
     pages: dict | None = None      # PageStats.summary() when serving paged
     spec: dict | None = None       # accept stats when serving speculatively
+    n_requeues: int = 0            # failed admissions pushed back for retry
+    n_preemptions: int = 0         # victims evicted to admit higher priority
+    n_shed: int = 0                # typed give-ups (deadline / retry budget)
+    faults: dict | None = None     # FaultInjector.summary() when injecting
+
+    @property
+    def ok_completions(self) -> list[Completion]:
+        return [c for c in self.completions if c.status == "ok"]
 
     @property
     def generated_tokens(self) -> int:
@@ -126,9 +178,26 @@ class ServeReport:
     def throughput_tok_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
+    @property
+    def goodput_tok_s(self) -> float:
+        """Tokens of *served* requests per second — work shed requests left
+        behind (partial pre-preemption stints) is excluded, so overload
+        policies are scored on what they finished, not what they touched."""
+        ok = sum(len(c.tokens) for c in self.ok_completions)
+        return ok / max(self.wall_s, 1e-9)
+
     def latency_percentile(self, q: float) -> float:
-        lats = [c.latency_s for c in self.completions]
+        lats = [c.latency_s for c in self.ok_completions]
         return float(np.percentile(lats, q)) if lats else 0.0
+
+    def ttft_percentile(self, q: float, priority: int | None = None) -> float:
+        """Time-to-first-token percentile over served requests (optionally
+        one priority tier — the interactive-tier p95 is preempt_bench's
+        gated latency metric)."""
+        ts = [c.ttft_s for c in self.ok_completions
+              if c.ttft_s is not None
+              and (priority is None or c.priority == priority)]
+        return float(np.percentile(ts, q)) if ts else 0.0
 
     def tokens_by_rid(self) -> dict[int, np.ndarray]:
         return {c.rid: c.tokens for c in self.completions}
@@ -139,17 +208,24 @@ class ServeReport:
             "generated_tokens": self.generated_tokens,
             "wall_s": self.wall_s,
             "throughput_tok_s": self.throughput_tok_s,
+            "goodput_tok_s": self.goodput_tok_s,
             "p50_latency_s": self.latency_percentile(50),
             "p95_latency_s": self.latency_percentile(95),
+            "p95_ttft_s": self.ttft_percentile(95),
             "n_chunks": self.n_chunks,
             "n_prefills": self.n_prefills,
             "peak_active_slots": self.peak_active,
             "total_admitted": self.total_admitted,
+            "requeues": self.n_requeues,
+            "preemptions": self.n_preemptions,
+            "shed": self.n_shed,
         }
         if self.pages is not None:
             out["pages"] = dict(self.pages)
         if self.spec is not None:
             out["spec"] = dict(self.spec)
+        if self.faults is not None:
+            out["faults"] = dict(self.faults)
         return out
 
 
@@ -187,6 +263,19 @@ class ContinuousBatcher:
     carries ``draft_k + 1`` headroom positions for rejected-tail scribbles,
     and per-slot accept counters roll up into ``Completion.accepted_drafts``
     and the report's ``spec`` summary.
+
+    Oversubscription knobs: ``scheduler`` picks the admission policy
+    (``"fifo"`` or ``"tiered"`` — priorities/deadlines/aging; see
+    :class:`~repro.serving.scheduler.TieredScheduler`, whose anti-
+    starvation window is ``age_after_s``). ``preemption=True`` lets a
+    higher-priority admission evict a strictly-lower-priority victim when
+    slots or pages run out (resume-by-reprefill; needs a fused-prefill
+    pattern, and the bit-exact resume guarantee is greedy — at
+    temperature > 0 a resumed request redraws its sampling keys).
+    ``max_requeues`` bounds how often one request's failed admission is
+    retried before it is shed (None: retry as long as in-flight work can
+    still drain). ``faults`` injects deterministic admission failures
+    (:class:`~repro.serving.faults.FaultInjector`) to force these paths.
     """
 
     def __init__(self, model, params, *, n_slots: int, prompt_len: int,
@@ -195,7 +284,10 @@ class ContinuousBatcher:
                  seed: int = 0, paged: bool = False, page_size: int = 16,
                  n_pages: int | None = None, mesh=None,
                  speculative: bool = False, draft_params=None,
-                 draft_k: int = 4):
+                 draft_k: int = 4, scheduler: str = "fifo",
+                 age_after_s: float | None = None, preemption: bool = False,
+                 max_requeues: int | None = None,
+                 faults: FaultInjector | None = None):
         if model.cfg.encoder is not None or model.cfg.vision is not None:
             raise NotImplementedError(
                 "continuous batching serves decoder-only archs; "
@@ -221,6 +313,22 @@ class ContinuousBatcher:
         elif draft_params is not None:
             raise ValueError("draft_params without speculative=True; pass "
                              "both or neither")
+        if scheduler not in ("fifo", "tiered"):
+            raise ValueError(
+                f"scheduler must be 'fifo' or 'tiered' (got {scheduler!r})")
+        if age_after_s is not None and scheduler != "tiered":
+            raise ValueError(
+                "age_after_s is TieredScheduler's anti-starvation window; "
+                "pass scheduler='tiered' with it")
+        if max_requeues is not None and max_requeues < 0:
+            raise ValueError(
+                f"max_requeues must be >= 0 or None for unbounded retry "
+                f"(got {max_requeues})")
+        self.scheduler_kind = scheduler
+        self.age_after_s = age_after_s
+        self.preemption = preemption
+        self.max_requeues = max_requeues
+        self.faults = faults
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -248,6 +356,12 @@ class ContinuousBatcher:
         # the full compiled length (_admit enforces this)
         self._fused_prefill = (model.can_fused_prefill
                                and prefill_mode != "scan")
+        if preemption and not self._fused_prefill:
+            raise ValueError(
+                "preemption resumes a victim by re-prefilling prompt + "
+                "emitted — a ragged-length prefill that needs per-position "
+                "logits, so it requires a fused-prefill pattern (scan-mode "
+                "prefill returns last-padded-position logits only)")
         if paged:
             if page_size <= 0:
                 raise ValueError(
@@ -313,9 +427,14 @@ class ContinuousBatcher:
             for entry_pool, entry_one, spec in zip(pool, one, model.pattern):
                 if spec.mixer in PAGED_MIXERS:
                     def scat(p, o):
+                        # block count from the incoming cache's own length:
+                        # fresh admissions prefill prompt_blocks pages,
+                        # preemption resumes prefill the (longer) resume
+                        # template — one scatter serves both shapes
                         g = o.shape[0]
-                        o = o[:, 0].reshape(g, self.prompt_blocks,
-                                            self.page_size, *o.shape[3:])
+                        nb = o.shape[2] // self.page_size
+                        o = o[:, 0].reshape(g, nb, self.page_size,
+                                            *o.shape[3:])
                         return p.at[:, pages].set(o.astype(p.dtype))
                     out.append(jax.tree.map(scat, entry_pool, entry_one))
                 else:
@@ -377,6 +496,21 @@ class ContinuousBatcher:
         self._fresh = self.model.init_cache(1, fresh_len)
         if mesh is not None:
             self._fresh = jax.device_put(self._fresh, self._fresh_shard)
+        # resume-by-reprefill needs a longer batch-1 template: the resume
+        # prompt is prompt + emitted, up to prompt_len + max_new_tokens - 1
+        # tokens (paged: rounded up to whole pages). One fixed pad length
+        # keeps it to a single extra jit specialization per edge; the
+        # NamedShardings are shape-polymorphic so the mesh case reuses
+        # _fresh_shard.
+        self._fresh_resume = None
+        if preemption:
+            resume_len = prompt_len + max_new_tokens - 1
+            self._resume_pad = (-(-resume_len // page_size) * page_size
+                                if paged else resume_len)
+            self._fresh_resume = self.model.init_cache(1, self._resume_pad)
+            if mesh is not None:
+                self._fresh_resume = jax.device_put(self._fresh_resume,
+                                                    self._fresh_shard)
         # per-run paged state (fresh in run())
         self._alloc: PageAllocator | None = None
         self._tables: BlockTableSet | None = None
@@ -389,6 +523,10 @@ class ContinuousBatcher:
         if not self.paged:
             return None
         headroom = self.draft_k + 1 if self.speculative else 0
+        # req.prompt is always the ORIGINAL prompt (resume tokens live in
+        # req.resume), so a resumed request reserves exactly its original
+        # footprint — preemption changes where the tokens come from, not
+        # how many positions the request owns
         need = pages_needed(len(np.asarray(req.prompt)),
                             req.max_new_tokens + headroom, self.page_size)
         return self._alloc.alloc(need)
@@ -403,6 +541,15 @@ class ContinuousBatcher:
         first token for the host to emit immediately (the vanilla chunk loop
         emits its carried token at the first step; speculative rounds only
         emit what they draft/verify, so admission emits it instead).
+
+        A request carrying a preemption snapshot (``req.resume``) re-admits
+        by **resume-by-reprefill**: one fused prefill over
+        ``prompt + resume.emitted`` rebuilds the evicted cache region
+        exactly (fused prefill computes the same logits as the sequential
+        decode steps that originally produced it), and sampling at the true
+        last position recomputes the carried token the eviction discarded —
+        so at temperature 0 the continuation is bit-exact with the
+        un-preempted run. Only the remaining token budget is decoded.
         """
         prompt = np.asarray(req.prompt)
         tlen = int(prompt.shape[0])
@@ -420,22 +567,35 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.rid}: gen len {req.max_new_tokens} exceeds "
                 f"slot capacity {self.max_new_tokens}")
-        padded = np.zeros(self.prompt_len, np.int32)
+        n_done = len(req.resume.emitted) if req.resume is not None else 0
+        if n_done:
+            if self._fresh_resume is None:
+                raise ValueError(
+                    f"request {req.rid} carries a resume snapshot but the "
+                    f"batcher was built with preemption=False (the resume "
+                    f"prefill template only exists under preemption=True)")
+            prompt = np.concatenate(
+                [prompt, np.asarray(req.resume.emitted, np.int32)])
+            tlen += n_done
+            pad_len, fresh = self._resume_pad, self._fresh_resume
+        else:
+            pad_len, fresh = self.prompt_len, self._fresh
+        padded = np.zeros(pad_len, np.int32)
         padded[:tlen] = prompt
-        tok0, one = self._prefill(self.params, self._fresh,
+        tok0, one = self._prefill(self.params, fresh,
                                   jnp.asarray(padded[None, :]),
                                   jnp.int32(tlen), key)
         d_one = None
         if self.speculative:
-            _, d_one = self._d_prefill(self.draft_params, self._fresh,
+            _, d_one = self._d_prefill(self.draft_params, fresh,
                                        jnp.asarray(padded[None, :]),
                                        jnp.int32(tlen), key)
         if self.paged:
             self._tables.assign(slot, pages)
-            # scatter only the pages the prompt itself occupies; the jit's
-            # static prompt_blocks shape is padded with null-page targets
+            # scatter only the pages the (resume) prompt itself occupies;
+            # the jit's static block count is padded with null-page targets
             n_prompt = -(-tlen // self.page_size)
-            scat = np.zeros(self.prompt_blocks, np.int32)
+            scat = np.zeros(-(-pad_len // self.page_size), np.int32)
             scat[:n_prompt] = pages[:n_prompt]
             caches = self._write_pg(caches, one, jnp.int32(slot),
                                     jnp.asarray(scat))
@@ -449,27 +609,45 @@ class ContinuousBatcher:
         first = int(np.asarray(tok0)[0, 0])
         tok[slot, 0] = first
         pos[slot] = tlen
+        budget = req.max_new_tokens - n_done
         if self.speculative:
             # the first token is emitted by admission; rounds owe the rest
-            rem[slot] = req.max_new_tokens - 1
+            rem[slot] = budget - 1
             return caches, d_caches, first
-        rem[slot] = req.max_new_tokens
+        rem[slot] = budget
         return caches, d_caches, None
 
-    def run(self, requests: list[Request],
-            wait_for_arrivals: bool = True) -> ServeReport:
+    def run(self, requests: list[Request], wait_for_arrivals: bool = True,
+            clock: str = "wall") -> ServeReport:
         """Serve ``requests`` to completion; returns the aggregate report.
 
-        Arrival times are honored against the wall clock (a request is only
-        admitted once ``arrival_s`` has passed); with
-        ``wait_for_arrivals=False`` the trace's arrival times are ignored
-        and every request is eligible immediately (deterministic tests).
+        Arrival times are honored against the serve clock (a request is
+        only admitted once ``arrival_s`` has passed); with
+        ``wait_for_arrivals=False`` the trace's arrival times are ignored —
+        every request is eligible immediately and deadlines are dropped
+        (they lose their anchor without arrivals).
+
+        ``clock`` selects the serve clock. ``"wall"`` (default) is real
+        time: arrivals are waited out and every latency metric is seconds.
+        ``"chunks"`` is a deterministic virtual clock — it advances by 1.0
+        per decode chunk and warps forward through idle bubbles — so
+        arrival order, deadline expiry, aging, and preemption decisions
+        replay identically run to run (the overload tests depend on this);
+        timestamps are then in chunk units and throughput is meaningless.
         """
+        if clock not in ("wall", "chunks"):
+            raise ValueError(
+                f"clock must be 'wall' or 'chunks' (got {clock!r})")
         if not wait_for_arrivals:
-            requests = [Request(r.rid, r.prompt, r.max_new_tokens, 0.0)
+            requests = [replace(r, arrival_s=0.0, deadline_s=None)
                         for r in requests]
-        sched = FIFOScheduler(requests)
+        if self.scheduler_kind == "tiered":
+            sched = TieredScheduler(requests, age_after_s=self.age_after_s)
+        else:
+            sched = FIFOScheduler(requests)
         pool = SlotPool(self.n_slots)
+        if self.faults is not None:
+            self.faults.reset()
         d_caches = None
         if self.paged:
             self._alloc = PageAllocator(self.n_pages, self.page_size)
@@ -499,50 +677,190 @@ class ContinuousBatcher:
         arrivals = {r.rid: r.arrival_s for r in requests}
 
         completions: list[Completion] = []
-        n_chunks = n_prefills = 0
+        requeue_counts: dict[int, int] = {}
+        n_chunks = n_prefills = n_requeues = n_preemptions = n_shed = 0
         t0 = time.perf_counter()
-        clock = lambda: time.perf_counter() - t0
+        vnow = 0.0
+        if clock == "wall":
+            clk = lambda: time.perf_counter() - t0
+        else:
+            clk = lambda: vnow
+
+        def shed(req: Request, why: str) -> None:
+            """Give up on ``req`` with a typed completion (keeping any
+            tokens a pre-preemption stint already produced)."""
+            nonlocal n_shed
+            n_shed += 1
+            now = clk()
+            res = req.resume
+            completions.append(Completion(
+                rid=req.rid,
+                tokens=np.asarray(res.emitted if res else (), np.int32),
+                slot=-1,
+                arrival_s=arrivals[req.rid],
+                admitted_s=res.first_admitted_s if res else now,
+                finished_s=now,
+                accepted_drafts=res.accepted_drafts if res else 0,
+                drafted=res.drafted if res else 0,
+                priority=req.priority,
+                status="shed",
+                shed_reason=why,
+                requeues=requeue_counts.get(req.rid, 0),
+                preemptions=res.preemptions if res else 0,
+                first_token_s=res.first_token_s if res else None))
+
+        def requeue(req: Request) -> bool:
+            """Push a failed admission back for a later chunk boundary;
+            shed it instead once the bounded-retry budget is spent.
+            Returns True if the request went back in the queue."""
+            nonlocal n_requeues
+            n = requeue_counts.get(req.rid, 0) + 1
+            requeue_counts[req.rid] = n
+            if self.max_requeues is not None and n > self.max_requeues:
+                shed(req, "retries")
+                return False
+            n_requeues += 1
+            sched.push_front(req)
+            return True
+
+        def victim_for(priority: int) -> int | None:
+            """Slot to evict so a ``priority`` admission can proceed."""
+            cands = []
+            for s in pool.active_slots():
+                rec = pool.get(s)
+                if rec.done:
+                    # finished work retires with its tokens this boundary;
+                    # evicting it would only discard a paid-for completion
+                    continue
+                held = len(self._tables.pages_of(s)) if self.paged else 0
+                cands.append((s, rec.request, held, len(rec.emitted)))
+            return select_victim(cands, priority)
+
+        def preempt_slot(s: int) -> None:
+            """Evict slot ``s``: release its pages (shared with the draft
+            pool in speculative mode — one block-table release covers
+            both), snapshot its progress, and re-queue it for resume. The
+            device rows need no reset: rem=0 makes them inert (frozen pos,
+            invalid emissions, null-page/own-row writes) until the next
+            admission's prefill overwrites them."""
+            nonlocal n_preemptions
+            n_preemptions += 1
+            rec = pool.preempt(s)
+            if self.paged:
+                self._alloc.free(self._tables.release(s))
+            rem[s] = 0
+            r = rec.request
+            snap = ResumeState(
+                emitted=tuple(rec.emitted),
+                preemptions=(r.resume.preemptions if r.resume else 0) + 1,
+                first_admitted_s=rec.first_admitted_s,
+                first_token_s=rec.first_token_s,
+                accepted_drafts=int(acc_slots[s]),
+                drafted=int(drf_slots[s]))
+            # the start deadline was met at first admission — the re-queued
+            # victim must not be shed while it waits to resume
+            sched.push_front(replace(r, deadline_s=None, resume=snap))
 
         while len(sched) or pool.any_active():
-            # ---- admit: fill free slots from the arrived queue -----------
-            while pool.free_slots() and sched.ready(clock()):
-                req = sched.pop(clock())
-                try:
-                    pages = self._reserve(req)
+            # ---- shed: queued requests whose start deadline passed -------
+            for dead in sched.expire(clk()):
+                shed(dead, "deadline")
+
+            # ---- admit: fill (or preempt into) slots from the queue ------
+            while True:
+                now = clk()
+                head = sched.peek(now)
+                if head is None:
+                    break
+                if not pool.free_slots() and not (
+                        self.preemption
+                        and victim_for(head.priority) is not None):
+                    break
+                req = sched.pop(now)
+                if self.faults is not None:
                     try:
-                        slot = pool.admit(req, clock())
-                    except PoolExhausted:
-                        if pages:
-                            self._alloc.free(pages)
-                        raise
-                except PoolExhausted as e:
-                    # momentary capacity shortfall: put the request back and
-                    # retry once a retirement frees pages/slots
-                    sched.push_front(req)
+                        self.faults.on_admit(req)
+                    except (PoolExhausted, AllocatorFault):
+                        # injected faults are transient by construction:
+                        # bounded requeue, never preempt — evicting traffic
+                        # cannot fix a failing allocator
+                        if requeue(req):
+                            break
+                        continue
+                pages = None
+                err = None
+                while True:
+                    if not pool.free_slots():
+                        v = victim_for(req.priority)
+                        if v is None:
+                            err = PoolExhausted(
+                                f"all {self.n_slots} slots occupied "
+                                f"(request {req.rid})")
+                            break
+                        preempt_slot(v)
+                        continue
+                    try:
+                        pages = self._reserve(req)
+                    except PoolExhausted as e:
+                        # pages dry with a free slot: evict until the
+                        # reservation fits or the victims run out
+                        if self.preemption:
+                            v = victim_for(req.priority)
+                            if v is not None:
+                                preempt_slot(v)
+                                continue
+                        err = e
+                    break
+                if err is not None:
                     if not pool.any_active():
                         # nothing in flight will ever release capacity —
                         # the request simply doesn't fit this pool
                         raise PoolExhausted(
                             f"request {req.rid} can never be admitted "
-                            f"(empty pool): {e}") from e
-                    break
+                            f"(empty pool): {err}") from err
+                    if requeue(req):
+                        break       # retry at the next chunk boundary
+                    continue        # shed; the next head may still fit
+                slot = pool.admit(req, now)
                 self.key, k = jax.random.split(self.key)
                 caches, d_caches, first = self._admit(
                     req, slot, pages, caches, d_caches, tok, pos, rem, k)
+                rec = pool.get(slot)
+                res = req.resume
+                if res is not None:
+                    # the snapshot's history continues in this slot
+                    rec.emitted.extend(res.emitted)
+                    rec.first_admitted_s = res.first_admitted_s
+                    rec.first_token_s = res.first_token_s
+                    acc_slots[slot] = res.accepted_drafts
+                    drf_slots[slot] = res.drafted
+                else:
+                    rec.first_admitted_s = now
+                    acc_slots[slot] = drf_slots[slot] = 0
                 if first is not None:
                     pool.extend(slot, [first])
-                acc_slots[slot] = drf_slots[slot] = 0
+                    if rec.first_token_s is None:
+                        rec.first_token_s = clk()
                 n_prefills += 1
 
             if not pool.any_active():
-                # nothing live: sleep until the next arrival (idle bubble —
+                # nothing live: advance to the next arrival (idle bubble —
                 # the serving benchmark's static baseline pays this too)
                 nxt = sched.next_arrival()
                 if nxt is None:
-                    raise SlotError(
-                        "serve loop idle with an empty queue and no active "
-                        "slots — scheduler and pool bookkeeping disagree")
-                time.sleep(max(0.0, min(nxt - clock(), 0.05)))
+                    if len(sched):
+                        # non-empty queue with no arrival — bookkeeping bug
+                        raise SlotError(
+                            "serve loop idle with queued requests but no "
+                            "next arrival")
+                    break   # everything shed/served; nothing left to do
+                if clock == "chunks":
+                    # warp the virtual clock (never backwards, and always
+                    # by at least one tick so injected-fault retries on an
+                    # idle pool cannot stall time)
+                    vnow = max(vnow + 1.0, nxt)
+                else:
+                    time.sleep(max(0.0, min(nxt - clk(), 0.05)))
                 continue
 
             # ---- decode one chunk over all slots -------------------------
@@ -573,12 +891,16 @@ class ContinuousBatcher:
             pos = np.array(pos_d)            # mutate these slotwise
             rem = np.array(rem_d)
             n_chunks += 1
-            now = clock()
+            if clock == "chunks":
+                vnow += 1.0
+            now = clk()
 
             # ---- retire: collect emissions, free finished slots ----------
             for slot in pool.active_slots():
                 pool.extend(slot, toks[slot][valid[slot]])
                 rec = pool.get(slot)
+                if rec.first_token_s is None and rec.emitted:
+                    rec.first_token_s = now
                 if rec.done:
                     rec, fin = pool.retire(slot, now)
                     if self.paged:
@@ -590,10 +912,15 @@ class ContinuousBatcher:
                         tokens=np.asarray(rec.emitted, np.int32),
                         slot=slot,
                         arrival_s=arrivals[rec.request.rid],
-                        admitted_s=rec.admitted_s,
+                        admitted_s=rec.first_admitted_s,
                         finished_s=fin,
                         accepted_drafts=int(acc_slots[slot]),
                         drafted=int(drf_slots[slot]),
+                        priority=rec.request.priority,
+                        requeues=requeue_counts.get(rec.request.rid, 0),
+                        preemptions=(rec.request.resume.preemptions
+                                     if rec.request.resume else 0),
+                        first_token_s=rec.first_token_s,
                     ))
 
         spec_summary = None
@@ -609,11 +936,14 @@ class ContinuousBatcher:
             }
         report = ServeReport(
             completions=sorted(completions, key=lambda c: c.rid),
-            wall_s=clock(), n_chunks=n_chunks, n_prefills=n_prefills,
+            wall_s=clk(), n_chunks=n_chunks, n_prefills=n_prefills,
             peak_active=pool.peak_active,
             total_admitted=pool.total_admitted,
             pages=self._alloc.stats().summary() if self.paged else None,
-            spec=spec_summary)
+            spec=spec_summary,
+            n_requeues=n_requeues, n_preemptions=n_preemptions,
+            n_shed=n_shed,
+            faults=self.faults.summary() if self.faults else None)
         s = report.summary()
         paged_note = ""
         if self.paged:
@@ -627,6 +957,10 @@ class ContinuousBatcher:
                            f"{spec_summary['accept_rate']:.0%} "
                            f"({spec_summary['accepted_drafts']}/"
                            f"{spec_summary['drafted']} drafts)")
+        over_note = ""
+        if s["requeues"] or s["preemptions"] or s["shed"]:
+            over_note = (f", {s['requeues']} requeues "
+                         f"{s['preemptions']} preemptions {s['shed']} shed")
         log(f"continuous: {s['n_requests']} reqs, "
             f"{s['generated_tokens']} toks in {s['wall_s']:.2f}s "
             f"({s['throughput_tok_s']:.1f} tok/s, "
@@ -634,5 +968,5 @@ class ContinuousBatcher:
             f"{n_chunks} chunks x {self.chunk_steps} steps, "
             f"{n_prefills} prefills, "
             f"peak {s['peak_active_slots']}/{self.n_slots} slots, "
-            f"{s['total_admitted']} admitted{paged_note})")
+            f"{s['total_admitted']} admitted{over_note}{paged_note})")
         return report

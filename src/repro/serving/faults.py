@@ -1,0 +1,171 @@
+"""Deterministic fault injection for the serve stack.
+
+The serve loop's failure paths (page pool dry, allocator errors, bursts
+arriving faster than slots free up) are exactly the paths a smoke trace
+never exercises — a well-provisioned pool admits everything first try. This
+module forces those paths *deterministically*, so tests can assert the
+recovery behaviour (re-queue, preempt, shed) is correct and bit-exact
+rather than hoping a race shows up.
+
+A :class:`FaultInjector` is handed to ``ContinuousBatcher(faults=...)`` and
+consulted once per admission attempt, before any real resource is claimed:
+
+  * ``exhaust_rids`` — raise :class:`~repro.serving.slots.PoolExhausted`
+    the first time each listed rid is admitted (transient capacity fault:
+    the batcher re-queues / preempts / sheds exactly as for a genuinely dry
+    pool, and the retry succeeds).
+  * ``fail_rids`` — raise :class:`AllocatorFault` the first time each
+    listed rid is admitted (infrastructure fault, e.g. an allocator
+    invariant trip; recoverable by retry but never by preemption — evicting
+    traffic cannot fix a broken allocator).
+  * ``p_exhaust`` — per-attempt random exhaustion with probability p, drawn
+    from a generator seeded with ``seed`` (deterministic across runs and
+    across the CI bench-gate's baseline/fresh pair).
+
+Injected faults are indistinguishable from real ones at the point they are
+raised, so the recovery machinery under test is the production code path.
+:func:`bursty_trace` builds the oversized-burst arrival pattern (all-at-once
+request clumps) that makes pool exhaustion structural rather than injected.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+from repro.serving.slots import PoolExhausted
+
+
+class AllocatorFault(RuntimeError):
+    """An injected infrastructure failure in the cache allocator.
+
+    Distinct from :class:`~repro.serving.slots.PoolExhausted`: exhaustion is
+    a capacity condition that preemption can relieve, an allocator fault is
+    not — the batcher may retry the admission at a later chunk boundary but
+    must never evict other traffic in response."""
+
+
+@dataclass
+class FaultPlan:
+    """Which faults to inject, and when.
+
+    ``exhaust_rids`` / ``fail_rids`` trigger once per listed rid (the first
+    admission attempt for that rid; retries and re-admissions after
+    preemption are not re-faulted, so every planned fault is recoverable).
+    ``p_exhaust`` adds seeded random exhaustion on top, for soak-style
+    tests; 0.0 disables it.
+    """
+
+    exhaust_rids: tuple[int, ...] = ()
+    fail_rids: tuple[int, ...] = ()
+    p_exhaust: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_exhaust <= 1.0:
+            raise ValueError(
+                f"p_exhaust must be a probability (got {self.p_exhaust})")
+        both = set(self.exhaust_rids) & set(self.fail_rids)
+        if both:
+            raise ValueError(
+                f"rids {sorted(both)} listed for both exhaustion and "
+                f"allocator failure — pick one fault per request")
+
+
+@dataclass
+class FaultInjector:
+    """Stateful executor of a :class:`FaultPlan`.
+
+    One injector serves one ``run()``: the batcher calls :meth:`reset` at
+    trace start (so a reused injector replays the same plan) and
+    :meth:`on_admit` once per admission attempt. Counters survive until the
+    next reset and are rolled into ``ServeReport.summary()["faults"]``.
+    """
+
+    plan: FaultPlan = field(default_factory=FaultPlan)
+    n_exhaust: int = 0
+    n_alloc_fail: int = 0
+
+    def __post_init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        """Arm the plan for a fresh trace (one-shot rids re-armed, RNG
+        re-seeded, counters zeroed)."""
+        self._pending_exhaust = set(self.plan.exhaust_rids)
+        self._pending_fail = set(self.plan.fail_rids)
+        self._rng = np.random.default_rng(self.plan.seed)
+        self.n_exhaust = 0
+        self.n_alloc_fail = 0
+
+    def on_admit(self, request: Request) -> None:
+        """Called by the batcher before claiming resources for ``request``;
+        raises the planned fault, if any, for this admission attempt."""
+        if request.rid in self._pending_fail:
+            self._pending_fail.discard(request.rid)
+            self.n_alloc_fail += 1
+            raise AllocatorFault(
+                f"injected allocator failure admitting request "
+                f"{request.rid}")
+        if request.rid in self._pending_exhaust:
+            self._pending_exhaust.discard(request.rid)
+            self.n_exhaust += 1
+            raise PoolExhausted(
+                f"injected pool exhaustion admitting request {request.rid}")
+        if self.plan.p_exhaust and \
+                self._rng.random() < self.plan.p_exhaust:
+            self.n_exhaust += 1
+            raise PoolExhausted(
+                f"injected random pool exhaustion (p={self.plan.p_exhaust}) "
+                f"admitting request {request.rid}")
+
+    def summary(self) -> dict:
+        return {"n_exhaust": self.n_exhaust,
+                "n_alloc_fail": self.n_alloc_fail}
+
+
+def bursty_trace(
+    n_requests: int,
+    *,
+    prompt_len: int,
+    vocab: int,
+    burst_size: int,
+    burst_gap_s: float,
+    gen_lens: tuple[int, ...] = (8, 16, 32),
+    priorities: tuple[int, ...] | None = None,
+    deadline_slack_s: float | None = None,
+    seed: int = 0,
+) -> list[Request]:
+    """Arrival trace of oversized bursts: ``burst_size`` requests land at
+    the same instant, then ``burst_gap_s`` of silence, repeating.
+
+    A burst bigger than the slot/page pool makes :class:`PoolExhausted`
+    structural — every burst forces the batcher through its re-queue /
+    preempt / shed machinery, which is the regime ``preempt_bench`` and the
+    overload tests measure. Tier/deadline assignment matches
+    :func:`~repro.serving.scheduler.poisson_trace`: priorities drawn
+    uniformly from ``priorities``, and above-minimum tiers get
+    ``arrival + deadline_slack_s`` start deadlines. Deterministic in
+    ``seed``.
+    """
+    if burst_size <= 0:
+        raise ValueError(f"burst_size must be positive (got {burst_size})")
+    rng = np.random.default_rng(seed)
+    base_tier = min(priorities) if priorities else 0
+    out = []
+    for i in range(n_requests):
+        tier = int(rng.choice(priorities)) if priorities else 0
+        arrival = (i // burst_size) * burst_gap_s
+        deadline = (arrival + deadline_slack_s
+                    if deadline_slack_s is not None and tier > base_tier
+                    else None)
+        out.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, prompt_len, dtype=np.int32),
+            max_new_tokens=int(rng.choice(gen_lens)),
+            arrival_s=arrival,
+            priority=tier,
+            deadline_s=deadline,
+        ))
+    return out

@@ -1,33 +1,95 @@
-"""Request admission: FIFO queue over arrival times + Poisson trace builder.
+"""Request admission: FIFO + tiered priority/deadline queues, trace builders.
 
-The scheduler is deliberately host-only and deterministic: requests are
-admitted strictly in arrival order (ties broken by request id), and a request
-is only eligible once its arrival time has passed on the serve clock. The
-batcher polls ``pop(now)`` between decode chunks — admission never interrupts
-a running chunk.
+Schedulers are deliberately host-only and deterministic: a request is only
+eligible once its arrival time has passed on the serve clock, and the batcher
+polls ``pop(now)`` between decode chunks — admission never interrupts a
+running chunk. Two policies share one protocol (``ready`` / ``peek`` /
+``pop`` / ``push_front`` / ``expire`` / ``next_arrival``):
+
+  * :class:`FIFOScheduler` — strict arrival order (ties broken by request
+    id). The queue is kept **sorted by ``(arrival_s, rid)`` at all times**:
+    ``push_front`` re-inserts a popped request at its arrival-ordered
+    position, so rolling back any number of admissions in one chunk (page
+    pool momentarily dry, preemption re-queues) restores exactly the
+    pre-pop order no matter the order of the push-backs.
+  * :class:`TieredScheduler` — priority tiers (higher ``Request.priority``
+    admits first; e.g. 1 = interactive, 0 = best-effort), FIFO within a
+    tier, per-request deadlines (``expire`` sheds a queued request whose
+    ``deadline_s`` has passed instead of serving it late), and optional
+    anti-starvation aging: a tier head that has waited ``age_after_s``
+    gains one effective tier per further ``age_after_s`` waited, so
+    best-effort traffic is eventually admitted under any interactive load.
+    Aging affects *admission order only* — preemption victim choice uses
+    nominal priorities, so an aged request never evicts anyone.
+
+The scheduler also drives **victim choice** under preemption:
+:func:`select_victim` ranks a preempting request's candidates (strictly
+lower nominal priority, not yet finished) lowest-priority first, then
+most-pages (one eviction frees the most cache), then least-progress
+(cheapest re-prefill among equals), then latest arrival.
 """
 from __future__ import annotations
 
-from collections import deque
+from bisect import insort
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+def _order(req: "Request") -> tuple[float, int]:
+    """The FIFO sort key: earliest arrival first, rid breaking ties."""
+    return (req.arrival_s, req.rid)
+
+
+@dataclass(frozen=True)
+class ResumeState:
+    """Snapshot of a preempted request's progress, carried in its re-queued
+    :class:`Request`.
+
+    ``emitted`` is every token the request emitted before eviction; on
+    re-admission the batcher re-prefills ``prompt + emitted`` (the cache
+    position is recomputed as ``len(prompt) + len(emitted)``), so the
+    continuation is bit-exact with the un-preempted run at temperature 0 —
+    re-prefill is deterministic and fused prefill logits equal sequential
+    decode logits. ``first_admitted_s`` / ``first_token_s`` preserve the
+    request's original service timeline across evictions so queue-time and
+    TTFT metrics measure the request, not its last admission.
+    """
+
+    emitted: tuple[int, ...]
+    preemptions: int
+    first_admitted_s: float
+    first_token_s: float | None = None
+    # speculative serving: the victim's accept counters, so the final
+    # Completion's draft stats cover the whole request, not its last stint
+    accepted_drafts: int = 0
+    drafted: int = 0
 
 
 @dataclass(frozen=True)
 class Request:
     """One generation request.
 
-    ``prompt`` is a fixed-length token vector (the batcher compiles prefill
-    for a single prompt length); ``max_new_tokens`` may differ per request —
+    ``prompt`` is the request's own token vector (ragged up to the batcher's
+    compiled ``prompt_len``); ``max_new_tokens`` may differ per request —
     mixed gen lengths finishing out of order is the point of the slot pool.
     ``arrival_s`` is seconds relative to the serve clock's start.
+
+    ``priority`` is the request's tier (higher admits first under
+    :class:`TieredScheduler`; 0 = best-effort default). ``deadline_s`` is an
+    absolute serve-clock deadline for *starting* service: a request still
+    queued past it is shed (typed ``status="shed"`` completion), never
+    served late. ``resume`` carries a preemption snapshot — ``None`` for
+    fresh requests.
     """
 
     rid: int
     prompt: np.ndarray = field(repr=False)
     max_new_tokens: int
     arrival_s: float = 0.0
+    priority: int = 0
+    deadline_s: float | None = None
+    resume: ResumeState | None = None
 
     def __post_init__(self):
         if self.max_new_tokens <= 0:
@@ -38,14 +100,31 @@ class Request:
             raise ValueError(
                 f"request {self.rid}: prompt must be a 1-D [S] token vector "
                 f"(got ndim={np.asarray(self.prompt).ndim})")
+        if self.deadline_s is not None and self.deadline_s < self.arrival_s:
+            raise ValueError(
+                f"request {self.rid}: deadline_s ({self.deadline_s}) "
+                f"precedes arrival_s ({self.arrival_s})")
+        if self.resume is not None and \
+                len(self.resume.emitted) >= self.max_new_tokens:
+            raise ValueError(
+                f"request {self.rid}: resume snapshot carries "
+                f"{len(self.resume.emitted)} emitted tokens but the budget "
+                f"is {self.max_new_tokens} — a finished request retires, it "
+                f"is never re-queued")
 
 
 class FIFOScheduler:
-    """Arrival-ordered admission queue (earliest arrival first)."""
+    """Arrival-ordered admission queue (earliest arrival first).
+
+    Invariant: the queue is sorted by ``(arrival_s, rid)`` at all times.
+    ``push_front`` therefore *re-inserts at the request's arrival-ordered
+    position* rather than blindly prepending — pushing several requests
+    back in one chunk (in any order) restores exactly the pre-pop queue,
+    where a literal ``appendleft`` per push would reverse them.
+    """
 
     def __init__(self, requests):
-        self._queue = deque(
-            sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        self._queue: list[Request] = sorted(requests, key=_order)
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -54,18 +133,139 @@ class FIFOScheduler:
         """Is the head request eligible for admission at time ``now``?"""
         return bool(self._queue) and self._queue[0].arrival_s <= now
 
+    def peek(self, now: float) -> Request | None:
+        """The request ``pop`` would return, without removing it."""
+        return self._queue[0] if self.ready(now) else None
+
     def pop(self, now: float) -> Request | None:
         """Admit the head request if it has arrived; None otherwise."""
-        return self._queue.popleft() if self.ready(now) else None
+        return self._queue.pop(0) if self.ready(now) else None
 
     def push_front(self, request: Request) -> None:
-        """Return a popped request to the head of the queue (admission was
-        rolled back — e.g. the page pool could not cover it this chunk)."""
-        self._queue.appendleft(request)
+        """Return a popped request to its arrival-ordered queue position
+        (admission was rolled back — the page pool could not cover it this
+        chunk, or the request was preempted and re-queued for resume)."""
+        insort(self._queue, request, key=_order)
+
+    def expire(self, now: float) -> list[Request]:
+        """Remove and return every queued request whose ``deadline_s`` has
+        passed — the batcher sheds them instead of serving them late."""
+        dead = [r for r in self._queue
+                if r.deadline_s is not None and r.deadline_s <= now]
+        if dead:
+            self._queue = [r for r in self._queue
+                           if r.deadline_s is None or r.deadline_s > now]
+        return dead
 
     def next_arrival(self) -> float | None:
         """Arrival time of the head request (None when the queue is empty)."""
         return self._queue[0].arrival_s if self._queue else None
+
+
+class TieredScheduler:
+    """Priority/deadline-aware admission: tiers, FIFO within a tier, aging.
+
+    ``pop(now)`` admits the ready tier-head with the highest *effective*
+    priority — nominal ``Request.priority`` plus one per ``age_after_s``
+    its head has waited (anti-starvation aging; ``age_after_s=None``
+    disables it) — breaking ties by earliest ``(arrival_s, rid)``. Within
+    a tier admission is strictly FIFO, and ``push_front`` re-inserts at the
+    request's arrival-ordered position in its own tier (the same rollback
+    contract as :class:`FIFOScheduler`). ``expire(now)`` removes every
+    queued request whose deadline has passed, whatever its tier.
+    """
+
+    def __init__(self, requests, *, age_after_s: float | None = None):
+        if age_after_s is not None and age_after_s <= 0:
+            raise ValueError(
+                f"age_after_s must be positive (got {age_after_s}); it is "
+                f"the wait that buys a queued tier head one effective tier")
+        self.age_after_s = age_after_s
+        self._tiers: dict[int, list[Request]] = {}
+        for r in sorted(requests, key=_order):
+            self._tiers.setdefault(r.priority, []).append(r)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._tiers.values())
+
+    def _effective(self, head: Request, now: float) -> float:
+        if self.age_after_s is None:
+            return head.priority
+        return head.priority + max(0.0, now - head.arrival_s) \
+            // self.age_after_s
+
+    def _pick(self, now: float) -> int | None:
+        """Tier whose ready head wins admission at ``now`` (None if none)."""
+        best = None
+        for tier, queue in self._tiers.items():
+            if not queue or queue[0].arrival_s > now:
+                continue
+            head = queue[0]
+            key = (-self._effective(head, now), head.arrival_s, head.rid)
+            if best is None or key < best[0]:
+                best = (key, tier)
+        return best[1] if best else None
+
+    def ready(self, now: float) -> bool:
+        return self._pick(now) is not None
+
+    def peek(self, now: float) -> Request | None:
+        tier = self._pick(now)
+        return self._tiers[tier][0] if tier is not None else None
+
+    def pop(self, now: float) -> Request | None:
+        tier = self._pick(now)
+        if tier is None:
+            return None
+        req = self._tiers[tier].pop(0)
+        if not self._tiers[tier]:
+            del self._tiers[tier]
+        return req
+
+    def push_front(self, request: Request) -> None:
+        """Return a popped request to its arrival-ordered position in its
+        tier (rollback or preemption re-queue)."""
+        insort(self._tiers.setdefault(request.priority, []), request,
+               key=_order)
+
+    def expire(self, now: float) -> list[Request]:
+        """Remove and return every queued request whose deadline passed."""
+        dead: list[Request] = []
+        for tier in list(self._tiers):
+            queue = self._tiers[tier]
+            dead += [r for r in queue
+                     if r.deadline_s is not None and r.deadline_s <= now]
+            kept = [r for r in queue
+                    if r.deadline_s is None or r.deadline_s > now]
+            if kept:
+                self._tiers[tier] = kept
+            else:
+                del self._tiers[tier]
+        return sorted(dead, key=_order)
+
+    def next_arrival(self) -> float | None:
+        heads = [q[0].arrival_s for q in self._tiers.values() if q]
+        return min(heads) if heads else None
+
+
+def select_victim(candidates: list[tuple[int, Request, int, int]],
+                  priority: int) -> int | None:
+    """Pick the slot to preempt so ``priority`` traffic can be admitted.
+
+    ``candidates`` rows are ``(slot, request, pages_held, n_emitted)`` for
+    every active, unfinished slot. Only requests with *strictly lower
+    nominal priority* are eligible — equal-priority traffic never preempts
+    itself (no eviction thrash), and aging never elevates anyone into a
+    preemptor. Among eligible victims: lowest priority first (evict the
+    least important), then most pages held (one eviction frees the most
+    cache), then fewest emitted tokens (cheapest re-prefill among equals),
+    then latest arrival. Returns the victim's slot, or None.
+    """
+    eligible = [(req.priority, -pages, emitted, -req.arrival_s, -req.rid,
+                 slot)
+                for slot, req, pages, emitted in candidates
+                if req.priority < priority]
+    return min(eligible)[-1] if eligible else None
 
 
 def poisson_trace(
@@ -76,6 +276,8 @@ def poisson_trace(
     rate_rps: float = 16.0,
     gen_lens: tuple[int, ...] = (8, 16, 32),
     prompt_lens: tuple[int, ...] | None = None,
+    priorities: tuple[int, ...] | None = None,
+    deadline_slack_s: float | None = None,
     seed: int = 0,
 ) -> list[Request]:
     """Build a Poisson arrival trace with mixed gen (and prompt) lengths.
@@ -85,8 +287,13 @@ def poisson_trace(
     random prompt of ``prompt_len`` tokens — or, with ``prompt_lens``, a
     ragged prompt whose length is drawn uniformly from that tuple (every
     entry must be <= ``prompt_len``, the batcher's compiled pad length).
-    Deterministic in ``seed`` so benchmark runs (and the CI bench-gate's
-    baseline comparison) replay the identical arrival trace.
+    ``priorities`` draws each request's tier uniformly from the tuple
+    (default: all tier 0); with ``deadline_slack_s``, every request whose
+    drawn priority is above the trace's minimum gets
+    ``deadline_s = arrival_s + deadline_slack_s`` (latency-sensitive tiers
+    carry deadlines; best-effort waits indefinitely). Deterministic in
+    ``seed`` so benchmark runs (and the CI bench-gate's baseline
+    comparison) replay the identical arrival trace.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
@@ -96,15 +303,23 @@ def poisson_trace(
             raise ValueError(
                 f"prompt_lens entries {bad} outside (0, {prompt_len}]; every "
                 f"ragged length must fit the batcher's compiled prompt_len")
-    return [
-        Request(
+    base_tier = min(priorities) if priorities else 0
+    out = []
+    for i in range(n_requests):
+        tier = int(rng.choice(priorities)) if priorities else 0
+        arrival = float(arrivals[i])
+        deadline = (arrival + deadline_slack_s
+                    if deadline_slack_s is not None and tier > base_tier
+                    else None)
+        out.append(Request(
             rid=i,
             prompt=rng.integers(
                 0, vocab,
                 int(rng.choice(prompt_lens)) if prompt_lens else prompt_len,
                 dtype=np.int32),
             max_new_tokens=int(rng.choice(gen_lens)),
-            arrival_s=float(arrivals[i]),
-        )
-        for i in range(n_requests)
-    ]
+            arrival_s=arrival,
+            priority=tier,
+            deadline_s=deadline,
+        ))
+    return out

@@ -34,12 +34,21 @@ class SlotError(LookupError):
 
 @dataclass
 class SlotRecord:
-    """One slot's host state while a request occupies it."""
+    """One slot's host state while a request occupies it.
+
+    For a resumed request (``request.resume`` is set) ``emitted`` starts
+    pre-populated with the snapshot's tokens, and ``first_admitted_s`` /
+    ``first_token_s`` carry the *original* admission's timeline — TTFT and
+    queue-time metrics describe the request's service history, not its
+    latest re-admission after preemption.
+    """
 
     index: int
     request: Request
     admitted_s: float
     emitted: list[int] = field(default_factory=list)
+    first_admitted_s: float | None = None
+    first_token_s: float | None = None
 
     @property
     def done(self) -> bool:
@@ -58,6 +67,7 @@ class SlotPool:
         self._slots: list[SlotRecord | None] = [None] * n_slots
         self.peak_active = 0
         self.total_admitted = 0
+        self.total_preempted = 0
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
@@ -103,3 +113,22 @@ class SlotPool:
                 f"{rec.request.max_new_tokens} tokens")
         self._slots[index] = None
         return rec, now
+
+    def preempt(self, index: int) -> SlotRecord:
+        """Evict the (unfinished) request in ``index`` and free the slot.
+
+        Unlike :meth:`retire` this is legal mid-generation — it is the slot
+        half of page-level preemption: the batcher snapshots the returned
+        record's ``emitted`` into a re-queued :class:`Request` and releases
+        the slot's cache pages. The device row needs no reset: the chunk
+        loop's rem==0 contract makes it inert until the next admission's
+        prefill overwrites it. Preempting a *finished* request is a caller
+        bug (it should be retired, keeping its completion)."""
+        rec = self.get(index)
+        if rec.done:
+            raise SlotError(
+                f"preempting slot {index} whose request {rec.request.rid} "
+                f"is finished — retire it instead")
+        self._slots[index] = None
+        self.total_preempted += 1
+        return rec

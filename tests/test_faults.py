@@ -1,0 +1,184 @@
+"""Fault injection: forced admission failures are recovered bit-exact.
+
+The equivalence claim (ISSUE 6 satellite): a PoolExhausted forced mid-trace
+— across {continuous, paged} x {GQA, MLA} — delays admissions but never
+changes tokens; completed requests are bit-exact with the fault-free run.
+Plus injector unit semantics (one-shot per rid, reset re-arms, typed
+AllocatorFault vs PoolExhausted) and the oversubscribed-termination
+guarantee: a 2x-oversubscribed bursty trace with random injected exhaustion
+ends with a typed completion for every request, no unhandled raise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.model import build_model
+from repro.serving import (
+    AllocatorFault,
+    ContinuousBatcher,
+    FaultInjector,
+    FaultPlan,
+    PoolExhausted,
+    Request,
+    bursty_trace,
+)
+
+PROMPT_LEN = 8
+PAGE_SIZE = 4
+
+CFGS = {
+    "gqa": get_smoke_config("granite-3-8b"),
+    "mla": get_smoke_config("minicpm3-4b"),
+}
+
+
+@pytest.fixture(scope="module", params=["gqa", "mla"])
+def arch(request):
+    cfg = CFGS[request.param]
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    return request.param, model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(vocab, gens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, PROMPT_LEN, dtype=np.int32),
+                    max_new_tokens=g)
+            for i, g in enumerate(gens)]
+
+
+# ------------------------------------------------------- injector semantics
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(p_exhaust=1.5)
+    with pytest.raises(ValueError, match="both"):
+        FaultPlan(exhaust_rids=(1, 2), fail_rids=(2, 3))
+
+
+def test_injector_fires_once_per_rid_and_reset_rearms():
+    inj = FaultInjector(FaultPlan(exhaust_rids=(0,), fail_rids=(1,)))
+    r0 = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    r1 = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    with pytest.raises(PoolExhausted, match="injected"):
+        inj.on_admit(r0)
+    with pytest.raises(AllocatorFault, match="injected"):
+        inj.on_admit(r1)
+    inj.on_admit(r0)      # the retry is not re-faulted
+    inj.on_admit(r1)
+    assert inj.summary() == {"n_exhaust": 1, "n_alloc_fail": 1}
+    inj.reset()           # a fresh run replays the same plan
+    assert inj.summary() == {"n_exhaust": 0, "n_alloc_fail": 0}
+    with pytest.raises(PoolExhausted):
+        inj.on_admit(r0)
+
+
+def test_injected_random_exhaustion_is_seeded():
+    plan = FaultPlan(p_exhaust=0.5, seed=7)
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+
+    def draw(inj, n=64):
+        out = []
+        for _ in range(n):
+            try:
+                inj.on_admit(req)
+                out.append(0)
+            except PoolExhausted:
+                out.append(1)
+        return out
+
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    seq = draw(a)
+    assert seq == draw(b)        # deterministic across injectors
+    assert 0 < sum(seq) < 64     # and actually intermittent
+    a.reset()
+    assert draw(a) == seq        # reset replays the same sequence
+
+
+# -------------------------------------------------- bit-exact recovery matrix
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_forced_exhaustion_recovers_bit_exact(arch, paged):
+    """{continuous, paged} x {GQA, MLA}: PoolExhausted forced on two rids
+    mid-trace — every request completes with tokens bit-exact vs the
+    fault-free run, and the injection is visible in the report."""
+    name, model, params = arch
+    reqs = _requests(model.cfg.vocab, [5, 2, 4, 3, 6])
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+              chunk_steps=2)
+    pg = dict(paged=True, page_size=PAGE_SIZE) if paged else {}
+
+    clean = ContinuousBatcher(model, params, **kw, **pg)
+    want = clean.run(reqs, wait_for_arrivals=False).tokens_by_rid()
+
+    inj = FaultInjector(FaultPlan(exhaust_rids=(0, 3)))
+    faulty = ContinuousBatcher(model, params, **kw, **pg, faults=inj)
+    report = faulty.run(reqs, wait_for_arrivals=False, clock="chunks")
+
+    assert report.faults == {"n_exhaust": 2, "n_alloc_fail": 0}
+    assert report.n_requeues >= 2            # each injection cost a retry
+    assert len(report.ok_completions) == 5   # nothing shed, nothing raised
+    for c in report.completions:
+        np.testing.assert_array_equal(
+            c.tokens, want[c.rid],
+            err_msg=f"{name} paged={paged}: request {c.rid} diverged after "
+                    f"injected exhaustion")
+    assert report.summary()["faults"]["n_exhaust"] == 2
+
+
+def test_allocator_fault_is_retried_never_preempted(arch):
+    """AllocatorFault on an interactive rid under preemption=True: the
+    batcher retries at the next boundary but must not evict anyone —
+    eviction can't fix a broken allocator."""
+    _, model, params = arch
+    rng = np.random.default_rng(3)
+    trace = [
+        Request(rid=0, prompt=rng.integers(0, model.cfg.vocab, PROMPT_LEN,
+                                           dtype=np.int32),
+                max_new_tokens=6),
+        Request(rid=1, prompt=rng.integers(0, model.cfg.vocab, PROMPT_LEN,
+                                           dtype=np.int32),
+                max_new_tokens=4, arrival_s=1.5, priority=1),
+    ]
+    inj = FaultInjector(FaultPlan(fail_rids=(1,)))
+    batcher = ContinuousBatcher(model, params, n_slots=2,
+                                prompt_len=PROMPT_LEN, max_new_tokens=6,
+                                chunk_steps=2, scheduler="tiered",
+                                preemption=True, faults=inj)
+    report = batcher.run(trace, clock="chunks")
+    assert report.faults == {"n_exhaust": 0, "n_alloc_fail": 1}
+    assert report.n_preemptions == 0         # a free slot existed anyway —
+    assert report.n_requeues == 1            # and the fault only ever retries
+    assert all(c.status == "ok" for c in report.completions)
+
+
+# ------------------------------------------------ oversubscribed termination
+def test_oversubscribed_bursty_trace_terminates_with_typed_completions(arch):
+    """2x-oversubscribed bursty trace + random injected exhaustion: the run
+    ends (no spin, no unhandled PoolExhausted) and every request leaves as
+    a typed ok/shed completion."""
+    _, model, params = arch
+    n_slots, gen = 2, 6
+    trace = bursty_trace(
+        12, prompt_len=PROMPT_LEN, vocab=model.cfg.vocab,
+        burst_size=2 * n_slots, burst_gap_s=2.0, gen_lens=(2, 4, gen),
+        priorities=(0, 1), deadline_slack_s=20.0, seed=5)
+    blocks = -(-(PROMPT_LEN + gen) // PAGE_SIZE)
+    inj = FaultInjector(FaultPlan(p_exhaust=0.2, seed=11))
+    batcher = ContinuousBatcher(
+        model, params, n_slots=n_slots, prompt_len=PROMPT_LEN,
+        max_new_tokens=gen, chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+        n_pages=1 + n_slots * blocks // 2,     # half-provisioned pages too
+        scheduler="tiered", age_after_s=4.0, preemption=True,
+        max_requeues=8, faults=inj)
+    report = batcher.run(trace, clock="chunks")
+    assert len(report.completions) == 12
+    assert {c.status for c in report.completions} <= {"ok", "shed"}
+    for c in report.completions:
+        if c.status == "shed":
+            assert c.shed_reason in ("deadline", "retries")
+    # the summary carries the whole overload story
+    s = report.summary()
+    assert s["faults"]["n_exhaust"] > 0      # the soak actually injected
+    assert s["requeues"] >= s["faults"]["n_exhaust"]
+    assert s["shed"] == report.n_shed

@@ -295,3 +295,125 @@ def test_block_table_sentinel_invariants(data):
         big.assign(0, [1, 2, 3])
     with pytest.raises(SlotError):                  # release of an empty slot
         BlockTableSet(1, 2).release(0)
+
+
+# --------------------------------------------------------------------------
+# TieredScheduler (ISSUE 6): priority/deadline admission under random
+# traces. Example-based coverage lives in tests/test_preempt.py — these
+# drive random tier mixes, arrival patterns, and pop/push interleavings.
+# --------------------------------------------------------------------------
+def _tiered_trace(data, n, tiers=3, deadlines=False):
+    from repro.serving.scheduler import Request
+
+    reqs = []
+    for i in range(n):
+        arrival = data.draw(st.floats(0, 10), label=f"arrival{i}")
+        deadline = None
+        if deadlines and data.draw(st.booleans(), label=f"has_dl{i}"):
+            deadline = arrival + data.draw(st.floats(0, 5),
+                                           label=f"slack{i}")
+        reqs.append(Request(
+            rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+            arrival_s=arrival,
+            priority=data.draw(st.integers(0, tiers - 1),
+                               label=f"tier{i}"),
+            deadline_s=deadline))
+    return reqs
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_tiered_fifo_within_tier(data):
+    """Draining any trace after all arrivals: within one tier, admission
+    is exactly (arrival_s, rid) order — tiers never reorder their own."""
+    from repro.serving.scheduler import TieredScheduler
+
+    reqs = _tiered_trace(data, data.draw(st.integers(1, 24), label="n"))
+    sched = TieredScheduler(reqs)
+    popped = []
+    while len(sched):
+        popped.append(sched.pop(100.0))
+    assert len(popped) == len(reqs)
+    for tier in {r.priority for r in reqs}:
+        order = [(r.arrival_s, r.rid) for r in popped if r.priority == tier]
+        assert order == sorted(order)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_tiered_push_front_round_trips(data):
+    """pop -> push_front is the identity on the drain order, for any number
+    of rollbacks pushed back in any order (the one-chunk rollback contract
+    shared with FIFOScheduler)."""
+    from repro.serving.scheduler import TieredScheduler
+
+    reqs = _tiered_trace(data, data.draw(st.integers(1, 16), label="n"))
+    now = 100.0
+    want = []
+    ref = TieredScheduler(reqs)
+    while len(ref):
+        want.append(ref.pop(now).rid)
+
+    sched = TieredScheduler(reqs)
+    k = data.draw(st.integers(1, len(reqs)), label="k")
+    popped = [sched.pop(now) for _ in range(k)]
+    for r in data.draw(st.permutations(popped), label="order"):
+        sched.push_front(r)
+    assert [sched.pop(now).rid for _ in range(len(reqs))] == want
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_tiered_expired_never_served(data):
+    """expire(now) + pop(now) partition the queue: a request whose deadline
+    passed is always in the expired set, never admitted."""
+    from repro.serving.scheduler import TieredScheduler
+
+    reqs = _tiered_trace(data, data.draw(st.integers(1, 16), label="n"),
+                         deadlines=True)
+    now = data.draw(st.floats(0, 15), label="now")
+    sched = TieredScheduler(reqs)
+    dead = {r.rid for r in sched.expire(now)}
+    assert dead == {r.rid for r in reqs
+                    if r.deadline_s is not None and r.deadline_s <= now}
+    while len(sched):
+        r = sched.pop(100.0)
+        assert r.rid not in dead
+        assert r.deadline_s is None or r.deadline_s > now
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(**DEEP)
+def test_tiered_aging_prevents_starvation(data):
+    """With aging on and time advancing, a stuck best-effort head is always
+    admitted within a bounded number of pops, no matter how much fresh
+    higher-tier traffic keeps arriving (no starvation); with aging off, the
+    same load starves it forever."""
+    from repro.serving.scheduler import Request, TieredScheduler
+
+    tiers = data.draw(st.integers(2, 4), label="tiers")
+    age = data.draw(st.floats(0.5, 2.0), label="age_after_s")
+    victim = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=1,
+                     arrival_s=0.0, priority=0)
+    # fresh top-tier traffic arriving forever, one per time step
+    pressure = [Request(rid=1 + i, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=1, arrival_s=float(i),
+                        priority=tiers - 1)
+                for i in range(200)]
+
+    aged = TieredScheduler([victim] + pressure, age_after_s=age)
+    admitted_at = None
+    for step in range(200):
+        r = aged.pop(float(step))
+        if r is not None and r.rid == 0:
+            admitted_at = step
+            break
+    # the victim outranks tier (tiers-1) once it has aged that many windows
+    bound = int((tiers - 1) * age) + 2
+    assert admitted_at is not None and admitted_at <= bound
+
+    starved = TieredScheduler([victim] + pressure)
+    for step in range(200):
+        r = starved.pop(float(step))
+        assert r is None or r.rid != 0      # nominal tiers never admit it

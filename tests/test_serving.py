@@ -260,6 +260,53 @@ def test_push_front_restores_head_position():
     assert [sched.pop(2.0).rid for _ in range(3)] == [0, 1, 2]
 
 
+def test_multiple_push_backs_in_one_chunk_preserve_arrival_order():
+    """Rolling back several admissions at one chunk boundary (pages dry
+    after a partial admit pass, preemption re-queues) must restore exactly
+    the pre-pop queue — the sorted-insert push_front contract. A literal
+    deque.appendleft per push would reverse the batch."""
+    reqs = _requests([2] * 5)
+    reqs = [Request(r.rid, r.prompt, r.max_new_tokens, arrival_s=0.1 * r.rid)
+            for r in reqs]
+    sched = FIFOScheduler(reqs)
+    popped = [sched.pop(2.0) for _ in range(3)]
+    assert [r.rid for r in popped] == [0, 1, 2]
+    for r in popped:                    # push back in pop order...
+        sched.push_front(r)
+    assert [sched.pop(2.0).rid for _ in range(5)] == [0, 1, 2, 3, 4]
+    sched = FIFOScheduler(reqs)
+    popped = [sched.pop(2.0) for _ in range(3)]
+    for r in reversed(popped):          # ...or in any other order
+        sched.push_front(r)
+    assert [sched.pop(2.0).rid for _ in range(5)] == [0, 1, 2, 3, 4]
+
+
+def test_report_summary_carries_oversubscription_counters():
+    """requeues / preemptions / shed / faults surface in summary() — the
+    bench jsons and serve logs read the overload story from there."""
+    from repro.serving import Completion, ServeReport
+
+    report = ServeReport(
+        completions=[
+            Completion(rid=0, tokens=np.arange(4, dtype=np.int32), slot=0,
+                       arrival_s=0.0, admitted_s=0.5, finished_s=2.0,
+                       priority=1, requeues=2, preemptions=1,
+                       first_token_s=1.0),
+            Completion(rid=1, tokens=np.zeros(0, np.int32), slot=-1,
+                       arrival_s=0.0, admitted_s=1.0, finished_s=1.0,
+                       status="shed", shed_reason="deadline"),
+        ],
+        wall_s=2.0, n_requeues=3, n_preemptions=1, n_shed=1,
+        faults={"n_exhaust": 2, "n_alloc_fail": 0})
+    s = report.summary()
+    assert (s["requeues"], s["preemptions"], s["shed"]) == (3, 1, 1)
+    assert s["faults"] == {"n_exhaust": 2, "n_alloc_fail": 0}
+    # goodput counts only the served request's 4 tokens; ttft skips the shed
+    assert s["goodput_tok_s"] == pytest.approx(2.0)
+    assert s["p95_ttft_s"] == pytest.approx(1.0)
+    assert report.ttft_percentile(95, priority=0) == 0.0   # no ok tier-0
+
+
 def test_paged_requeue_preserves_fifo_order(served):
     """The PoolExhausted -> push_front path (exercised directly, not via the
     paged batcher test's incidental traffic): with a page pool that fits one
@@ -322,6 +369,21 @@ def test_check_regression_gate(tmp_path):
     # the gate)
     shrunk = {"pipeline": {"batch8": {"packed": {"toks_per_s": 980.0}}}}
     assert len(compare(base, shrunk, 0.25)[0]) == 2  # tok_s + match gone
+
+    # latency leaves gate on RISING past the baseline (sign-flipped rule):
+    # p95 TTFT creeping up fails, dropping passes, zero baseline is noted
+    lat_base = {"interactive": {"p95_ttft_s": 1.0}}
+    assert compare(lat_base, {"interactive": {"p95_ttft_s": 0.5}},
+                   0.25)[0] == []
+    assert compare(lat_base, {"interactive": {"p95_ttft_s": 1.2}},
+                   0.25)[0] == []                     # within threshold
+    slow_lat = compare(lat_base, {"interactive": {"p95_ttft_s": 1.5}}, 0.25)
+    assert len(slow_lat[0]) == 1 and "LAT" in slow_lat[0][0]
+    # an empty-tier 0.0 baseline can't anchor a ratio — note, don't gate
+    assert compare({"interactive": {"p95_ttft_s": 0.0}},
+                   {"interactive": {"p95_ttft_s": 9.9}}, 0.25)[0] == []
+    # and a vanished latency leaf fails like a vanished throughput leaf
+    assert len(compare(lat_base, {"interactive": {}}, 0.25)[0]) == 1
 
     import json
     bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
