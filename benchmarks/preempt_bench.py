@@ -51,7 +51,7 @@ from benchmarks.serving_bench import (
     SERVE_CFG,
 )
 from repro.models.model import build_model
-from repro.serving import ContinuousBatcher, bursty_trace
+from repro.serving import ContinuousBatcher, ServeConfig, bursty_trace
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_preempt.json")
@@ -90,14 +90,16 @@ def preempt_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
     n_pages = 1 + (N_SLOTS * full_blocks) // OVERSUB
 
     # token reference: fully provisioned dense FIFO on the same trace
-    ref_b = ContinuousBatcher(model, params, **kw)
+    ref_b = ContinuousBatcher(model, params, ServeConfig.build(**kw))
     ref_toks = ref_b.run(trace, wait_for_arrivals=False).tokens_by_rid()
 
     over = dict(paged=True, page_size=PAGE_SIZE, n_pages=n_pages)
-    fifo_b = ContinuousBatcher(model, params, **kw, **over)
-    tier_b = ContinuousBatcher(model, params, **kw, **over,
-                               scheduler="tiered", age_after_s=AGE_AFTER_S,
-                               preemption=True)
+    fifo_b = ContinuousBatcher(model, params, ServeConfig.build(**kw, **over))
+    tier_b = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     **kw, **over, scheduler="tiered", age_after_s=AGE_AFTER_S,
+                     preemption=True))
     fifo_b.run(trace, wait_for_arrivals=False)       # warm all compiles
     tier_b.run(trace, wait_for_arrivals=False)
     # best-of-REPEAT replays per cell: min wall time filters host contention

@@ -8,6 +8,7 @@
   PYTHONPATH=src python -m benchmarks.run --only paged    # BENCH_paged.json
   PYTHONPATH=src python -m benchmarks.run --only spec     # BENCH_spec.json
   PYTHONPATH=src python -m benchmarks.run --only preempt  # BENCH_preempt.json
+  PYTHONPATH=src python -m benchmarks.run --only prefix   # BENCH_prefix.json
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m benchmarks.run --only sharded  # BENCH_sharded.json
 
@@ -39,7 +40,7 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode serving paged sharded spec preempt")
+                         "decode serving paged sharded spec preempt prefix")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed for the decode/serving/paged/sharded "
                          "benches (explicit so the CI bench-gate replays the "
@@ -100,6 +101,9 @@ def main(argv=None) -> int:
     if want("preempt"):
         from benchmarks import preempt_bench
         preempt_bench.preempt_bench(rows, seed=args.seed)
+    if want("prefix"):
+        from benchmarks import prefix_bench
+        prefix_bench.prefix_bench(rows, seed=args.seed)
     return 0
 
 

@@ -43,7 +43,8 @@ from benchmarks.common import Row
 from repro.configs.base import ModelConfig
 from repro.launch.generate import make_generate
 from repro.models.model import build_model
-from repro.serving import Completion, ContinuousBatcher, ServeReport, poisson_trace
+from repro.serving import (Completion, ContinuousBatcher, ServeConfig,
+                           ServeReport, poisson_trace)
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_serving.json")
@@ -126,8 +127,10 @@ def serving_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
         rate_rps=RATE_RPS, gen_lens=GEN_LENS, seed=seed)
 
     batcher = ContinuousBatcher(
-        model, params, n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
-        max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS)
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+                      max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS))
     batcher.run(trace, wait_for_arrivals=False)      # warm all compiles
     pipes = _warm_static_pipes(model, params, trace, n_slots=N_SLOTS,
                                prompt_len=PROMPT_LEN)
@@ -197,9 +200,11 @@ def paged_bench(rows: Row, out_json: str = PAGED_JSON, seed: int = 0) -> dict:
     kw = dict(n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
               max_new_tokens=max(GEN_LENS), chunk_steps=CHUNK_STEPS)
 
-    dense_b = ContinuousBatcher(model, params, **kw)
-    paged_b = ContinuousBatcher(model, params, paged=True,
-                                page_size=PAGE_SIZE, **kw)
+    dense_b = ContinuousBatcher(model, params, ServeConfig.build(**kw))
+    paged_b = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      paged=True, page_size=PAGE_SIZE, **kw))
     dense_b.run(trace, wait_for_arrivals=False)      # warm all compiles
     paged_b.run(trace, wait_for_arrivals=False)
     dense = min((dense_b.run(trace, wait_for_arrivals=True)

@@ -42,7 +42,7 @@ from repro.data import calibration_batch
 from repro.launch.generate import make_generate, serve_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request, ServeConfig
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_sharded.json")
@@ -100,9 +100,11 @@ def _static_cell(model, params, prompts, mesh) -> tuple[dict, np.ndarray]:
 
 def _continuous_cell(model, params, requests, mesh) -> tuple[dict, dict]:
     batcher = ContinuousBatcher(
-        model, params, n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
-        max_new_tokens=GEN_LEN, chunk_steps=CHUNK_STEPS, paged=True,
-        page_size=PAGE_SIZE, mesh=mesh)
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+                      max_new_tokens=GEN_LEN, chunk_steps=CHUNK_STEPS,
+                      paged=True, page_size=PAGE_SIZE, mesh=mesh))
     batcher.run(requests, wait_for_arrivals=False)      # warm compiles
     rep = min((batcher.run(requests, wait_for_arrivals=False)
                for _ in range(REPEAT)), key=lambda r: r.wall_s)

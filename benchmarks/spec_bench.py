@@ -49,7 +49,7 @@ from repro.core.stbllm import STBConfig
 from repro.data import calibration_batch
 from repro.launch.generate import spec_cache_len
 from repro.models.model import build_model
-from repro.serving import ContinuousBatcher, poisson_trace
+from repro.serving import ContinuousBatcher, ServeConfig, poisson_trace
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_spec.json")
@@ -75,10 +75,15 @@ def _ab_cell(model, target_params, draft_params, trace, kw, rows: Row,
              name: str) -> dict:
     """One vanilla-vs-speculative A/B on ``target_params`` with compiles
     warmed untimed and best-of-REPEAT wall minimums."""
-    vanilla_b = ContinuousBatcher(model, target_params, **kw)
-    spec_b = ContinuousBatcher(model, target_params, speculative=True,
-                               draft_params=draft_params, draft_k=DRAFT_K,
-                               **kw)
+    vanilla_b = ContinuousBatcher(
+                    model, target_params,
+                    ServeConfig.build(
+                        **kw))
+    spec_b = ContinuousBatcher(
+                 model, target_params,
+                 ServeConfig.build(
+                     speculative=True, draft_params=draft_params,
+                     draft_k=DRAFT_K, **kw))
     vanilla_b.run(trace, wait_for_arrivals=False)
     spec_b.run(trace, wait_for_arrivals=False)
     vanilla = min((vanilla_b.run(trace, wait_for_arrivals=True)

@@ -144,6 +144,61 @@ def _make_sampler(vocab: int, temperature: float):
     return sample
 
 
+def make_suffix_prefill(model, *, temperature: float = 0.0, mesh=None,
+                        shardings=None):
+    """Compile the prefix-cache admission path: prefill only a prompt's
+    unmatched suffix, writing K/V straight into the shared page pool.
+
+    When the radix prefix cache matches a prompt's leading pages, the new
+    slot's block table already points at pages holding valid K/V for
+    positions ``[0, start)`` — only positions ``[start, tlen)`` need
+    computing. That is exactly a batch-1 **multi-token** ``decode_step``
+    over the page pool: the suffix tokens ride in as one ``[1, T_pad]``
+    block at position ``start``, attention reads the matched prefix
+    through the block table, and the suffix's K/V lands directly in the
+    request's own fresh pages (no scatter pass — the pool is the cache
+    argument and is donated). The first generated token is sampled at the
+    true last prompt position ``tlen - 1``, mirroring the fused prefill's
+    ragged-prompt contract; pad positions past ``tlen`` write into the
+    request's reserved pages and are overwritten as decode advances.
+
+    Bit-exactness with the full fused prefill follows from the PR 5/6
+    chain: a multi-token decode_step equals the same tokens fed one step
+    at a time, which equals fused prefill — and causality makes position
+    ``j``'s K/V depend only on tokens ``<= j``, so reading the prefix from
+    shared pages (computed under a different pad shape) changes nothing.
+
+    Returned fn signature::
+
+        tok0, caches = fn(params, caches, tokens, start, tlen, tables, key)
+
+    with ``tokens`` [1, T_pad] (suffix, zero-padded to a page multiple so
+    jit retraces once per suffix bucket), ``start``/``tlen`` scalars, and
+    ``tables`` the slot's [1, max_blocks + 1] block-table row. ``mesh``
+    takes the usual ``(params, pool, replicated)`` sharding triple — the
+    draft tree needs its own build (its pytree structure differs).
+    """
+    sample = _make_sampler(model.cfg.vocab, temperature)
+    jit_kw: dict = {}
+    if mesh is not None:
+        if shardings is None:
+            raise ValueError("sharded make_suffix_prefill needs the "
+                             "(params, pool, replicated) sharding triple")
+        p_shard, c_shard, repl = shardings
+        jit_kw = dict(
+            in_shardings=(p_shard, c_shard, repl, repl, repl, repl, repl),
+            out_shardings=(repl, c_shard))
+
+    def suffix_prefill(params, caches, tokens, start, tlen, tables, key):
+        logits, caches = model.decode_step(params, caches, tokens, start,
+                                           None, block_tables=tables)
+        logits = jax.lax.dynamic_slice_in_dim(logits, tlen - 1 - start, 1,
+                                              axis=1)
+        return sample(logits, key), caches
+
+    return jax.jit(suffix_prefill, donate_argnums=(1,), **jit_kw)
+
+
 def make_generate(model, *, prompt_len: int, gen_len: int,
                   temperature: float = 0.0, prefill_mode: str = "auto",
                   donate: bool = True, mesh=None, params=None,

@@ -31,6 +31,22 @@ per layer): admission reserves pages, retirement frees them, and cache HBM
 tracks live tokens instead of ``n_slots * max_len`` — tokens stay bit-exact
 vs the dense pool at temperature 0.
 
+``--prefix-cache`` (with ``--continuous --paged``) shares page-aligned
+prompt prefixes across requests through a radix trie of refcounted,
+copy-on-write pages: a new admission points its block table at the cached
+prefix's pages and prefills only the unmatched suffix, cutting prefill
+FLOPs and resident cache bytes for shared-system-prompt traffic while
+staying bit-exact with the unshared run at temperature 0. ``--prefix-lru``
+(default) evicts unreferenced cached prefixes oldest-first when the pool
+runs dry; ``--no-prefix-lru`` keeps them resident.
+
+Programmatically, continuous serving is configured with one typed object —
+``serve(arch, config=ServeConfig(...))`` — whose sections (pool, scheduler,
+speculation, preemption, prefix_cache) the argument groups below mirror
+one-to-one; ``ServeConfig.from_args`` converts this CLI's namespace. The
+old flat ``serve(continuous=True, n_slots=..., ...)`` kwargs still work for
+one release behind a DeprecationWarning.
+
 ``--speculative --draft-k K`` self-speculates: the packed PTQ planes draft
 K tokens per round with cheap single-token steps, the original dense params
 run ONE multi-token verify over the drafts, and the longest greedy-matching
@@ -65,7 +81,9 @@ For local testing force a host mesh first:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +101,7 @@ from repro.launch.generate import (
 )
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models.model import build_model
+from repro.serving.config import PTQ_DRAFT, ServeConfig
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serve").info
@@ -114,6 +133,7 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           quantize: bool = True, packed: bool = False, seed: int = 0,
           params=None, dtype=jnp.float32, temperature: float = 0.0,
           legacy_loop: bool = False, prefill_mode: str = "auto",
+          config: ServeConfig | None = None,
           continuous: bool = False, n_slots: int = 4, chunk_steps: int = 8,
           gen_lens: tuple[int, ...] | None = None, paged: bool = False,
           page_size: int = 16, n_pages: int | None = None,
@@ -122,21 +142,45 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           draft_k: int = 4, scheduler: str = "fifo",
           priority_tiers: int | None = None, deadline: float | None = None,
           preemption: bool = False, max_requeues: int | None = None,
-          age_after: float | None = None) -> dict:
+          age_after: float | None = None, prefix_cache: bool = False,
+          prefix_lru: bool = True) -> dict:
+    if config is not None:
+        # config= IS the continuous-serving request: every pool/loop knob
+        # comes from it, and the flat continuous kwargs must stay at their
+        # defaults (the CLI builds config via ServeConfig.from_args).
+        # priority_tiers / deadline / gen_lens stay serve() kwargs — they
+        # shape the request *trace*, not the batcher.
+        continuous = True
+        prompt_len = config.pool.prompt_len
+        gen_len = config.pool.max_new_tokens
+        temperature = config.temperature
+        prefill_mode = config.prefill_mode
+        speculative = config.speculation.enabled
+        seed = config.seed
     if continuous and legacy_loop:
         raise ValueError("--continuous and --legacy-loop are exclusive "
                          "serve loops")
-    oversub = (scheduler != "fifo" or priority_tiers is not None
-               or deadline is not None or preemption
-               or max_requeues is not None or age_after is not None)
-    if oversub and not continuous:
-        raise ValueError("--scheduler/--priority-tiers/--deadline/"
-                         "--preemption/--max-requeues/--age-after are "
-                         "continuous-batching knobs; add --continuous")
-    if (priority_tiers is not None or deadline is not None
-            or age_after is not None) and scheduler != "tiered":
-        raise ValueError("--priority-tiers/--deadline/--age-after need the "
-                         "tier-aware queue; add --scheduler tiered")
+    if config is None:
+        oversub = (scheduler != "fifo" or priority_tiers is not None
+                   or deadline is not None or preemption
+                   or max_requeues is not None or age_after is not None)
+        if oversub and not continuous:
+            raise ValueError("--scheduler/--priority-tiers/--deadline/"
+                             "--preemption/--max-requeues/--age-after are "
+                             "continuous-batching knobs; add --continuous")
+        if (priority_tiers is not None or deadline is not None
+                or age_after is not None) and scheduler != "tiered":
+            raise ValueError("--priority-tiers/--deadline/--age-after need "
+                             "the tier-aware queue; add --scheduler tiered")
+        if prefix_cache and not continuous:
+            raise ValueError("--prefix-cache shares KV pages across the "
+                             "continuous batcher's admissions; add "
+                             "--continuous (and --paged)")
+    elif ((priority_tiers is not None or deadline is not None)
+            and config.scheduler.kind != "tiered"):
+        raise ValueError("--priority-tiers/--deadline shape the trace's "
+                         "priority tiers; they need "
+                         "SchedulerConfig(kind='tiered')")
     if priority_tiers is not None and priority_tiers <= 0:
         raise ValueError(f"--priority-tiers must be positive "
                          f"(got {priority_tiers})")
@@ -227,6 +271,40 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         from repro.serving import ContinuousBatcher, Request
 
         lens = tuple(gen_lens) if gen_lens else (gen_len,)
+        if config is None:
+            warnings.warn(
+                "serve(continuous=True, n_slots=..., ...) flat kwargs are "
+                "deprecated; pass config=ServeConfig(...) instead "
+                "(ServeConfig.build(...) accepts the old spelling). The "
+                "kwargs path will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig.build(
+                n_slots=n_slots, prompt_len=prompt_len,
+                max_new_tokens=max(lens), chunk_steps=chunk_steps,
+                temperature=temperature, prefill_mode=prefill_mode,
+                seed=seed, paged=paged, page_size=page_size,
+                n_pages=n_pages, speculative=speculative,
+                draft_params=PTQ_DRAFT if speculative else None,
+                draft_k=draft_k, scheduler=scheduler, age_after_s=age_after,
+                preemption=preemption, max_requeues=max_requeues,
+                prefix_cache=prefix_cache, prefix_lru=prefix_lru)
+        if max(lens) > config.pool.max_new_tokens:
+            raise ValueError(
+                f"--gen-lens max {max(lens)} exceeds the pool's "
+                f"max_new_tokens {config.pool.max_new_tokens}")
+        if config.mesh is None and mesh is not None:
+            config = dataclasses.replace(config, mesh=mesh)
+        sp = config.speculation
+        if sp.enabled and sp.draft_params == PTQ_DRAFT:
+            # resolve the sentinel: the PTQ pass above just built the
+            # packed planes this config asked to draft with
+            config = dataclasses.replace(
+                config, speculation=dataclasses.replace(
+                    sp, draft_params=draft_params))
+        oversub = (config.scheduler.kind != "fifo"
+                   or config.preemption.enabled
+                   or config.preemption.max_requeues is not None
+                   or priority_tiers is not None or deadline is not None)
         tiers = priority_tiers or 1
         requests = [
             Request(rid=i, prompt=prompts[i],
@@ -238,14 +316,7 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
                                 and i % tiers > 0 else None))
             for i in range(n_requests)
         ]
-        batcher = ContinuousBatcher(
-            model, params, n_slots=n_slots, prompt_len=prompt_len,
-            max_new_tokens=max(lens), chunk_steps=chunk_steps,
-            temperature=temperature, prefill_mode=prefill_mode, seed=seed,
-            paged=paged, page_size=page_size, n_pages=n_pages, mesh=mesh,
-            speculative=speculative, draft_params=draft_params,
-            draft_k=draft_k, scheduler=scheduler, age_after_s=age_after,
-            preemption=preemption, max_requeues=max_requeues)
+        batcher = ContinuousBatcher(model, params, config)
         # wait_for_arrivals=False drops deadlines with the arrival times
         # they anchor to; overload runs keep them (all arrivals are 0, so
         # every request is still eligible immediately) and replay on the
@@ -343,95 +414,127 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-8b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--no-smoke", dest="smoke", action="store_false",
-                    help="serve the full-size config (not the CPU smoke one)")
-    ap.add_argument("--n-requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--nm", default="4:8")
-    ap.add_argument("--no-quantize", dest="quantize", action="store_false")
-    ap.add_argument("--packed", action="store_true",
-                    help="serve from PackedLinear planes (sub-1-bit weights)")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--legacy-loop", action="store_true",
-                    help="per-token Python loop (pre-pipeline baseline)")
-    ap.add_argument("--continuous", action="store_true",
-                    help="slot-pooled continuous batching (repro.serving)")
-    ap.add_argument("--n-slots", type=int, default=4,
-                    help="decode slots in the continuous KV pool (B_max)")
-    ap.add_argument("--chunk-steps", type=int, default=8,
-                    help="decode steps per chunk between admit/retire passes")
-    ap.add_argument("--gen-lens", default=None,
-                    help="comma-separated gen lengths cycled over requests "
-                         "(--continuous only), e.g. 8,16,32")
-    ap.add_argument("--paged", action="store_true",
-                    help="back the continuous KV cache with a page pool + "
-                         "block tables (repro.serving.paged) instead of "
-                         "dense [n_slots, max_len] rows")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per KV page (--paged)")
-    ap.add_argument("--n-pages", type=int, default=None,
-                    help="device pages per layer incl. the reserved null "
-                         "page (--paged; default fully provisions n_slots "
-                         "max-length requests)")
-    ap.add_argument("--tp", type=int, default=None,
-                    help="tensor-parallel degree: serve over a "
-                         "(n_devices // tp, tp) ('data', 'model') host mesh")
-    ap.add_argument("--mesh", default=None,
-                    help="explicit DxM serve mesh, e.g. 2x4 (data x model); "
-                         "exclusive with --tp")
-    ap.add_argument("--speculative", action="store_true",
-                    help="self-speculative decoding: the packed PTQ planes "
-                         "draft --draft-k tokens per round, one dense "
-                         "multi-token verify accepts the longest greedy-"
-                         "matching prefix (+1 corrected token) — emitted "
-                         "tokens are bit-exact with dense greedy decode")
-    ap.add_argument("--draft-k", type=int, default=4,
-                    help="draft tokens per speculative round (--speculative; "
-                         "see README guidance — higher k amortizes the "
-                         "verify better but wastes more draft work when "
-                         "the accept rate is low)")
-    ap.add_argument("--scheduler", choices=("fifo", "tiered"),
-                    default="fifo",
-                    help="admission policy (--continuous): arrival-ordered "
-                         "FIFO or priority/deadline tiers with aging")
-    ap.add_argument("--priority-tiers", type=int, default=None,
-                    help="cycle requests over N priority tiers "
-                         "(--scheduler tiered; higher tier admits first)")
-    ap.add_argument("--deadline", type=float, default=None,
-                    help="start deadline for above-minimum tiers, in decode "
-                         "chunks — still-queued requests past it are shed "
-                         "(--scheduler tiered)")
-    ap.add_argument("--preemption", action="store_true",
-                    help="evict a lower-priority victim when slots/pages "
-                         "run out; the victim resumes by re-prefill, "
-                         "bit-exact at temperature 0 (--continuous)")
-    ap.add_argument("--max-requeues", type=int, default=None,
-                    help="failed-admission retries before a request is "
-                         "shed (default: retry while in-flight work can "
-                         "still drain)")
-    ap.add_argument("--age-after", type=float, default=None,
-                    help="chunks of waiting that buy a queued tier head "
-                         "one effective priority tier (anti-starvation; "
-                         "--scheduler tiered)")
+    # the argument groups mirror the ServeConfig sections one-to-one
+    # (ServeConfig.from_args consumes this namespace); groups only shape
+    # --help, every dest is unchanged from the flat CLI
+    ap = argparse.ArgumentParser(
+        description="PTQ a model sub-1-bit, then serve batched requests "
+                    "(static pipeline, or --continuous slot-pooled serving "
+                    "configured one-to-one with repro.serving.ServeConfig)")
+    g = ap.add_argument_group("model / quantization")
+    g.add_argument("--arch", default="granite-3-8b")
+    g.add_argument("--smoke", action="store_true", default=True)
+    g.add_argument("--no-smoke", dest="smoke", action="store_false",
+                   help="serve the full-size config (not the CPU smoke one)")
+    g.add_argument("--nm", default="4:8")
+    g.add_argument("--no-quantize", dest="quantize", action="store_false")
+    g.add_argument("--packed", action="store_true",
+                   help="serve from PackedLinear planes (sub-1-bit weights)")
+    g = ap.add_argument_group("workload (request trace)")
+    g.add_argument("--n-requests", type=int, default=8)
+    g.add_argument("--prompt-len", type=int, default=32)
+    g.add_argument("--gen-len", type=int, default=32)
+    g.add_argument("--gen-lens", default=None,
+                   help="comma-separated gen lengths cycled over requests "
+                        "(--continuous only), e.g. 8,16,32")
+    g.add_argument("--temperature", type=float, default=0.0)
+    g.add_argument("--seed", type=int, default=0,
+                   help="RNG seed for params, prompts, and serve sampling")
+    g.add_argument("--legacy-loop", action="store_true",
+                   help="per-token Python loop (pre-pipeline baseline)")
+    g = ap.add_argument_group("pool (ServeConfig.pool)")
+    g.add_argument("--continuous", action="store_true",
+                   help="slot-pooled continuous batching (repro.serving)")
+    g.add_argument("--n-slots", type=int, default=4,
+                   help="decode slots in the continuous KV pool (B_max)")
+    g.add_argument("--chunk-steps", type=int, default=8,
+                   help="decode steps per chunk between admit/retire passes")
+    g.add_argument("--paged", action="store_true",
+                   help="back the continuous KV cache with a page pool + "
+                        "block tables (repro.serving.paged) instead of "
+                        "dense [n_slots, max_len] rows")
+    g.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (--paged)")
+    g.add_argument("--n-pages", type=int, default=None,
+                   help="device pages per layer incl. the reserved null "
+                        "page (--paged; default fully provisions n_slots "
+                        "max-length requests)")
+    g = ap.add_argument_group("scheduler / preemption "
+                              "(ServeConfig.scheduler, .preemption)")
+    g.add_argument("--scheduler", choices=("fifo", "tiered"),
+                   default="fifo",
+                   help="admission policy (--continuous): arrival-ordered "
+                        "FIFO or priority/deadline tiers with aging")
+    g.add_argument("--priority-tiers", type=int, default=None,
+                   help="cycle requests over N priority tiers "
+                        "(--scheduler tiered; higher tier admits first)")
+    g.add_argument("--deadline", type=float, default=None,
+                   help="start deadline for above-minimum tiers, in decode "
+                        "chunks — still-queued requests past it are shed "
+                        "(--scheduler tiered)")
+    g.add_argument("--age-after", type=float, default=None,
+                   help="chunks of waiting that buy a queued tier head "
+                        "one effective priority tier (anti-starvation; "
+                        "--scheduler tiered)")
+    g.add_argument("--preemption", action="store_true",
+                   help="evict a lower-priority victim when slots/pages "
+                        "run out; the victim resumes by re-prefill, "
+                        "bit-exact at temperature 0 (--continuous)")
+    g.add_argument("--max-requeues", type=int, default=None,
+                   help="failed-admission retries before a request is "
+                        "shed (default: retry while in-flight work can "
+                        "still drain)")
+    g = ap.add_argument_group("speculation (ServeConfig.speculation)")
+    g.add_argument("--speculative", action="store_true",
+                   help="self-speculative decoding: the packed PTQ planes "
+                        "draft --draft-k tokens per round, one dense "
+                        "multi-token verify accepts the longest greedy-"
+                        "matching prefix (+1 corrected token) — emitted "
+                        "tokens are bit-exact with dense greedy decode")
+    g.add_argument("--draft-k", type=int, default=4,
+                   help="draft tokens per speculative round (--speculative; "
+                        "see README guidance — higher k amortizes the "
+                        "verify better but wastes more draft work when "
+                        "the accept rate is low)")
+    g = ap.add_argument_group("prefix cache (ServeConfig.prefix_cache)")
+    g.add_argument("--prefix-cache", action="store_true",
+                   help="radix prefix cache over refcounted copy-on-write "
+                        "pages: requests sharing a page-aligned prompt "
+                        "prefix reuse its KV instead of re-prefilling "
+                        "(--continuous --paged; bit-exact at temperature 0)")
+    g.add_argument("--prefix-lru", action="store_true", default=True,
+                   help="evict unreferenced cached prefixes LRU when the "
+                        "page pool runs dry (default on)")
+    g.add_argument("--no-prefix-lru", dest="prefix_lru",
+                   action="store_false",
+                   help="keep every cached prefix resident; pool pressure "
+                        "falls through to preemption/requeue instead")
+    g = ap.add_argument_group("parallelism")
+    g.add_argument("--tp", type=int, default=None,
+                   help="tensor-parallel degree: serve over a "
+                        "(n_devices // tp, tp) ('data', 'model') host mesh")
+    g.add_argument("--mesh", default=None,
+                   help="explicit DxM serve mesh, e.g. 2x4 (data x model); "
+                        "exclusive with --tp")
     args = ap.parse_args()
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
-    serve(args.arch, smoke=args.smoke, n_requests=args.n_requests,
-          prompt_len=args.prompt_len, gen_len=args.gen_len, nm=args.nm,
-          quantize=args.quantize, packed=args.packed,
-          temperature=args.temperature, legacy_loop=args.legacy_loop,
-          continuous=args.continuous, n_slots=args.n_slots,
-          chunk_steps=args.chunk_steps, gen_lens=gen_lens,
-          paged=args.paged, page_size=args.page_size, n_pages=args.n_pages,
-          tp=args.tp, mesh_shape=args.mesh, speculative=args.speculative,
-          draft_k=args.draft_k, scheduler=args.scheduler,
-          priority_tiers=args.priority_tiers, deadline=args.deadline,
-          preemption=args.preemption, max_requeues=args.max_requeues,
-          age_after=args.age_after)
+    common = dict(smoke=args.smoke, n_requests=args.n_requests, nm=args.nm,
+                  quantize=args.quantize, packed=args.packed,
+                  seed=args.seed, legacy_loop=args.legacy_loop,
+                  gen_lens=gen_lens, tp=args.tp, mesh_shape=args.mesh)
+    if args.continuous:
+        serve(args.arch, config=ServeConfig.from_args(args),
+              priority_tiers=args.priority_tiers, deadline=args.deadline,
+              **common)
+    else:
+        serve(args.arch, prompt_len=args.prompt_len, gen_len=args.gen_len,
+              temperature=args.temperature, paged=args.paged,
+              speculative=args.speculative, draft_k=args.draft_k,
+              scheduler=args.scheduler, priority_tiers=args.priority_tiers,
+              deadline=args.deadline, preemption=args.preemption,
+              max_requeues=args.max_requeues, age_after=args.age_after,
+              prefix_cache=args.prefix_cache, **common)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from repro.models import attention_layers as al
 from repro.models import mamba as mb
 from repro.models import xlstm as xl
 from repro.models.blocks import (
+    PAGED_MIXERS,
     PREFILL_MIXERS,
     BlockDims,
     BlockSpec,
@@ -312,6 +313,20 @@ class Model:
     def can_fused_prefill(self) -> bool:
         """Whether every mixer in the pattern writes its cache in parallel."""
         return all(s.mixer in PREFILL_MIXERS for s in self.pattern)
+
+    @property
+    def can_prefix_cache(self) -> bool:
+        """Whether the pattern supports radix prefix-cache serving.
+
+        Prefix sharing needs every mixer's cache addressed through block
+        tables (PAGED_MIXERS — a shared page means the same physical K/V
+        for every reader) *and* the fused-prefill property (the suffix-only
+        prefill is a multi-token ``decode_step``, which stateful mixers
+        cannot run). Today both sets are the attention family, so this is
+        one check spelled for both reasons.
+        """
+        return (self.can_fused_prefill
+                and all(s.mixer in PAGED_MIXERS for s in self.pattern))
 
     def prefill(self, params: dict, caches: tuple, tokens: jnp.ndarray,
                 memory: jnp.ndarray | None = None, mode: str = "auto"):

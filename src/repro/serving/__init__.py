@@ -27,8 +27,24 @@ sequential dense steps into cheap packed ones. ``preemption=True`` adds
 page-level preemption for oversubscribed pools: lower-priority victims are
 evicted, snapshotted, and later resumed by re-prefill, bit-exact with their
 un-preempted runs at temperature 0.
+
+Configuration is one frozen dataclass tree (``config``):
+``ContinuousBatcher(model, params, ServeConfig(...))`` is the single
+non-deprecated construction path — sections for the pool, scheduler,
+speculation, preemption, and the radix prefix cache
+(``PrefixCacheConfig``: refcounted copy-on-write page sharing across
+requests with a common prompt prefix, LRU-evicted when the pool runs dry).
 """
 from repro.serving.batcher import Completion, ContinuousBatcher, ServeReport
+from repro.serving.config import (
+    PTQ_DRAFT,
+    PoolConfig,
+    PreemptionConfig,
+    PrefixCacheConfig,
+    SchedulerConfig,
+    ServeConfig,
+    SpeculationConfig,
+)
 from repro.serving.faults import (
     AllocatorFault,
     FaultInjector,
@@ -39,6 +55,7 @@ from repro.serving.paged import (
     BlockTableSet,
     PageAllocator,
     PageStats,
+    RadixPrefixCache,
     pages_needed,
 )
 from repro.serving.scheduler import (
@@ -59,12 +76,20 @@ __all__ = [
     "FIFOScheduler",
     "FaultInjector",
     "FaultPlan",
+    "PTQ_DRAFT",
     "PageAllocator",
     "PageStats",
+    "PoolConfig",
     "PoolExhausted",
+    "PreemptionConfig",
+    "PrefixCacheConfig",
+    "RadixPrefixCache",
     "Request",
     "ResumeState",
+    "SchedulerConfig",
+    "ServeConfig",
     "ServeReport",
+    "SpeculationConfig",
     "SlotError",
     "SlotPool",
     "TieredScheduler",

@@ -72,6 +72,7 @@ force these paths deterministically for tests.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -83,12 +84,19 @@ from repro.launch.generate import (
     _make_sampler,
     make_chunked_decode,
     make_speculative_chunked_decode,
+    make_suffix_prefill,
     serve_shardings,
     spec_cache_len,
 )
 from repro.models.blocks import PAGED_MIXERS
-from repro.serving.faults import AllocatorFault, FaultInjector
-from repro.serving.paged import BlockTableSet, PageAllocator, pages_needed
+from repro.serving.config import PTQ_DRAFT, ServeConfig
+from repro.serving.faults import AllocatorFault
+from repro.serving.paged import (
+    BlockTableSet,
+    PageAllocator,
+    RadixPrefixCache,
+    pages_needed,
+)
 from repro.serving.scheduler import (
     FIFOScheduler,
     Request,
@@ -165,6 +173,11 @@ class ServeReport:
     n_preemptions: int = 0         # victims evicted to admit higher priority
     n_shed: int = 0                # typed give-ups (deadline / retry budget)
     faults: dict | None = None     # FaultInjector.summary() when injecting
+    prefix: dict | None = None     # hit/COW/eviction stats when prefix-caching
+    # total positions run through prefill-shaped compute over the run (pad
+    # lengths included) — the prefill-FLOPs proxy prefix_bench gates on:
+    # prefix hits shrink it, everything else leaves it equal
+    n_prefill_positions: int = 0
 
     @property
     def ok_completions(self) -> list[Completion]:
@@ -214,6 +227,7 @@ class ServeReport:
             "p95_ttft_s": self.ttft_percentile(95),
             "n_chunks": self.n_chunks,
             "n_prefills": self.n_prefills,
+            "prefill_positions": self.n_prefill_positions,
             "peak_active_slots": self.peak_active,
             "total_admitted": self.total_admitted,
             "requeues": self.n_requeues,
@@ -226,109 +240,138 @@ class ServeReport:
             out["spec"] = dict(self.spec)
         if self.faults is not None:
             out["faults"] = dict(self.faults)
+        if self.prefix is not None:
+            out["prefix"] = dict(self.prefix)
         return out
+
+
+@dataclass(frozen=True)
+class _PageClaim:
+    """One admission's all-or-nothing page reservation.
+
+    ``pages`` is the slot's full block-table assignment in logical order.
+    The leading ``n_matched`` blocks came from the radix trie — except
+    when ``cow_src`` is set: then the final matched page was claimed as a
+    private copy (``pages[n_matched - 1]`` is fresh) because the re-fed
+    last prompt token must write into it, and ``cow_src`` names the shared
+    page whose contents admission copies first (copy-on-write).
+    """
+
+    pages: list[int]
+    n_matched: int = 0
+    cow_src: int | None = None
 
 
 class ContinuousBatcher:
     """Slot-pooled continuous batching over a (model, params) pair.
 
-    ``n_slots`` is the fixed decode batch (B_max); ``prompt_len`` and
-    ``max_new_tokens`` bound each request at
-    ``prompt_len + max_new_tokens`` positions. Prompts may be shorter than
-    ``prompt_len`` (ragged — right-padded into the one compiled prefill
-    shape; fused-prefill patterns only) and gen lengths below the bound
-    finish early and free their slot.
+    Configure with a :class:`~repro.serving.config.ServeConfig`::
 
-    ``paged=True`` backs the cache with a page pool instead of dense
-    ``[n_slots, max_len]`` rows: ``page_size`` tokens per page,
-    ``n_pages`` device pages per layer (default: full provisioning —
-    every slot can hold a max-length request — plus the reserved null
-    page; undersize it to oversubscribe memory and let admission re-queue
-    on :class:`PoolExhausted`).
+        cfg = ServeConfig(pool=PoolConfig(n_slots=8, prompt_len=64,
+                                          max_new_tokens=32, paged=True))
+        ContinuousBatcher(model, params, cfg).run(requests)
 
-    ``mesh`` (a ``jax.sharding.Mesh`` with a 'model' axis) serves
+    (the pre-ServeConfig flat kwargs still work for one release, via a
+    deprecation shim that forwards through ``ServeConfig.build``). The
+    config sections map onto the serve loop like so — see
+    :mod:`repro.serving.config` for every knob and the cross-knob rules:
+
+    * ``pool`` — ``n_slots`` fixed decode slots (B_max), each request
+      bounded at ``prompt_len + max_new_tokens`` positions; prompts may be
+      ragged (fused-prefill patterns only). ``paged=True`` swaps dense
+      ``[n_slots, max_len]`` cache rows for a ``page_size``-token page
+      pool with per-slot block tables; undersize ``n_pages`` to
+      oversubscribe memory and let admission re-queue on
+      :class:`PoolExhausted`.
+    * ``speculation`` — the draft params (usually the packed
+      structured-binary planes of the served model) draft ``draft_k``
+      tokens per round, one target multi-token verify scores them, and
+      the longest greedy-matching prefix (+1 corrected token) is emitted —
+      bit-exact with the vanilla chunk loop at temperature 0 for any
+      draft. The draft keeps its own cache pool (paged mode shares the
+      block tables: one reservation, ``draft_k + 1`` headroom positions,
+      covers both pools).
+    * ``scheduler`` / ``preemption`` — admission policy (FIFO or
+      priority/deadline tiers with aging) and oversubscribed operation:
+      a higher-priority admission may evict a strictly-lower-priority
+      victim, which later resumes by re-prefill over ``prompt + emitted``
+      (bit-exact at temperature 0); ``max_requeues`` bounds retries
+      before a typed shed.
+    * ``prefix_cache`` — the radix prefix cache (paged pools only): admit
+      matches page-aligned prompt prefixes against a trie of shared
+      refcounted pages, points the slot's block table at the hits, and
+      prefills only the unmatched suffix straight into the pool (one
+      multi-token decode_step — no scatter). A page-aligned full match
+      copy-on-writes its boundary page; when the pool runs dry,
+      trie-only (refcount-1) leaves are evicted LRU before
+      :class:`PoolExhausted` falls through to preemption/requeue.
+      Preempted victims insert their valid ``prompt + emitted`` pages
+      into the trie, so resume-by-reprefill re-finds them as hits; in
+      speculative mode the draft pool shares the read-only prefix pages
+      through the same block tables. Needs ``Model.can_prefix_cache``
+      (all-attention pattern). Tokens stay bit-exact with the non-shared
+      run at temperature 0 — shared pages hold exactly the K/V a private
+      prefill would recompute.
+
+    ``config.mesh`` (a ``jax.sharding.Mesh`` with a 'model' axis) serves
     tensor-parallel: params and the pooled cache are sharded (see module
     docstring) and the packed-kernel dispatch is pinned to the GSPMD jnp
-    path for the life of the process.
-
-    ``speculative=True`` (with ``draft_params``, usually the packed
-    structured-binary planes of the served model) swaps the chunk's inner
-    loop for speculative rounds: the draft drafts ``draft_k`` tokens per
-    round with cheap single-token steps, one target multi-token verify
-    scores them, and the longest greedy-matching prefix (+1 corrected
-    token) is emitted — bit-exact with the vanilla chunk loop's tokens at
-    temperature 0 for any draft. The draft keeps its own cache pool
-    (mirroring the target's layout; paged mode shares the block tables, so
-    one page reservation covers both pools), every slot's allocation
-    carries ``draft_k + 1`` headroom positions for rejected-tail scribbles,
-    and per-slot accept counters roll up into ``Completion.accepted_drafts``
-    and the report's ``spec`` summary.
-
-    Oversubscription knobs: ``scheduler`` picks the admission policy
-    (``"fifo"`` or ``"tiered"`` — priorities/deadlines/aging; see
-    :class:`~repro.serving.scheduler.TieredScheduler`, whose anti-
-    starvation window is ``age_after_s``). ``preemption=True`` lets a
-    higher-priority admission evict a strictly-lower-priority victim when
-    slots or pages run out (resume-by-reprefill; needs a fused-prefill
-    pattern, and the bit-exact resume guarantee is greedy — at
-    temperature > 0 a resumed request redraws its sampling keys).
-    ``max_requeues`` bounds how often one request's failed admission is
-    retried before it is shed (None: retry as long as in-flight work can
-    still drain). ``faults`` injects deterministic admission failures
-    (:class:`~repro.serving.faults.FaultInjector`) to force these paths.
+    path for the life of the process. ``config.faults`` injects
+    deterministic admission failures
+    (:class:`~repro.serving.faults.FaultInjector`) to force the overload
+    paths.
     """
 
-    def __init__(self, model, params, *, n_slots: int, prompt_len: int,
-                 max_new_tokens: int, chunk_steps: int = 8,
-                 temperature: float = 0.0, prefill_mode: str = "auto",
-                 seed: int = 0, paged: bool = False, page_size: int = 16,
-                 n_pages: int | None = None, mesh=None,
-                 speculative: bool = False, draft_params=None,
-                 draft_k: int = 4, scheduler: str = "fifo",
-                 age_after_s: float | None = None, preemption: bool = False,
-                 max_requeues: int | None = None,
-                 faults: FaultInjector | None = None):
+    def __init__(self, model, params, config: ServeConfig | None = None,
+                 **legacy):
+        if config is None:
+            if not legacy:
+                raise TypeError(
+                    "ContinuousBatcher(model, params, ServeConfig(...)) "
+                    "needs a config")
+            warnings.warn(
+                "ContinuousBatcher(model, params, n_slots=..., ...) flat "
+                "kwargs are deprecated; pass a ServeConfig (ServeConfig."
+                "build(...) accepts the old spelling). The kwargs path "
+                "will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig.build(**legacy)
+        elif legacy:
+            raise TypeError(
+                f"pass either a ServeConfig or legacy kwargs, not both "
+                f"(got config= plus {sorted(legacy)})")
         if model.cfg.encoder is not None or model.cfg.vision is not None:
             raise NotImplementedError(
                 "continuous batching serves decoder-only archs; "
                 "encoder/vision memory is per-request state the slot pool "
                 "does not carry yet")
-        if chunk_steps <= 0:
+        self.config = config
+        pool_cfg = config.pool
+        chunk_steps = config.chunk_steps
+        temperature = config.temperature
+        prefill_mode = config.prefill_mode
+        paged = pool_cfg.paged
+        page_size = pool_cfg.page_size
+        mesh = config.mesh
+        speculative = config.speculation.enabled
+        draft_params = config.speculation.draft_params
+        draft_k = config.speculation.draft_k
+        preemption = config.preemption.enabled
+        prompt_len = pool_cfg.prompt_len
+        max_new_tokens = pool_cfg.max_new_tokens
+        n_slots = pool_cfg.n_slots
+        if speculative and draft_params == PTQ_DRAFT:
             raise ValueError(
-                f"chunk_steps must be positive (got {chunk_steps}); the "
-                f"serve loop decodes chunk_steps tokens between admit/retire "
-                f"passes")
-        if speculative:
-            if draft_params is None:
-                raise ValueError(
-                    "speculative serving needs draft_params (typically the "
-                    "pack_model_params planes of the served model)")
-            if temperature != 0.0:
-                raise ValueError(
-                    "speculative serving is greedy-only (temperature 0): "
-                    "acceptance matches draft tokens against the target's "
-                    "argmax")
-            if draft_k <= 0:
-                raise ValueError(f"draft_k must be positive (got {draft_k})")
-        elif draft_params is not None:
-            raise ValueError("draft_params without speculative=True; pass "
-                             "both or neither")
-        if scheduler not in ("fifo", "tiered"):
-            raise ValueError(
-                f"scheduler must be 'fifo' or 'tiered' (got {scheduler!r})")
-        if age_after_s is not None and scheduler != "tiered":
-            raise ValueError(
-                "age_after_s is TieredScheduler's anti-starvation window; "
-                "pass scheduler='tiered' with it")
-        if max_requeues is not None and max_requeues < 0:
-            raise ValueError(
-                f"max_requeues must be >= 0 or None for unbounded retry "
-                f"(got {max_requeues})")
-        self.scheduler_kind = scheduler
-        self.age_after_s = age_after_s
+                "draft_params is the unresolved PTQ_DRAFT sentinel; only "
+                "serve() resolves it (after its PTQ pass) — library "
+                "callers must pass the packed draft tree itself")
+        self.scheduler_kind = config.scheduler.kind
+        self.age_after_s = config.scheduler.age_after_s
         self.preemption = preemption
-        self.max_requeues = max_requeues
-        self.faults = faults
+        self.max_requeues = config.preemption.max_requeues
+        self.prefix_cache = config.prefix_cache.enabled
+        self.prefix_lru = config.prefix_cache.lru
+        self.faults = config.faults
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -336,7 +379,7 @@ class ContinuousBatcher:
         self.max_new_tokens = max_new_tokens
         self.max_len = prompt_len + max_new_tokens
         self.chunk_steps = chunk_steps
-        self.key = jax.random.PRNGKey(seed)
+        self.key = jax.random.PRNGKey(config.seed)
         self.paged = paged
         self.speculative = speculative
         self.draft_params = draft_params
@@ -362,11 +405,12 @@ class ContinuousBatcher:
                 "emitted — a ragged-length prefill that needs per-position "
                 "logits, so it requires a fused-prefill pattern (scan-mode "
                 "prefill returns last-padded-position logits only)")
+        if self.prefix_cache and not model.can_prefix_cache:
+            raise ValueError(
+                f"the prefix cache needs every mixer's cache behind block "
+                f"tables and a fused suffix prefill (an all-attention "
+                f"pattern); {model.pattern} does not qualify")
         if paged:
-            if page_size <= 0:
-                raise ValueError(
-                    f"page_size must be positive (got {page_size}); pages "
-                    f"hold page_size tokens of KV cache each")
             self.page_size = page_size
             # speculative slots reserve their headroom pages too — "draft
             # tokens borrow pages" is literal: the scribble region is part
@@ -375,7 +419,7 @@ class ContinuousBatcher:
             self.prompt_blocks = -(-prompt_len // page_size)
             # default: fully provisioned (n_slots max-length requests) +
             # the reserved null page
-            self.n_pages = n_pages or 1 + n_slots * self.max_blocks
+            self.n_pages = pool_cfg.n_pages or 1 + n_slots * self.max_blocks
 
         self.mesh = mesh
         self._pool_shard = self._fresh_shard = None
@@ -488,14 +532,53 @@ class ContinuousBatcher:
             self._chunk = make_chunked_decode(model, chunk_steps=chunk_steps,
                                               temperature=temperature,
                                               paged=paged, **mesh_kw)
+        # prefix-cache admissions skip the template-prefill + scatter pair
+        # entirely: one suffix prefill writes straight into the page pool
+        # through the slot's block-table row, and a tiny page-clone jit
+        # implements copy-on-write for the page-aligned full-match case
+        self._suffix = self._suffix_d = self._cow = None
+        if self.prefix_cache:
+            sfx_kw: dict = dict(temperature=temperature)
+            d_sfx_kw = None
+            if mesh is not None:
+                sfx_kw.update(mesh=mesh,
+                              shardings=(p_shard, self._pool_shard, repl))
+                if speculative:
+                    d_sfx_kw = dict(temperature=temperature, mesh=mesh,
+                                    shardings=(pd_shard, self._pool_shard,
+                                               repl))
+            self._suffix = make_suffix_prefill(model, **sfx_kw)
+            if speculative:
+                # unsharded: one jit object retraces per param-tree
+                # structure, so the packed draft gets its own trace free
+                self._suffix_d = (make_suffix_prefill(model, **d_sfx_kw)
+                                  if d_sfx_kw is not None else self._suffix)
+
+            def cow_copy(caches, src, dst):
+                # clone one page across every pool leaf — dense K/V and
+                # int8 planes + scales alike (axis 1 is the page axis in
+                # every paged-mixer cache leaf)
+                return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]),
+                                    caches)
+
+            if mesh is not None:
+                self._cow = jax.jit(
+                    cow_copy, donate_argnums=(0,),
+                    in_shardings=(self._pool_shard, repl, repl),
+                    out_shardings=self._pool_shard)
+            else:
+                self._cow = jax.jit(cow_copy, donate_argnums=(0,))
         # one zeroed batch-1 cache template shared by every admission:
         # _prefill doesn't donate or mutate its cache arg, and the prompt
         # prefill overwrites [0, prompt_len) while the per-slot length mask
         # hides the (zero/stale) tail, so reuse is safe. Paged mode only
-        # needs the prompt's pages' worth of positions.
-        self._fresh = self.model.init_cache(1, fresh_len)
-        if mesh is not None:
-            self._fresh = jax.device_put(self._fresh, self._fresh_shard)
+        # needs the prompt's pages' worth of positions. (Unused — never
+        # allocated — under the prefix cache: see _admit's suffix path.)
+        self._fresh = None
+        if not self.prefix_cache:
+            self._fresh = self.model.init_cache(1, fresh_len)
+            if mesh is not None:
+                self._fresh = jax.device_put(self._fresh, self._fresh_shard)
         # resume-by-reprefill needs a longer batch-1 template: the resume
         # prompt is prompt + emitted, up to prompt_len + max_new_tokens - 1
         # tokens (paged: rounded up to whole pages). One fixed pad length
@@ -503,7 +586,7 @@ class ContinuousBatcher:
         # NamedShardings are shape-polymorphic so the mesh case reuses
         # _fresh_shard.
         self._fresh_resume = None
-        if preemption:
+        if preemption and not self.prefix_cache:
             resume_len = prompt_len + max_new_tokens - 1
             self._resume_pad = (-(-resume_len // page_size) * page_size
                                 if paged else resume_len)
@@ -511,15 +594,41 @@ class ContinuousBatcher:
             if mesh is not None:
                 self._fresh_resume = jax.device_put(self._fresh_resume,
                                                     self._fresh_shard)
-        # per-run paged state (fresh in run())
+        # per-run paged / prefix-cache state (fresh in run())
         self._alloc: PageAllocator | None = None
         self._tables: BlockTableSet | None = None
+        self._trie: RadixPrefixCache | None = None
+        self._px: dict = {}
+        self._n_prefill_positions = 0
 
-    def _reserve(self, req: Request) -> list[int] | None:
+    def _alloc_pages(self, n: int) -> list[int]:
+        """``PageAllocator.alloc`` with the prefix cache's LRU backstop:
+        when the pool runs dry, evict unreferenced (trie-only) leaves
+        oldest-first until the claim fits, before PoolExhausted falls
+        through to the run loop's preemption/requeue machinery."""
+        try:
+            return self._alloc.alloc(n)
+        except PoolExhausted:
+            if self._trie is None or not self.prefix_lru:
+                raise
+            if not self._trie.evict(self._alloc, n):
+                raise
+            return self._alloc.alloc(n)
+
+    def _reserve(self, req: Request) -> _PageClaim | None:
         """Claim the pages ``req`` needs up front (so it can never run out
         mid-flight); raises PoolExhausted for the run loop to re-queue.
         Speculative serving reserves the draft/verify scribble headroom as
-        part of the same all-or-nothing claim."""
+        part of the same all-or-nothing claim.
+
+        With the prefix cache, the leading pages come from the radix trie
+        instead of the free list: matched pages are ``share``d (refcount
+        +1 per holder) *before* the fresh alloc, so an LRU eviction forced
+        by that alloc can never recycle the pages this very admission just
+        matched. A page-aligned full match claims one extra fresh page —
+        the copy-on-write destination for the boundary page the re-fed
+        last prompt token must write into (see :class:`_PageClaim`).
+        """
         if not self.paged:
             return None
         headroom = self.draft_k + 1 if self.speculative else 0
@@ -527,11 +636,91 @@ class ContinuousBatcher:
         # req.resume), so a resumed request reserves exactly its original
         # footprint — preemption changes where the tokens come from, not
         # how many positions the request owns
-        need = pages_needed(len(np.asarray(req.prompt)),
-                            req.max_new_tokens + headroom, self.page_size)
-        return self._alloc.alloc(need)
+        total = pages_needed(len(np.asarray(req.prompt)),
+                             req.max_new_tokens + headroom, self.page_size)
+        if self._trie is None:
+            return _PageClaim(self._alloc.alloc(total))
+        tokens = np.asarray(req.prompt, np.int32)
+        if req.resume is not None:
+            # a resumed victim re-finds the pages its preemption inserted
+            tokens = np.concatenate(
+                [tokens, np.asarray(req.resume.emitted, np.int32)])
+        tlen = int(tokens.shape[0])
+        matched = self._trie.match(tokens)
+        m = len(matched)
+        # page-aligned full match: the suffix is empty, so admission re-feeds
+        # the last prompt token (start = tlen - 1) whose K/V lands in the
+        # final matched page — that page must become a private copy
+        cow = m > 0 and m * self.page_size == tlen
+        self._alloc.share(matched)
+        try:
+            fresh = self._alloc_pages(total - m + (1 if cow else 0))
+        except PoolExhausted:
+            self._alloc.free(matched)
+            raise
+        self._px["hit_pages"] += m
+        self._px["fresh_pages"] += len(fresh)
+        if cow:
+            return _PageClaim(matched[:-1] + fresh, m, matched[-1])
+        return _PageClaim(matched + fresh, m, None)
 
-    def _admit(self, req: Request, slot: int, pages, caches, d_caches, tok,
+    def _prefix_admit(self, claim: _PageClaim, prompt: np.ndarray, tlen: int,
+                      slot: int, caches, d_caches, key):
+        """Prefix-cache admission: point ``slot``'s block table at the
+        claim's (shared + fresh) pages and prefill only the unmatched
+        suffix, straight into the page pool through the table row — one
+        multi-token decode_step, no template, no scatter.
+
+        A set ``cow_src`` means the suffix is empty (page-aligned full
+        match): the shared boundary page's contents are cloned into the
+        claim's private copy first — target *and* draft pools; both index
+        pages identically — and the last prompt token is re-fed at
+        ``start = tlen - 1`` so its logits (and the boundary write, now
+        private) come off the shared prefix exactly as a full prefill
+        would produce them. Finally the prompt's whole-page prefix is
+        inserted into the trie (first-writer-wins on existing nodes), so
+        the next admission can match what this one just prefilled.
+        """
+        pages = claim.pages
+        ps = self.page_size
+        self._tables.assign(slot, pages)
+        if claim.cow_src is not None:
+            dst = pages[claim.n_matched - 1]
+            caches = self._cow(caches, jnp.int32(claim.cow_src),
+                               jnp.int32(dst))
+            if self.speculative:
+                d_caches = self._cow(d_caches, jnp.int32(claim.cow_src),
+                                     jnp.int32(dst))
+            # drop the reservation's temporary reference on the source:
+            # _reserve shared it to pin it across the copy. Host-side free
+            # is safe — the clone is already enqueued on the pool buffers,
+            # and any later admission's writes are ordered behind it by
+            # donation data-dependency.
+            self._alloc.free([claim.cow_src])
+            self._px["cow_copies"] += 1
+            start = tlen - 1
+        else:
+            start = claim.n_matched * ps
+        t = tlen - start
+        t_pad = -(-t // ps) * ps          # whole-page jit buckets
+        padded = np.zeros(t_pad, np.int32)
+        padded[:t] = prompt[start:]
+        self._px["tokens_saved"] += start
+        self._n_prefill_positions += t_pad
+        row = jnp.asarray(self._tables.array[slot][None, :])
+        args = (jnp.asarray(padded[None, :]), jnp.int32(start),
+                jnp.int32(tlen), row, key)
+        tok0, caches = self._suffix(self.params, caches, *args)
+        if self.speculative:
+            _, d_caches = self._suffix_d(self.draft_params, d_caches, *args)
+        # publish the prompt's whole-page prefix; the trie holds one
+        # reference per node it actually created (hits keep first writer)
+        full = tlen // ps
+        self._alloc.share(
+            self._trie.insert(prompt[:full * ps], pages[:full]))
+        return caches, d_caches, tok0
+
+    def _admit(self, req: Request, slot: int, claim, caches, d_caches, tok,
                pos, rem, key):
         """Prefill ``req`` into ``slot``'s cache region; update slot state.
 
@@ -550,6 +739,8 @@ class ContinuousBatcher:
         last position recomputes the carried token the eviction discarded —
         so at temperature 0 the continuation is bit-exact with the
         un-preempted run. Only the remaining token budget is decoded.
+        (Under the prefix cache the same resume runs as a suffix prefill
+        over the pages the preemption inserted into the trie.)
         """
         prompt = np.asarray(req.prompt)
         tlen = int(prompt.shape[0])
@@ -569,43 +760,51 @@ class ContinuousBatcher:
                 f"slot capacity {self.max_new_tokens}")
         n_done = len(req.resume.emitted) if req.resume is not None else 0
         if n_done:
-            if self._fresh_resume is None:
+            if not self.preemption:
                 raise ValueError(
                     f"request {req.rid} carries a resume snapshot but the "
-                    f"batcher was built with preemption=False (the resume "
-                    f"prefill template only exists under preemption=True)")
+                    f"batcher was built with preemption=False")
             prompt = np.concatenate(
                 [prompt, np.asarray(req.resume.emitted, np.int32)])
             tlen += n_done
-            pad_len, fresh = self._resume_pad, self._fresh_resume
+        if self._trie is not None:
+            caches, d_caches, tok0 = self._prefix_admit(
+                claim, prompt, tlen, slot, caches, d_caches, key)
         else:
-            pad_len, fresh = self.prompt_len, self._fresh
-        padded = np.zeros(pad_len, np.int32)
-        padded[:tlen] = prompt
-        tok0, one = self._prefill(self.params, fresh,
-                                  jnp.asarray(padded[None, :]),
-                                  jnp.int32(tlen), key)
-        d_one = None
-        if self.speculative:
-            _, d_one = self._d_prefill(self.draft_params, fresh,
-                                       jnp.asarray(padded[None, :]),
-                                       jnp.int32(tlen), key)
-        if self.paged:
-            self._tables.assign(slot, pages)
-            # scatter only the pages the (resume) prompt itself occupies;
-            # the jit's static block count is padded with null-page targets
-            n_prompt = -(-tlen // self.page_size)
-            scat = np.zeros(-(-pad_len // self.page_size), np.int32)
-            scat[:n_prompt] = pages[:n_prompt]
-            caches = self._write_pg(caches, one, jnp.int32(slot),
-                                    jnp.asarray(scat))
+            if n_done:
+                pad_len, fresh = self._resume_pad, self._fresh_resume
+            else:
+                pad_len, fresh = self.prompt_len, self._fresh
+            padded = np.zeros(pad_len, np.int32)
+            padded[:tlen] = prompt
+            self._n_prefill_positions += pad_len
+            tok0, one = self._prefill(self.params, fresh,
+                                      jnp.asarray(padded[None, :]),
+                                      jnp.int32(tlen), key)
+            d_one = None
             if self.speculative:
-                d_caches = self._write_pg(d_caches, d_one, jnp.int32(slot),
-                                          jnp.asarray(scat))
-        else:
-            caches = self._write(caches, one, jnp.int32(slot))
-            if self.speculative:
-                d_caches = self._write(d_caches, d_one, jnp.int32(slot))
+                _, d_one = self._d_prefill(self.draft_params, fresh,
+                                           jnp.asarray(padded[None, :]),
+                                           jnp.int32(tlen), key)
+            if self.paged:
+                pages = claim.pages
+                self._tables.assign(slot, pages)
+                # scatter only the pages the (resume) prompt itself occupies;
+                # the jit's static block count is padded with null-page
+                # targets
+                n_prompt = -(-tlen // self.page_size)
+                scat = np.zeros(-(-pad_len // self.page_size), np.int32)
+                scat[:n_prompt] = pages[:n_prompt]
+                caches = self._write_pg(caches, one, jnp.int32(slot),
+                                        jnp.asarray(scat))
+                if self.speculative:
+                    d_caches = self._write_pg(d_caches, d_one,
+                                              jnp.int32(slot),
+                                              jnp.asarray(scat))
+            else:
+                caches = self._write(caches, one, jnp.int32(slot))
+                if self.speculative:
+                    d_caches = self._write(d_caches, d_one, jnp.int32(slot))
         first = int(np.asarray(tok0)[0, 0])
         tok[slot, 0] = first
         pos[slot] = tlen
@@ -648,10 +847,15 @@ class ContinuousBatcher:
         pool = SlotPool(self.n_slots)
         if self.faults is not None:
             self.faults.reset()
+        self._n_prefill_positions = 0
+        self._px = dict(hit_pages=0, fresh_pages=0, cow_copies=0,
+                        tokens_saved=0)
         d_caches = None
         if self.paged:
             self._alloc = PageAllocator(self.n_pages, self.page_size)
             self._tables = BlockTableSet(self.n_slots, self.max_blocks)
+            self._trie = (RadixPrefixCache(self.page_size)
+                          if self.prefix_cache else None)
             pool_kw = dict(n_pages=self.n_pages, page_size=self.page_size)
             caches = self.model.init_cache(self.n_slots, self.alloc_len,
                                            **pool_kw)
@@ -747,6 +951,22 @@ class ContinuousBatcher:
             n_preemptions += 1
             rec = pool.preempt(s)
             if self.paged:
+                if self._trie is not None:
+                    # publish the victim's whole-page prefix before the
+                    # release drops its references: resume-by-reprefill
+                    # then re-finds these exact pages as trie hits. The
+                    # valid cache is exactly [0, pos) — the carried token's
+                    # K/V is unwritten in both chunk loops — so only
+                    # pos // page_size full pages are insertable.
+                    r = rec.request
+                    toks = np.concatenate(
+                        [np.asarray(r.prompt, np.int32),
+                         np.asarray(rec.emitted, np.int32)])
+                    full = int(pos[s]) // self.page_size
+                    held = self._tables.pages_of(s)
+                    self._alloc.share(
+                        self._trie.insert(toks[:full * self.page_size],
+                                          held[:full]))
                 self._alloc.free(self._tables.release(s))
             rem[s] = 0
             r = rec.request
@@ -787,7 +1007,7 @@ class ContinuousBatcher:
                         if requeue(req):
                             break
                         continue
-                pages = None
+                claim = None
                 err = None
                 while True:
                     if not pool.free_slots():
@@ -800,7 +1020,7 @@ class ContinuousBatcher:
                         preempt_slot(v)
                         continue
                     try:
-                        pages = self._reserve(req)
+                        claim = self._reserve(req)
                     except PoolExhausted as e:
                         # pages dry with a free slot: evict until the
                         # reservation fits or the victims run out
@@ -824,7 +1044,7 @@ class ContinuousBatcher:
                 slot = pool.admit(req, now)
                 self.key, k = jax.random.split(self.key)
                 caches, d_caches, first = self._admit(
-                    req, slot, pages, caches, d_caches, tok, pos, rem, k)
+                    req, slot, claim, caches, d_caches, tok, pos, rem, k)
                 rec = pool.get(slot)
                 res = req.resume
                 if res is not None:
@@ -934,6 +1154,13 @@ class ContinuousBatcher:
                 "drafted": drafted,
                 "accept_rate": accepted / max(drafted, 1),
             }
+        prefix_summary = None
+        if self._trie is not None:
+            prefix_summary = {
+                **self._px,
+                "lru_evictions": self._trie.n_evicted,
+                "cached_pages_end": self._trie.n_pages,
+            }
         report = ServeReport(
             completions=sorted(completions, key=lambda c: c.rid),
             wall_s=clk(), n_chunks=n_chunks, n_prefills=n_prefills,
@@ -943,7 +1170,9 @@ class ContinuousBatcher:
             spec=spec_summary,
             n_requeues=n_requeues, n_preemptions=n_preemptions,
             n_shed=n_shed,
-            faults=self.faults.summary() if self.faults else None)
+            faults=self.faults.summary() if self.faults else None,
+            prefix=prefix_summary,
+            n_prefill_positions=self._n_prefill_positions)
         s = report.summary()
         paged_note = ""
         if self.paged:
@@ -957,6 +1186,12 @@ class ContinuousBatcher:
                            f"{spec_summary['accept_rate']:.0%} "
                            f"({spec_summary['accepted_drafts']}/"
                            f"{spec_summary['drafted']} drafts)")
+        if prefix_summary is not None:
+            paged_note += (f", prefix {prefix_summary['hit_pages']} hit / "
+                           f"{prefix_summary['fresh_pages']} fresh pages, "
+                           f"{prefix_summary['tokens_saved']} toks saved, "
+                           f"{prefix_summary['cow_copies']} COW, "
+                           f"{prefix_summary['lru_evictions']} evictions")
         over_note = ""
         if s["requeues"] or s["preemptions"] or s["shed"]:
             over_note = (f", {s['requeues']} requeues "

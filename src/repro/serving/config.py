@@ -1,0 +1,283 @@
+"""Typed serve configuration: the single programmatic serve surface.
+
+The continuous batcher grew ~18 constructor kwargs (and ``serve()`` ~30 CLI
+flags) across PRs 2-6 — pool sizing, paging, speculation, scheduling,
+preemption, fault injection — with the cross-knob validation scattered
+between the batcher ctor and the CLI shim, so library callers and the CLI
+could disagree about what was legal. :class:`ServeConfig` replaces that
+surface with one frozen dataclass tree, sectioned the way the serve loop is
+actually layered:
+
+  * :class:`PoolConfig`        — slot count, request shape bounds, and the
+                                 dense-rows vs page-pool cache layout;
+  * :class:`SchedulerConfig`   — admission policy (FIFO / tiered + aging);
+  * :class:`SpeculationConfig` — draft params + draft_k for the speculative
+                                 chunk loop;
+  * :class:`PreemptionConfig`  — victim eviction + bounded requeue budget;
+  * :class:`PrefixCacheConfig` — the radix prefix cache over shared pages
+                                 (requires the paged pool).
+
+Every *model-independent* cross-knob rule fires in
+``ServeConfig.__post_init__`` — identically for CLI (``ServeConfig.
+from_args``) and library (direct construction / ``ServeConfig.build``) use.
+Model-*dependent* rules (fused-prefill patterns, paged-mixer coverage) stay
+in the batcher, which is the first place the model is in hand.
+
+``ContinuousBatcher(model, params, ServeConfig(...))`` is the only
+non-deprecated construction path; the old flat kwargs still work for one
+release via a shim that forwards through :meth:`ServeConfig.build` and
+emits a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# Sentinel draft_params value: "the packed planes serve() builds after its
+# PTQ pass". ``ServeConfig.from_args`` uses it because the CLI parses before
+# any params exist; serve() swaps in the real packed tree, and the batcher
+# rejects a config where the sentinel was never resolved.
+PTQ_DRAFT = "ptq"
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    """Decode-slot pool sizing and cache layout.
+
+    ``n_slots`` is the fixed decode batch (B_max); every request is bounded
+    by ``prompt_len + max_new_tokens`` positions. ``paged=True`` backs the
+    pool with ``page_size``-token pages (``n_pages`` per layer; default
+    fully provisions ``n_slots`` max-length requests plus the reserved null
+    page) instead of dense ``[n_slots, max_len]`` rows.
+    """
+
+    n_slots: int = 4
+    prompt_len: int = 32
+    max_new_tokens: int = 32
+    paged: bool = False
+    page_size: int = 16
+    n_pages: int | None = None
+
+    @property
+    def max_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission policy: ``kind`` is ``"fifo"`` (arrival order) or
+    ``"tiered"`` (priority/deadline tiers); ``age_after_s`` is the tiered
+    queue's anti-starvation window (seconds — or chunks on the chunk
+    clock — of waiting that buy a queued tier head one effective tier)."""
+
+    kind: str = "fifo"
+    age_after_s: float | None = None
+
+
+@dataclass(frozen=True)
+class SpeculationConfig:
+    """Speculative chunk loop: the draft params (usually the packed
+    structured-binary planes of the served model — or the :data:`PTQ_DRAFT`
+    sentinel for serve() to resolve) draft ``draft_k`` tokens per round for
+    one multi-token dense verify. Greedy-only (temperature 0)."""
+
+    enabled: bool = False
+    draft_k: int = 4
+    draft_params: object = field(default=None, repr=False, compare=False)
+
+
+@dataclass(frozen=True)
+class PreemptionConfig:
+    """Oversubscription: ``enabled`` lets a higher-priority admission evict
+    a strictly-lower-priority victim (resume-by-reprefill, bit-exact at
+    temperature 0); ``max_requeues`` bounds failed-admission retries before
+    a request is shed (None: retry while in-flight work can drain)."""
+
+    enabled: bool = False
+    max_requeues: int | None = None
+
+
+@dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Radix prefix cache over refcounted, copy-on-write pages.
+
+    ``enabled`` shares page-aligned prompt prefixes between requests: admit
+    walks a trie of token blocks, points the new slot's block table at
+    matched pages, and prefills only the unmatched suffix. Requires the
+    paged pool (``PoolConfig.paged``) and a fused-prefill, all-attention
+    pattern (model-side check in the batcher). ``lru`` evicts
+    unreferenced trie leaves oldest-first when the page pool runs dry
+    (before ``PoolExhausted`` falls through to preemption/requeue);
+    disabling it keeps every inserted prefix resident until the run ends.
+    """
+
+    enabled: bool = False
+    lru: bool = True
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """The single typed entry to continuous serving.
+
+    Construct sections directly::
+
+        cfg = ServeConfig(
+            pool=PoolConfig(n_slots=8, prompt_len=64, max_new_tokens=32,
+                            paged=True),
+            prefix_cache=PrefixCacheConfig(enabled=True),
+        )
+        ContinuousBatcher(model, params, cfg).run(requests)
+
+    or flat via :meth:`build` (the legacy kwarg spelling), or from a parsed
+    CLI namespace via :meth:`from_args`. All cross-knob validation that
+    does not need the model fires here, so a config that constructs is a
+    config the batcher accepts (modulo model-pattern checks).
+
+    ``mesh`` (a ``jax.sharding.Mesh``) and ``faults`` (a
+    :class:`~repro.serving.faults.FaultInjector`) are runtime handles, not
+    configuration values: they are excluded from repr/eq so configs stay
+    comparable and printable.
+    """
+
+    pool: PoolConfig = field(default_factory=PoolConfig)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    speculation: SpeculationConfig = field(default_factory=SpeculationConfig)
+    preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
+    prefix_cache: PrefixCacheConfig = field(
+        default_factory=PrefixCacheConfig)
+    chunk_steps: int = 8
+    temperature: float = 0.0
+    prefill_mode: str = "auto"
+    seed: int = 0
+    mesh: object = field(default=None, repr=False, compare=False)
+    faults: object = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        p = self.pool
+        if p.n_slots <= 0 or p.prompt_len <= 0 or p.max_new_tokens <= 0:
+            raise ValueError(
+                f"PoolConfig wants positive n_slots/prompt_len/"
+                f"max_new_tokens (got {p.n_slots}/{p.prompt_len}/"
+                f"{p.max_new_tokens})")
+        if p.paged and p.page_size <= 0:
+            raise ValueError(
+                f"page_size must be positive (got {p.page_size}); pages "
+                f"hold page_size tokens of KV cache each")
+        if self.chunk_steps <= 0:
+            raise ValueError(
+                f"chunk_steps must be positive (got {self.chunk_steps}); "
+                f"the serve loop decodes chunk_steps tokens between "
+                f"admit/retire passes")
+        if self.prefill_mode not in ("auto", "fused", "scan"):
+            raise ValueError(
+                f"prefill_mode must be 'auto', 'fused' or 'scan' "
+                f"(got {self.prefill_mode!r})")
+        s = self.scheduler
+        if s.kind not in ("fifo", "tiered"):
+            raise ValueError(
+                f"scheduler kind must be 'fifo' or 'tiered' (got {s.kind!r})")
+        if s.age_after_s is not None and s.kind != "tiered":
+            raise ValueError(
+                "age_after_s is TieredScheduler's anti-starvation window; "
+                "pass SchedulerConfig(kind='tiered') with it")
+        sp = self.speculation
+        if sp.enabled:
+            if sp.draft_params is None:
+                raise ValueError(
+                    "speculative serving needs draft_params (typically the "
+                    "pack_model_params planes of the served model, or the "
+                    "PTQ_DRAFT sentinel for serve() to resolve)")
+            if self.temperature != 0.0:
+                raise ValueError(
+                    "speculative serving is greedy-only (temperature 0): "
+                    "acceptance matches draft tokens against the target's "
+                    "argmax")
+            if sp.draft_k <= 0:
+                raise ValueError(
+                    f"draft_k must be positive (got {sp.draft_k})")
+        elif sp.draft_params is not None:
+            raise ValueError("draft_params without speculative serving "
+                             "enabled; pass both or neither")
+        pr = self.preemption
+        if pr.max_requeues is not None and pr.max_requeues < 0:
+            raise ValueError(
+                f"max_requeues must be >= 0 or None for unbounded retry "
+                f"(got {pr.max_requeues})")
+        if pr.enabled and self.prefill_mode == "scan":
+            raise ValueError(
+                "preemption resumes a victim by re-prefilling prompt + "
+                "emitted — a ragged-length fused-prefill that needs "
+                "per-position logits, so it cannot run with "
+                "prefill_mode='scan' (scan-mode prefill returns "
+                "last-padded-position logits only)")
+        px = self.prefix_cache
+        if px.enabled:
+            if not p.paged:
+                raise ValueError(
+                    "the prefix cache shares pages through block tables; it "
+                    "requires the paged pool (PoolConfig(paged=True))")
+            if self.prefill_mode == "scan":
+                raise ValueError(
+                    "the prefix cache prefills only the unmatched suffix — "
+                    "a ragged-length prefill that needs per-position "
+                    "logits, so it cannot run with prefill_mode='scan'")
+
+    @classmethod
+    def build(cls, *, n_slots: int, prompt_len: int, max_new_tokens: int,
+              chunk_steps: int = 8, temperature: float = 0.0,
+              prefill_mode: str = "auto", seed: int = 0,
+              paged: bool = False, page_size: int = 16,
+              n_pages: int | None = None, mesh=None,
+              speculative: bool = False, draft_params=None,
+              draft_k: int = 4, scheduler: str = "fifo",
+              age_after_s: float | None = None, preemption: bool = False,
+              max_requeues: int | None = None, faults=None,
+              prefix_cache: bool = False,
+              prefix_lru: bool = True) -> "ServeConfig":
+        """Build from the flat legacy kwarg spelling (the pre-ServeConfig
+        ``ContinuousBatcher`` signature, plus the prefix-cache knobs). The
+        deprecation shim forwards here; new code should construct the
+        sections directly."""
+        return cls(
+            pool=PoolConfig(n_slots=n_slots, prompt_len=prompt_len,
+                            max_new_tokens=max_new_tokens, paged=paged,
+                            page_size=page_size, n_pages=n_pages),
+            scheduler=SchedulerConfig(kind=scheduler,
+                                      age_after_s=age_after_s),
+            speculation=SpeculationConfig(enabled=speculative,
+                                          draft_k=draft_k,
+                                          draft_params=draft_params),
+            preemption=PreemptionConfig(enabled=preemption,
+                                        max_requeues=max_requeues),
+            prefix_cache=PrefixCacheConfig(enabled=prefix_cache,
+                                           lru=prefix_lru),
+            chunk_steps=chunk_steps, temperature=temperature,
+            prefill_mode=prefill_mode, seed=seed, mesh=mesh, faults=faults)
+
+    @classmethod
+    def from_args(cls, args, *, draft_params=None, mesh=None,
+                  faults=None) -> "ServeConfig":
+        """Build from the ``repro.launch.serve`` CLI namespace (the grouped
+        argparse sections mirror the config sections one-to-one).
+
+        ``--speculative`` without an explicit ``draft_params`` records the
+        :data:`PTQ_DRAFT` sentinel — serve() replaces it with the packed
+        planes its PTQ pass produces. ``max_new_tokens`` is the largest
+        entry of ``--gen-lens`` (or ``--gen-len``), matching how serve()
+        sizes its request trace.
+        """
+        gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
+                    if getattr(args, "gen_lens", None) else None)
+        max_new = max(gen_lens) if gen_lens else args.gen_len
+        if args.speculative and draft_params is None:
+            draft_params = PTQ_DRAFT
+        return cls.build(
+            n_slots=args.n_slots, prompt_len=args.prompt_len,
+            max_new_tokens=max_new, chunk_steps=args.chunk_steps,
+            temperature=args.temperature, seed=args.seed,
+            paged=args.paged, page_size=args.page_size,
+            n_pages=args.n_pages, mesh=mesh,
+            speculative=args.speculative, draft_params=draft_params,
+            draft_k=args.draft_k, scheduler=args.scheduler,
+            age_after_s=args.age_after, preemption=args.preemption,
+            max_requeues=args.max_requeues, faults=faults,
+            prefix_cache=args.prefix_cache, prefix_lru=args.prefix_lru)

@@ -135,6 +135,7 @@ def bursty_trace(
     gen_lens: tuple[int, ...] = (8, 16, 32),
     priorities: tuple[int, ...] | None = None,
     deadline_slack_s: float | None = None,
+    shared_prefix_len: int = 0,
     seed: int = 0,
 ) -> list[Request]:
     """Arrival trace of oversized bursts: ``burst_size`` requests land at
@@ -146,12 +147,23 @@ def bursty_trace(
     overload tests measure. Tier/deadline assignment matches
     :func:`~repro.serving.scheduler.poisson_trace`: priorities drawn
     uniformly from ``priorities``, and above-minimum tiers get
-    ``arrival + deadline_slack_s`` start deadlines. Deterministic in
-    ``seed``.
+    ``arrival + deadline_slack_s`` start deadlines. ``shared_prefix_len``
+    makes the first that many tokens of every prompt identical (the
+    shared-system-prompt workload the radix prefix cache serves).
+    Deterministic in ``seed``; a ``shared_prefix_len=0`` trace is
+    token-for-token identical to one built before the knob existed.
     """
     if burst_size <= 0:
         raise ValueError(f"burst_size must be positive (got {burst_size})")
+    if not 0 <= shared_prefix_len <= prompt_len:
+        raise ValueError(
+            f"shared_prefix_len {shared_prefix_len} outside "
+            f"[0, {prompt_len}]")
     rng = np.random.default_rng(seed)
+    # drawn only when requested, before any per-request draws: existing
+    # seeds replay byte-identical traces when the knob stays 0
+    shared = (rng.integers(0, vocab, shared_prefix_len, dtype=np.int32)
+              if shared_prefix_len else None)
     base_tier = min(priorities) if priorities else 0
     out = []
     for i in range(n_requests):
@@ -160,9 +172,12 @@ def bursty_trace(
         deadline = (arrival + deadline_slack_s
                     if deadline_slack_s is not None and tier > base_tier
                     else None)
+        prompt = rng.integers(0, vocab, prompt_len, dtype=np.int32)
+        if shared is not None:
+            prompt = np.concatenate([shared, prompt[shared_prefix_len:]])
         out.append(Request(
             rid=i,
-            prompt=rng.integers(0, vocab, prompt_len, dtype=np.int32),
+            prompt=prompt,
             max_new_tokens=int(rng.choice(gen_lens)),
             arrival_s=arrival,
             priority=tier,

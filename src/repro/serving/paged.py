@@ -22,6 +22,14 @@ the pages its own token count needs:
     can never run out of cache mid-flight; retirement releases them
     immediately — out-of-order completion returns memory to the pool without
     waiting for the batch.
+  * ``RadixPrefixCache`` — a trie of page-granular token blocks mapping
+    shared prompt prefixes to the (refcounted) pages already holding their
+    K/V, so admissions with a matching prefix point their block tables at
+    existing pages and prefill only the suffix. Pages carry holder counts
+    in the allocator (``share``/refcount-decrementing ``free``); the first
+    divergent *write* to a shared page is the batcher's copy-on-write
+    path, and LRU leaf eviction recycles trie-only pages when the pool
+    runs dry.
 
 The device side (page pools in the cache pytree, the block-table gather in
 ``attention_layers``/``kernels.paged_attn``) never sees this module — the
@@ -83,13 +91,22 @@ class PageStats:
 
 
 class PageAllocator:
-    """Free-list allocator over device page ids ``1 .. n_pages - 1``.
+    """Refcounted free-list allocator over device page ids ``1 .. n_pages - 1``.
 
     Page 0 (``NULL_PAGE``) is never issued — it is the scribble target for
     inert slots. ``alloc`` raises :class:`PoolExhausted` (leaving the free
     list untouched) when the request cannot be satisfied, so the batcher can
     re-queue the request instead of crashing; ``free`` raises
     :class:`SlotError` on a double-free or an unknown page id.
+
+    Pages are **refcounted** so the prefix cache can share one physical
+    page between many readers: ``alloc`` hands out pages at refcount 1,
+    ``share`` bumps the count for each additional holder (a slot's block
+    table pointing at a trie page, or the trie itself retaining a page a
+    slot wrote), and ``free`` *decrements* — a page only returns to the
+    free list when its last holder lets go. Exclusive use is the
+    refcount-1 special case, so non-sharing callers see the PR 3
+    alloc/free semantics unchanged (including double-free detection).
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -100,7 +117,7 @@ class PageAllocator:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: deque[int] = deque(range(1, n_pages))
-        self._held: set[int] = set()
+        self._ref: dict[int, int] = {}   # page id -> holder count
         self.peak_in_use = 0
         self.total_allocs = 0
         self._t0 = self._t_last = time.perf_counter()
@@ -112,15 +129,15 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._held)
+        return len(self._ref)
 
     def _tick(self) -> None:
         now = time.perf_counter()
-        self._page_seconds += len(self._held) * (now - self._t_last)
+        self._page_seconds += len(self._ref) * (now - self._t_last)
         self._t_last = now
 
     def alloc(self, n: int) -> list[int]:
-        """Claim ``n`` pages; all-or-nothing."""
+        """Claim ``n`` pages at refcount 1; all-or-nothing."""
         if n <= 0:
             raise ValueError(f"page allocation count must be positive, got {n}")
         if n > len(self._free):
@@ -129,20 +146,36 @@ class PageAllocator:
                 f"(pool of {self.n_pages - 1} usable)")
         self._tick()
         pages = [self._free.popleft() for _ in range(n)]
-        self._held.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         self.total_allocs += n
-        self.peak_in_use = max(self.peak_in_use, len(self._held))
+        self.peak_in_use = max(self.peak_in_use, len(self._ref))
         return pages
 
+    def share(self, pages: list[int]) -> None:
+        """Add one holder to each of ``pages`` (all must be live)."""
+        for p in pages:
+            if p not in self._ref:
+                raise SlotError(f"sharing page {p} that is not allocated")
+        for p in pages:
+            self._ref[p] += 1
+
+    def refcount(self, page: int) -> int:
+        """Current holder count (0 for free/unknown pages)."""
+        return self._ref.get(page, 0)
+
     def free(self, pages: list[int]) -> None:
-        """Return ``pages`` to the free list (double-free is an error)."""
+        """Drop one holder from each of ``pages``; a page returns to the
+        free list when its last holder lets go (over-free is an error)."""
         self._tick()
         for p in pages:
-            if p not in self._held:
+            if p not in self._ref:
                 raise SlotError(f"freeing page {p} that is not allocated "
                                 f"(double-free or foreign id)")
-            self._held.discard(p)
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
 
     def stats(self) -> PageStats:
         self._tick()
@@ -189,3 +222,159 @@ class BlockTableSet:
 
     def pages_of(self, slot: int) -> list[int]:
         return list(self._slot_pages.get(slot, ()))
+
+
+class _TrieNode:
+    """One page-granular token block in the radix prefix trie."""
+
+    __slots__ = ("key", "page", "parent", "children", "stamp")
+
+    def __init__(self, key, page, parent, stamp):
+        self.key = key            # tuple of page_size token ids
+        self.page = page          # device page holding these tokens' K/V
+        self.parent = parent
+        self.children: dict[tuple, _TrieNode] = {}
+        self.stamp = stamp        # LRU clock value of the last touch
+
+
+class RadixPrefixCache:
+    """Radix trie of page-granular token prefixes over shared device pages.
+
+    Each node maps one ``page_size``-token block (keyed by the token ids
+    themselves, so "same prefix" is literal token equality — no hash
+    collisions) to the device page holding that block's K/V; a root-to-node
+    path spells a page-aligned prompt prefix. The trie holds **one
+    allocator reference per node** (taken by the caller via
+    ``PageAllocator.share`` on the pages :meth:`insert` reports as new), so
+    retiring every slot that wrote a prefix leaves its pages resident for
+    future admissions until :meth:`evict` recycles them.
+
+    The batcher's contract:
+
+      * admit: ``match(prompt_tokens)`` -> shared pages for the new slot's
+        block table (caller ``share``\\ s them — the slot's own reference);
+        after prefilling the unmatched suffix, ``insert`` the prompt's full
+        pages so the next admission can hit them.
+      * preempt: ``insert`` the victim's valid ``prompt + emitted`` pages
+        before releasing its reservation, so resume-by-reprefill re-finds
+        them instead of recomputing.
+      * pool dry: ``evict(allocator, need)`` frees leaf pages whose *only*
+        remaining holder is the trie, oldest touch first, until ``need``
+        pages are free or nothing evictable remains.
+
+    Touches (hits and inserts) bump a deterministic logical clock, so LRU
+    order replays identically run to run — wall time never enters.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive (got {page_size})")
+        self.page_size = page_size
+        self._root = _TrieNode(None, NULL_PAGE, None, 0)
+        self._clock = 0
+        self.n_evicted = 0        # pages recycled by evict() over the run
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._clock += 1
+        node.stamp = self._clock
+
+    def _blocks(self, tokens) -> list[tuple]:
+        toks = [int(t) for t in tokens]
+        ps = self.page_size
+        return [tuple(toks[i:i + ps])
+                for i in range(0, len(toks) - len(toks) % ps, ps)]
+
+    @property
+    def n_pages(self) -> int:
+        """Pages currently retained by the trie."""
+        n = 0
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            n += len(node.children)
+            stack.extend(node.children.values())
+        return n
+
+    def pages(self) -> list[int]:
+        """Every page the trie currently holds a reference on."""
+        out = []
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                out.append(child.page)
+                stack.append(child)
+        return out
+
+    def match(self, tokens) -> list[int]:
+        """Longest page-aligned prefix of ``tokens`` present in the trie,
+        as the shared pages holding it (root-to-leaf order). Matched nodes
+        are touched (most-recently-used)."""
+        node, out = self._root, []
+        for key in self._blocks(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            self._touch(child)
+            out.append(child.page)
+            node = child
+        return out
+
+    def insert(self, tokens, pages: list[int]) -> list[int]:
+        """Record ``tokens``' full blocks as resident in ``pages``.
+
+        ``pages[i]`` must hold the K/V of tokens ``[i*ps, (i+1)*ps)``;
+        ``len(pages)`` must equal the number of full blocks. Blocks already
+        present keep the trie's existing page (first writer wins — the
+        contents are bit-identical by determinism, and a COW'd private
+        copy must not displace the shared original). Returns the pages of
+        *newly created* nodes: the caller must ``share`` exactly those to
+        hand the trie its references.
+        """
+        blocks = self._blocks(tokens)
+        if len(blocks) != len(pages):
+            raise SlotError(
+                f"insert wants one page per full token block "
+                f"({len(blocks)} blocks, {len(pages)} pages)")
+        node, new = self._root, []
+        for key, page in zip(blocks, pages):
+            child = node.children.get(key)
+            if child is None:
+                self._clock += 1
+                child = _TrieNode(key, page, node, self._clock)
+                node.children[key] = child
+                new.append(page)
+            else:
+                self._touch(child)
+            node = child
+        return new
+
+    def evict(self, allocator: PageAllocator, need: int) -> int:
+        """Recycle LRU leaf pages until ``allocator.available >= need``.
+
+        Only leaves whose page has refcount 1 — i.e. the trie is the sole
+        remaining holder; no live slot's block table points at it — are
+        eligible, so eviction can never pull a page out from under a
+        reader. Removing a leaf may newly expose its parent; eviction
+        walks inward until satisfied or nothing is evictable. Returns the
+        number of pages freed.
+        """
+        freed = 0
+        while allocator.available < need:
+            victim = None
+            stack = [self._root]
+            while stack:
+                node = stack.pop()
+                for child in node.children.values():
+                    if child.children:
+                        stack.append(child)
+                    elif allocator.refcount(child.page) == 1 and (
+                            victim is None or child.stamp < victim.stamp):
+                        victim = child
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            allocator.free([victim.page])
+            freed += 1
+            self.n_evicted += 1
+        return freed

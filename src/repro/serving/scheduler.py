@@ -278,6 +278,7 @@ def poisson_trace(
     prompt_lens: tuple[int, ...] | None = None,
     priorities: tuple[int, ...] | None = None,
     deadline_slack_s: float | None = None,
+    shared_prefix_len: int = 0,
     seed: int = 0,
 ) -> list[Request]:
     """Build a Poisson arrival trace with mixed gen (and prompt) lengths.
@@ -291,9 +292,14 @@ def poisson_trace(
     (default: all tier 0); with ``deadline_slack_s``, every request whose
     drawn priority is above the trace's minimum gets
     ``deadline_s = arrival_s + deadline_slack_s`` (latency-sensitive tiers
-    carry deadlines; best-effort waits indefinitely). Deterministic in
-    ``seed`` so benchmark runs (and the CI bench-gate's baseline
-    comparison) replay the identical arrival trace.
+    carry deadlines; best-effort waits indefinitely).
+    ``shared_prefix_len`` makes the first that many tokens of every prompt
+    identical (one draw shared trace-wide) — the shared-system-prompt
+    workload the radix prefix cache serves; the remainder of each prompt
+    stays per-request random. Deterministic in ``seed`` so benchmark runs
+    (and the CI bench-gate's baseline comparison) replay the identical
+    arrival trace — and a ``shared_prefix_len=0`` trace is token-for-token
+    identical to one built before the knob existed.
     """
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
@@ -303,6 +309,15 @@ def poisson_trace(
             raise ValueError(
                 f"prompt_lens entries {bad} outside (0, {prompt_len}]; every "
                 f"ragged length must fit the batcher's compiled prompt_len")
+    min_plen = min(prompt_lens) if prompt_lens else prompt_len
+    if not 0 <= shared_prefix_len <= min_plen:
+        raise ValueError(
+            f"shared_prefix_len {shared_prefix_len} outside [0, {min_plen}] "
+            f"(the shortest prompt in the trace)")
+    # drawn only when requested, AFTER the arrivals draw: existing seeds
+    # replay byte-identical traces when the knob stays 0
+    shared = (rng.integers(0, vocab, shared_prefix_len, dtype=np.int32)
+              if shared_prefix_len else None)
     base_tier = min(priorities) if priorities else 0
     out = []
     for i in range(n_requests):
@@ -311,12 +326,14 @@ def poisson_trace(
         deadline = (arrival + deadline_slack_s
                     if deadline_slack_s is not None and tier > base_tier
                     else None)
+        plen = int(rng.choice(prompt_lens)) if prompt_lens else prompt_len
+        prompt = rng.integers(0, vocab, plen, dtype=np.int32)
+        if shared is not None:
+            prompt = np.concatenate(
+                [shared, prompt[shared_prefix_len:]])
         out.append(Request(
             rid=i,
-            prompt=rng.integers(
-                0, vocab,
-                int(rng.choice(prompt_lens)) if prompt_lens else prompt_len,
-                dtype=np.int32),
+            prompt=prompt,
             max_new_tokens=int(rng.choice(gen_lens)),
             arrival_s=arrival,
             priority=tier,

@@ -16,6 +16,7 @@ import pytest
 from repro.configs.registry import get_smoke_config
 from repro.models.model import build_model
 from repro.serving import (
+    ServeConfig,
     AllocatorFault,
     ContinuousBatcher,
     FaultInjector,
@@ -108,11 +109,14 @@ def test_forced_exhaustion_recovers_bit_exact(arch, paged):
               chunk_steps=2)
     pg = dict(paged=True, page_size=PAGE_SIZE) if paged else {}
 
-    clean = ContinuousBatcher(model, params, **kw, **pg)
+    clean = ContinuousBatcher(model, params, ServeConfig.build(**kw, **pg))
     want = clean.run(reqs, wait_for_arrivals=False).tokens_by_rid()
 
     inj = FaultInjector(FaultPlan(exhaust_rids=(0, 3)))
-    faulty = ContinuousBatcher(model, params, **kw, **pg, faults=inj)
+    faulty = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     **kw, **pg, faults=inj))
     report = faulty.run(reqs, wait_for_arrivals=False, clock="chunks")
 
     assert report.faults == {"n_exhaust": 2, "n_alloc_fail": 0}
@@ -141,10 +145,12 @@ def test_allocator_fault_is_retried_never_preempted(arch):
                 max_new_tokens=4, arrival_s=1.5, priority=1),
     ]
     inj = FaultInjector(FaultPlan(fail_rids=(1,)))
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=6,
-                                chunk_steps=2, scheduler="tiered",
-                                preemption=True, faults=inj)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+                      chunk_steps=2, scheduler="tiered", preemption=True,
+                      faults=inj))
     report = batcher.run(trace, clock="chunks")
     assert report.faults == {"n_exhaust": 0, "n_alloc_fail": 1}
     assert report.n_preemptions == 0         # a free slot existed anyway —
@@ -166,11 +172,14 @@ def test_oversubscribed_bursty_trace_terminates_with_typed_completions(arch):
     blocks = -(-(PROMPT_LEN + gen) // PAGE_SIZE)
     inj = FaultInjector(FaultPlan(p_exhaust=0.2, seed=11))
     batcher = ContinuousBatcher(
-        model, params, n_slots=n_slots, prompt_len=PROMPT_LEN,
-        max_new_tokens=gen, chunk_steps=2, paged=True, page_size=PAGE_SIZE,
-        n_pages=1 + n_slots * blocks // 2,     # half-provisioned pages too
-        scheduler="tiered", age_after_s=4.0, preemption=True,
-        max_requeues=8, faults=inj)
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=n_slots, prompt_len=PROMPT_LEN,
+                      max_new_tokens=gen, chunk_steps=2, paged=True,
+                      page_size=PAGE_SIZE,
+                      n_pages=1 + n_slots * blocks // 2,   # half-provisioned
+                      scheduler="tiered", age_after_s=4.0, preemption=True,
+                      max_requeues=8, faults=inj))
     report = batcher.run(trace, clock="chunks")
     assert len(report.completions) == 12
     assert {c.status for c in report.completions} <= {"ok", "shed"}

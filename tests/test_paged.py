@@ -16,6 +16,7 @@ from repro.kernels.paged_attn import (
 from repro.launch.generate import make_generate
 from repro.models.model import build_model
 from repro.serving import (
+    ServeConfig,
     ContinuousBatcher,
     PageAllocator,
     PoolExhausted,
@@ -198,9 +199,12 @@ def test_paged_matches_dense_and_static_ragged(served):
     reqs = _requests([(8, 6), (3, 2), (5, 4), (6, 3), (8, 6)])
     kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
               chunk_steps=2)
-    dense = ContinuousBatcher(model, params, **kw)
+    dense = ContinuousBatcher(model, params, ServeConfig.build(**kw))
     got_d = dense.run(reqs, wait_for_arrivals=False).tokens_by_rid()
-    paged = ContinuousBatcher(model, params, paged=True, page_size=4, **kw)
+    paged = ContinuousBatcher(
+                model, params,
+                ServeConfig.build(
+                    paged=True, page_size=4, **kw))
     report = paged.run(reqs, wait_for_arrivals=False)
     got_p = report.tokens_by_rid()
     for req in reqs:
@@ -223,10 +227,12 @@ def test_paged_matches_dense_mla(served):
     reqs = _requests([(8, 4), (5, 6), (8, 2)], seed=1)
     kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
               chunk_steps=2)
-    got_d = ContinuousBatcher(model, params, **kw).run(
+    got_d = ContinuousBatcher(model, params, ServeConfig.build(**kw)).run(
         reqs, wait_for_arrivals=False).tokens_by_rid()
-    got_p = ContinuousBatcher(model, params, paged=True, page_size=4,
-                              **kw).run(
+    got_p = ContinuousBatcher(
+                model, params,
+                ServeConfig.build(
+                    paged=True, page_size=4, **kw)).run(
         reqs, wait_for_arrivals=False).tokens_by_rid()
     for req in reqs:
         np.testing.assert_array_equal(got_p[req.rid], got_d[req.rid],
@@ -241,10 +247,12 @@ def test_paged_matches_dense_int8_kv(served):
     reqs = _requests([(8, 4), (6, 3), (8, 2)], seed=2)
     kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
               chunk_steps=2)
-    got_d = ContinuousBatcher(model, params, **kw).run(
+    got_d = ContinuousBatcher(model, params, ServeConfig.build(**kw)).run(
         reqs, wait_for_arrivals=False).tokens_by_rid()
-    got_p = ContinuousBatcher(model, params, paged=True, page_size=4,
-                              **kw).run(
+    got_p = ContinuousBatcher(
+                model, params,
+                ServeConfig.build(
+                    paged=True, page_size=4, **kw)).run(
         reqs, wait_for_arrivals=False).tokens_by_rid()
     for req in reqs:
         np.testing.assert_array_equal(got_p[req.rid], got_d[req.rid],
@@ -259,10 +267,11 @@ def test_undersized_pool_requeues_and_completes(served):
     reqs = _requests([(8, 4), (8, 4), (8, 4)])
     # each request needs pages_needed(8, 4, 4) = 3 pages; 4 usable pages
     # fit only one at a time even though 2 slots are free
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2, paged=True, page_size=4,
-                                n_pages=5)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2, paged=True, page_size=4, n_pages=5))
     report = batcher.run(reqs, wait_for_arrivals=False)
     assert len(report.completions) == 3
     assert report.peak_active == 1               # never two in flight
@@ -279,10 +288,12 @@ def test_unservable_request_raises(served):
     spinning forever."""
     model, params = served
     reqs = _requests([(8, 8)])                   # needs 4 pages of size 4
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=8,
-                                chunk_steps=2, paged=True, page_size=4,
-                                n_pages=4)       # only 3 usable
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=8,
+                      chunk_steps=2, paged=True, page_size=4,
+                      n_pages=4))               # only 3 usable
     with pytest.raises(PoolExhausted):
         batcher.run(reqs, wait_for_arrivals=False)
 
@@ -292,9 +303,11 @@ def test_dense_batcher_serves_ragged_prompts(served):
     compiled prefill shape and still matches the static pipeline."""
     model, params = served
     reqs = _requests([(3, 3), (8, 2), (6, 4)], seed=3)
-    batcher = ContinuousBatcher(model, params, n_slots=3,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=3, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2))
     got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
     for req in reqs:
         np.testing.assert_array_equal(

@@ -16,6 +16,7 @@ import pytest
 from repro.configs.registry import get_smoke_config
 from repro.models.model import build_model
 from repro.serving import (
+    ServeConfig,
     ContinuousBatcher,
     Request,
     ResumeState,
@@ -66,11 +67,17 @@ def test_preempted_resume_bit_exact(arch, paged):
     pg = dict(paged=True, page_size=PAGE_SIZE) if paged else {}
 
     # reference: enough slots for everyone, plain FIFO, no preemption
-    ref = ContinuousBatcher(model, params, n_slots=4, **kw, **pg)
+    ref = ContinuousBatcher(
+              model, params,
+              ServeConfig.build(
+                  n_slots=4, **kw, **pg))
     ref_toks = ref.run(trace, wait_for_arrivals=False).tokens_by_rid()
 
-    batcher = ContinuousBatcher(model, params, n_slots=2, **kw, **pg,
-                                scheduler="tiered", preemption=True)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, **kw, **pg, scheduler="tiered",
+                      preemption=True))
     report = batcher.run(trace, clock="chunks")
 
     assert report.n_preemptions >= 2        # both interactive admissions evict
@@ -95,10 +102,12 @@ def test_preemption_releases_pages(arch):
     trace = _staggered_trace(model.cfg.vocab)
     blocks = -(-(PROMPT_LEN + 12) // PAGE_SIZE)
     batcher = ContinuousBatcher(
-        model, params, n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=12,
-        chunk_steps=2, paged=True, page_size=PAGE_SIZE,
-        n_pages=1 + 2 * blocks,                # exactly the two victims' pages
-        scheduler="tiered", preemption=True)
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=12,
+                      chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+                      n_pages=1 + 2 * blocks,   # the two victims' pages
+                      scheduler="tiered", preemption=True))
     report = batcher.run(trace, clock="chunks")
     assert report.n_preemptions >= 2
     assert len(report.ok_completions) == 4
@@ -119,10 +128,11 @@ def test_deadline_expired_request_is_shed_not_served(arch):
         # deadline passes long before rid 0's 6 chunks drain
         Request(rid=1, prompt=prompt(), max_new_tokens=4, deadline_s=1.0),
     ]
-    batcher = ContinuousBatcher(model, params, n_slots=1,
-                                prompt_len=PROMPT_LEN, max_new_tokens=12,
-                                chunk_steps=2, scheduler="tiered",
-                                preemption=True)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=1, prompt_len=PROMPT_LEN, max_new_tokens=12,
+                      chunk_steps=2, scheduler="tiered", preemption=True))
     report = batcher.run(trace, clock="chunks")
     by_rid = {c.rid: c for c in report.completions}
     assert by_rid[1].status == "shed"
@@ -147,12 +157,13 @@ def test_retry_budget_exhaustion_sheds(arch):
         for i in range(2)
     ]
     need = -(-(PROMPT_LEN + 4) // PAGE_SIZE)
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2, paged=True,
-                                page_size=PAGE_SIZE,
-                                n_pages=1 + need,      # fits one request
-                                max_requeues=0)        # no second chance
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+                      n_pages=1 + need,      # fits one request
+                      max_requeues=0))       # no second chance
     report = batcher.run(trace, clock="chunks")
     by_rid = {c.rid: c for c in report.completions}
     assert by_rid[0].status == "ok"
@@ -160,10 +171,12 @@ def test_retry_budget_exhaustion_sheds(arch):
     assert by_rid[1].shed_reason == "retries"
     assert report.n_shed == 1
     # unbounded retry (the default) serves both instead
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2, paged=True,
-                                page_size=PAGE_SIZE, n_pages=1 + need)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+                      n_pages=1 + need))
     report = batcher.run(trace, clock="chunks")
     assert all(c.status == "ok" for c in report.completions)
     assert report.n_requeues > 0
@@ -237,15 +250,19 @@ def test_select_victim_prefers_most_pages_then_least_progress():
 def test_preemption_requires_fused_prefill(arch):
     _, model, params = arch
     with pytest.raises(ValueError, match="fused-prefill"):
-        ContinuousBatcher(model, params, n_slots=2, prompt_len=PROMPT_LEN,
-                          max_new_tokens=4, prefill_mode="scan",
-                          preemption=True)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                prefill_mode="scan", preemption=True))
 
 
 def test_resume_snapshot_without_preemption_rejected(arch):
     _, model, params = arch
-    batcher = ContinuousBatcher(model, params, n_slots=1,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=1, prompt_len=PROMPT_LEN, max_new_tokens=4))
     resumed = Request(rid=0, prompt=np.zeros(PROMPT_LEN, np.int32),
                       max_new_tokens=4,
                       resume=ResumeState(emitted=(1, 2), preemptions=1,
@@ -258,13 +275,23 @@ def test_oversubscription_knob_validation(arch):
     _, model, params = arch
     kw = dict(n_slots=1, prompt_len=PROMPT_LEN, max_new_tokens=4)
     with pytest.raises(ValueError, match="scheduler"):
-        ContinuousBatcher(model, params, **kw, scheduler="edf")
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                **kw, scheduler="edf"))
     with pytest.raises(ValueError, match="tiered"):
-        ContinuousBatcher(model, params, **kw, age_after_s=1.0)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                **kw, age_after_s=1.0))
     with pytest.raises(ValueError, match="max_requeues"):
-        ContinuousBatcher(model, params, **kw, max_requeues=-1)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                **kw, max_requeues=-1))
     with pytest.raises(ValueError, match="clock"):
-        ContinuousBatcher(model, params, **kw).run([], clock="steps")
+        ContinuousBatcher(model, params,
+                          ServeConfig.build(**kw)).run([], clock="steps")
 
 
 def test_request_validation():

@@ -1,0 +1,515 @@
+"""Radix prefix cache: refcount/trie invariants, COW, LRU eviction, and the
+bit-exact sharing matrix — plus the ServeConfig surface that carries it.
+
+The load-bearing claim (ISSUE 7 acceptance): a shared-system-prompt trace
+served with the prefix cache emits tokens bit-exact with the non-shared run
+at temperature 0, across {GQA, MLA} x {fp, kv_quant int8} x {vanilla,
+speculative, preemption} — sharing changes *work*, never *tokens*. The
+allocator/trie core is covered by properties (refcount conservation, no
+double-free, first-writer-wins inserts, LRU eviction only ever recycling
+trie-only leaves), hypothesis-driven where available and via seeded random
+drivers always.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.model import build_model
+from repro.serving import (
+    ContinuousBatcher,
+    PageAllocator,
+    PrefixCacheConfig,
+    PoolConfig,
+    PTQ_DRAFT,
+    RadixPrefixCache,
+    Request,
+    ServeConfig,
+    SlotError,
+    bursty_trace,
+    poisson_trace,
+)
+
+PROMPT_LEN = 8
+PAGE_SIZE = 4
+
+CFGS = {
+    "gqa": get_smoke_config("granite-3-8b"),
+    "mla": get_smoke_config("minicpm3-4b"),
+}
+
+
+@pytest.fixture(scope="module", params=["gqa", "mla"])
+def arch(request):
+    cfg = CFGS[request.param]
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    return request.param, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = build_model(CFGS["gqa"], dtype=jnp.float32, remat=False)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _variant(model, kv):
+    return dataclasses.replace(model, kv_quant=True) if kv == "int8" \
+        else model
+
+
+def _shared_trace(vocab, gens, shared_len, seed=0, **req_kw):
+    """Requests whose prompts share their first ``shared_len`` tokens."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, shared_len, dtype=np.int32)
+    out = []
+    for i, g in enumerate(gens):
+        tail = rng.integers(0, vocab, PROMPT_LEN - shared_len,
+                            dtype=np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                           max_new_tokens=g, **req_kw))
+    return out
+
+
+# ----------------------------------------------------- allocator refcounts
+def test_share_free_refcount_cycle():
+    alloc = PageAllocator(n_pages=6, page_size=4)
+    pages = alloc.alloc(2)
+    assert all(alloc.refcount(p) == 1 for p in pages)
+    alloc.share(pages)                        # second holder
+    assert all(alloc.refcount(p) == 2 for p in pages)
+    alloc.free(pages)                         # first holder lets go:
+    assert alloc.in_use == 2                  # pages stay live
+    assert alloc.available == 3
+    alloc.free(pages)                         # last holder: pages recycle
+    assert alloc.in_use == 0 and alloc.available == 5
+    with pytest.raises(SlotError):
+        alloc.free(pages)                     # over-free is still an error
+    with pytest.raises(SlotError):
+        alloc.share(pages)                    # sharing a free page too
+
+
+def test_share_unknown_page_takes_nothing():
+    alloc = PageAllocator(n_pages=4, page_size=2)
+    a = alloc.alloc(1)
+    with pytest.raises(SlotError):
+        alloc.share(a + [3])                  # 3 was never issued
+    assert alloc.refcount(a[0]) == 1          # all-or-nothing: no bump
+
+
+def test_refcount_conservation_random_trace():
+    """Seeded driver (always runs): arbitrary alloc/share/free
+    interleavings conserve pages exactly — a page is free or live, never
+    both, and total holders drain to zero without leaks."""
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(n_pages=12, page_size=4)
+    holders: list[int] = []                   # one entry per reference
+    for _ in range(400):
+        op = rng.integers(0, 3)
+        if op == 0:
+            n = int(rng.integers(1, 4))
+            if n <= alloc.available:
+                holders += alloc.alloc(n)
+        elif op == 1 and holders:
+            p = holders[int(rng.integers(len(holders)))]
+            alloc.share([p])
+            holders.append(p)
+        elif op == 2 and holders:
+            p = holders.pop(int(rng.integers(len(holders))))
+            alloc.free([p])
+        live = set(holders)
+        assert alloc.in_use == len(live)
+        assert alloc.in_use + alloc.available == 11
+        for p in live:
+            assert alloc.refcount(p) == holders.count(p)
+    alloc.free(holders)
+    assert alloc.in_use == 0 and alloc.available == 11
+
+
+def test_refcount_properties_hypothesis():
+    """Property form of the conservation/no-double-free invariants."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = hypothesis.strategies
+
+    @hypothesis.given(
+        ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                     max_size=60))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def run(ops):
+        alloc = PageAllocator(n_pages=8, page_size=4)
+        holders: list[int] = []
+        for op, pick in ops:
+            if op == 0 and alloc.available:
+                holders += alloc.alloc(1)
+            elif op == 1 and holders:
+                p = holders[pick % len(holders)]
+                alloc.share([p])
+                holders.append(p)
+            elif op == 2 and holders:
+                alloc.free([holders.pop(pick % len(holders))])
+            assert alloc.in_use == len(set(holders))
+            assert alloc.in_use + alloc.available == 7
+        alloc.free(holders)
+        assert alloc.in_use == 0
+
+    run()
+
+
+# ------------------------------------------------------------- trie core
+def test_trie_match_insert_first_writer_wins():
+    trie = RadixPrefixCache(page_size=4)
+    toks = list(range(12))
+    assert trie.match(toks) == []
+    assert trie.insert(toks, [5, 6, 7]) == [5, 6, 7]
+    assert trie.match(toks) == [5, 6, 7]
+    assert trie.match(toks[:7]) == [5]        # page-aligned prefix only
+    assert trie.match([9] + toks[1:]) == []   # literal token equality
+    # re-insert under different pages: existing nodes keep their page (a
+    # COW'd private copy must not displace the shared original)
+    assert trie.insert(toks, [8, 9, 10]) == []
+    assert trie.match(toks) == [5, 6, 7]
+    # extending a known prefix creates only the new tail nodes
+    assert trie.insert(toks + [99, 98, 97, 96], [5, 6, 7, 11]) == [11]
+    assert trie.n_pages == 4
+
+
+def test_trie_insert_wants_one_page_per_block():
+    trie = RadixPrefixCache(page_size=4)
+    with pytest.raises(SlotError, match="one page per full token block"):
+        trie.insert(list(range(8)), [1])
+
+
+def test_lru_evicts_only_trie_only_leaves_oldest_first():
+    alloc = PageAllocator(n_pages=8, page_size=2)
+    trie = RadixPrefixCache(page_size=2)
+    a = alloc.alloc(2)                        # chain A: two blocks
+    alloc.share(trie.insert([0, 1, 2, 3], a))
+    b = alloc.alloc(1)                        # chain B: one block
+    alloc.share(trie.insert([9, 9], b))
+    alloc.free(a + b)                         # slots retire; trie-only now
+    alloc.share([b[0]])                       # ...but a reader holds B
+    assert alloc.available == 4
+    # need 6 free: only A is evictable — leaf first, then its parent
+    assert trie.evict(alloc, need=6) == 2
+    assert alloc.available == 6
+    assert trie.match([0, 1, 2, 3]) == []
+    assert trie.match([9, 9]) == b            # refcount-2 page untouched
+    assert alloc.refcount(b[0]) == 2
+    # nothing else evictable: evict() stops rather than stealing from B
+    assert trie.evict(alloc, need=7) == 0
+    assert trie.n_evicted == 2
+
+
+def test_lru_eviction_order_is_recency_not_insertion():
+    alloc = PageAllocator(n_pages=8, page_size=2)
+    trie = RadixPrefixCache(page_size=2)
+    a = alloc.alloc(1)
+    alloc.share(trie.insert([1, 1], a))
+    b = alloc.alloc(1)
+    alloc.share(trie.insert([2, 2], b))
+    alloc.free(a + b)
+    trie.match([1, 1])                        # touch A: B is now oldest
+    assert trie.evict(alloc, need=alloc.available + 1) == 1
+    assert trie.match([2, 2]) == []           # B went first
+    assert trie.match([1, 1]) == a
+
+
+def test_trie_eviction_properties_hypothesis():
+    """Property: under random insert/match/share/free/evict sequences the
+    trie never evicts a page another holder still references, and trie
+    retention plus slot holders always conserve the pool."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = hypothesis.strategies
+
+    @hypothesis.given(
+        ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5),
+                               st.integers(1, 3)), max_size=40))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def run(ops):
+        alloc = PageAllocator(n_pages=10, page_size=2)
+        trie = RadixPrefixCache(page_size=2)
+        slot_pages: list[list[int]] = []      # non-trie holders
+        for op, pick, nblk in ops:
+            if op == 0 and alloc.available >= nblk:
+                toks = [pick] * (2 * nblk)    # deterministic prefix family
+                pages = trie.match(toks)
+                fresh = alloc.alloc(nblk - len(pages))
+                alloc.share(pages)
+                held = pages + fresh
+                alloc.share(trie.insert(toks, held))
+                slot_pages.append(held)
+            elif op == 1 and slot_pages:
+                alloc.free(slot_pages.pop(pick % len(slot_pages)))
+            elif op == 2:
+                trie.evict(alloc, need=nblk)
+            elif op == 3:
+                trie.match([pick] * 4)
+            live = set(trie.pages()) | {
+                p for grp in slot_pages for p in grp}
+            assert alloc.in_use == len(live)
+            assert alloc.in_use + alloc.available == 9
+            for p in trie.pages():            # the trie's ref is intact
+                assert alloc.refcount(p) >= 1
+        for grp in slot_pages:
+            alloc.free(grp)
+        trie.evict(alloc, need=9)
+        assert alloc.available == 9           # full drain: no leaks
+
+    run()
+
+
+# ------------------------------------------- bit-exact sharing equivalence
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+@pytest.mark.parametrize("speculative", [False, True],
+                         ids=["vanilla", "spec"])
+def test_shared_prefix_bit_exact(arch, kv, speculative):
+    """{GQA, MLA} x {fp, int8} x {vanilla, speculative}: a shared-prefix
+    trace through the prefix cache emits the exact tokens of the
+    non-shared run, while admissions hit shared pages and skip prefill
+    positions."""
+    name, model, params = arch
+    model = _variant(model, kv)
+    trace = _shared_trace(model.cfg.vocab, [4, 6, 4, 6, 4], shared_len=4)
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+              chunk_steps=2, paged=True, page_size=PAGE_SIZE)
+    if speculative:
+        kw.update(speculative=True, draft_params=params, draft_k=2)
+
+    ref = ContinuousBatcher(model, params, ServeConfig.build(**kw))
+    ref_report = ref.run(trace, wait_for_arrivals=False)
+    shared = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     prefix_cache=True, **kw))
+    report = shared.run(trace, wait_for_arrivals=False)
+
+    want = ref_report.tokens_by_rid()
+    for c in report.completions:
+        assert c.status == "ok"
+        np.testing.assert_array_equal(
+            c.tokens, want[c.rid],
+            err_msg=f"{name} kv={kv} spec={speculative}: request {c.rid} "
+                    f"diverged under prefix sharing")
+    px = report.prefix
+    assert px is not None and px["hit_pages"] > 0
+    assert px["tokens_saved"] > 0
+    # the prefill-FLOPs proxy: shared admissions feed fewer positions
+    assert report.n_prefill_positions < ref_report.n_prefill_positions
+    assert report.summary()["prefix"] == px
+
+
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+def test_preempt_resume_via_trie_bit_exact(arch, kv):
+    """{GQA, MLA} x {fp, int8} with preemption: victims' pages are parked
+    in the trie at eviction, so resume-by-reprefill (and the interactive
+    admissions sharing their prefix) hit instead of recomputing — tokens
+    still equal the fully-provisioned, never-preempted run."""
+    name, model, params = arch
+    model = _variant(model, kv)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, model.cfg.vocab, 4, dtype=np.int32)
+    prompt = lambda: np.concatenate([
+        shared, rng.integers(0, model.cfg.vocab, PROMPT_LEN - 4,
+                             dtype=np.int32)])
+    trace = [
+        Request(rid=0, prompt=prompt(), max_new_tokens=12),
+        Request(rid=1, prompt=prompt(), max_new_tokens=12),
+        Request(rid=2, prompt=prompt(), max_new_tokens=4,
+                arrival_s=1.5, priority=1),
+        Request(rid=3, prompt=prompt(), max_new_tokens=4,
+                arrival_s=1.5, priority=1),
+    ]
+    kw = dict(prompt_len=PROMPT_LEN, max_new_tokens=12, chunk_steps=2,
+              paged=True, page_size=PAGE_SIZE)
+    ref = ContinuousBatcher(
+              model, params,
+              ServeConfig.build(
+                  n_slots=4, **kw))
+    want = ref.run(trace, wait_for_arrivals=False).tokens_by_rid()
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, **kw, scheduler="tiered", preemption=True,
+                      prefix_cache=True))
+    report = batcher.run(trace, clock="chunks")
+    assert report.n_preemptions >= 2
+    for c in report.completions:
+        assert c.status == "ok"
+        np.testing.assert_array_equal(
+            c.tokens, want[c.rid],
+            err_msg=f"{name} kv={kv}: request {c.rid} diverged through "
+                    f"preempt + trie resume")
+    # the victims' parked pages (and the shared system prefix) were re-hit
+    assert report.prefix["hit_pages"] > 0
+
+
+def test_cow_keeps_shared_pages_pristine(served):
+    """Identical page-aligned prompts served back to back: each later
+    admission full-matches and COWs the boundary page. If COW ever wrote
+    into the shared original, the later requests' last-prompt-position
+    logits — hence tokens — would diverge."""
+    model, params = served
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, model.cfg.vocab, PROMPT_LEN, dtype=np.int32)
+    trace = [Request(rid=i, prompt=prompt.copy(), max_new_tokens=4)
+             for i in range(3)]
+    # headroom past the slot's own reservation: the trie keeps the two
+    # prompt pages resident between admissions, and COW claims one extra
+    kw = dict(n_slots=1, prompt_len=PROMPT_LEN, max_new_tokens=4,
+              chunk_steps=2, paged=True, page_size=PAGE_SIZE, n_pages=8)
+    want = ContinuousBatcher(
+               model, params,
+               ServeConfig.build(**kw)).run(
+        trace, wait_for_arrivals=False).tokens_by_rid()
+    report = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     prefix_cache=True, **kw)).run(
+        trace, wait_for_arrivals=False)
+    px = report.prefix
+    assert px["cow_copies"] == 2              # rid 1 and rid 2 full-match
+    assert px["hit_pages"] == 4               # 2 pages x 2 admissions
+    for c in report.completions:
+        np.testing.assert_array_equal(c.tokens, want[c.rid],
+                                      err_msg=f"request {c.rid}")
+
+
+def test_lru_eviction_under_tight_pool(served):
+    """A pool with no headroom for trie retention: admissions evict stale
+    trie leaves instead of raising PoolExhausted, and tokens still match
+    the uncached run."""
+    model, params = served
+    trace = _shared_trace(model.cfg.vocab, [4] * 5, shared_len=4, seed=2)
+    blocks = -(-(PROMPT_LEN + 4) // PAGE_SIZE)
+    kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+              chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+              n_pages=1 + 2 * blocks)         # exactly two live requests
+    want = ContinuousBatcher(
+               model, params,
+               ServeConfig.build(**kw)).run(
+        trace, wait_for_arrivals=False).tokens_by_rid()
+    report = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     prefix_cache=True, **kw)).run(
+        trace, wait_for_arrivals=False)
+    assert report.prefix["lru_evictions"] > 0
+    assert len(report.ok_completions) == 5
+    for c in report.completions:
+        np.testing.assert_array_equal(c.tokens, want[c.rid],
+                                      err_msg=f"request {c.rid}")
+    # every page is accounted for at trace end: live none, trie the rest
+    assert report.pages["pages_in_use"] == report.prefix["cached_pages_end"]
+
+
+def test_prefix_survives_retirement(served):
+    """n_slots=1 serializes the trace, so every hit is necessarily against
+    pages whose writer already retired — the trie's own reference keeps
+    them resident."""
+    model, params = served
+    trace = _shared_trace(model.cfg.vocab, [4, 4, 4], shared_len=4, seed=3)
+    report = ContinuousBatcher(
+                 model, params,
+                 ServeConfig.build(
+                     n_slots=1, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                     chunk_steps=2, paged=True, page_size=PAGE_SIZE,
+                     prefix_cache=True)).run(
+        trace, wait_for_arrivals=False)
+    assert report.prefix["hit_pages"] >= 2    # rid 1 and rid 2 each hit
+    assert report.prefix["tokens_saved"] >= 8
+    assert len(report.ok_completions) == 3
+
+
+# ------------------------------------------------- trace knob + config API
+def test_shared_prefix_len_trace_knob():
+    kw = dict(prompt_len=8, vocab=64, seed=5)
+    plain = poisson_trace(6, **kw)
+    shared = poisson_trace(6, shared_prefix_len=4, **kw)
+    first = shared[0].prompt[:4]
+    assert len(set(first.tolist())) > 1       # an actual shared draw
+    for p, s in zip(plain, shared):
+        np.testing.assert_array_equal(s.prompt[:4], first)
+        # arrivals are drawn before the shared prefix, so the arrival
+        # pattern is identical whatever the knob
+        assert s.arrival_s == p.arrival_s
+    # knob 0 is byte-identical to not passing the knob at all
+    for p, z in zip(plain, poisson_trace(6, shared_prefix_len=0, **kw)):
+        np.testing.assert_array_equal(z.prompt, p.prompt)
+        assert z.max_new_tokens == p.max_new_tokens
+    burst = bursty_trace(4, prompt_len=8, vocab=64, burst_size=2,
+                         burst_gap_s=1.0, shared_prefix_len=8, seed=5)
+    for r in burst[1:]:
+        np.testing.assert_array_equal(r.prompt, burst[0].prompt)
+    with pytest.raises(ValueError, match="shared_prefix_len"):
+        poisson_trace(4, prompt_len=8, vocab=64, shared_prefix_len=9)
+    with pytest.raises(ValueError, match="shared_prefix_len"):
+        bursty_trace(4, prompt_len=8, vocab=64, burst_size=2,
+                     burst_gap_s=1.0, shared_prefix_len=-1)
+
+
+def test_serve_config_validation():
+    ok = ServeConfig.build(n_slots=2, prompt_len=8, max_new_tokens=4)
+    assert ok.pool.max_len == 12
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(prefix_cache=PrefixCacheConfig(enabled=True))
+    with pytest.raises(ValueError, match="scan"):
+        ServeConfig(pool=PoolConfig(paged=True), prefill_mode="scan",
+                    prefix_cache=PrefixCacheConfig(enabled=True))
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeConfig.build(n_slots=2, prompt_len=8, max_new_tokens=4,
+                          speculative=True)
+    with pytest.raises(ValueError, match="temperature"):
+        ServeConfig.build(n_slots=2, prompt_len=8, max_new_tokens=4,
+                          speculative=True, draft_params=PTQ_DRAFT,
+                          temperature=0.7)
+    with pytest.raises(ValueError, match="prompt_len"):
+        ServeConfig.build(n_slots=2, prompt_len=0, max_new_tokens=4)
+
+
+def test_serve_config_is_frozen_and_comparable():
+    a = ServeConfig.build(n_slots=2, prompt_len=8, max_new_tokens=4,
+                          paged=True, prefix_cache=True)
+    b = ServeConfig.build(n_slots=2, prompt_len=8, max_new_tokens=4,
+                          paged=True, prefix_cache=True, faults=object())
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.chunk_steps = 3
+    assert a == b                  # runtime handles don't break equality
+    assert "faults" not in repr(a)
+
+
+def test_flat_kwargs_shim_warns_and_forwards(served):
+    model, params = served
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        batcher = ContinuousBatcher(model, params, n_slots=2,
+                                    prompt_len=8, max_new_tokens=4)
+    assert batcher.config == ServeConfig.build(
+        n_slots=2, prompt_len=8, max_new_tokens=4)
+    with pytest.raises(TypeError, match="not both"):
+        ContinuousBatcher(model, params, batcher.config, n_slots=2)
+    with pytest.raises(TypeError, match="needs a config"):
+        ContinuousBatcher(model, params)
+
+
+def test_batcher_rejects_unresolved_ptq_sentinel(served):
+    model, params = served
+    with pytest.raises(ValueError, match="PTQ_DRAFT sentinel"):
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                n_slots=2, prompt_len=8, max_new_tokens=4,
+                speculative=True, draft_params=PTQ_DRAFT))
+
+
+def test_prefix_cache_needs_all_attention_pattern():
+    cfg = get_smoke_config("jamba-v0.1-52b")  # mamba/attn hybrid
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    assert not model.can_prefix_cache
+    with pytest.raises(ValueError, match="all-attention"):
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                n_slots=2, prompt_len=8, max_new_tokens=4, paged=True,
+                page_size=4, prefix_cache=True))

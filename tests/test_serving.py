@@ -10,6 +10,7 @@ from repro.configs.registry import get_smoke_config
 from repro.launch.generate import make_generate
 from repro.models.model import build_model
 from repro.serving import (
+    ServeConfig,
     ContinuousBatcher,
     FIFOScheduler,
     Request,
@@ -51,9 +52,11 @@ def test_slot_reuse_after_retirement(served):
     """5 requests through 2 slots: every slot retires and is re-admitted."""
     model, params = served
     reqs = _requests([2, 2, 2, 2, 2])
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2))
     report = batcher.run(reqs, wait_for_arrivals=False)
     assert len(report.completions) == 5
     assert report.n_prefills == 5           # each admission prefills once
@@ -68,9 +71,11 @@ def test_admission_with_queue_longer_than_free_slots(served):
     """Admissions are FIFO and deferred until a slot frees up."""
     model, params = served
     reqs = _requests([3, 3, 3, 3, 3, 3])
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2))
     report = batcher.run(reqs, wait_for_arrivals=False)
     assert len(report.completions) == 6
     by_rid = {c.rid: c for c in report.completions}
@@ -85,9 +90,11 @@ def test_mixed_gen_lengths_finish_out_of_order(served):
     """Short requests retire early instead of padding to the longest."""
     model, params = served
     reqs = _requests([12, 2, 6])
-    batcher = ContinuousBatcher(model, params, n_slots=3,
-                                prompt_len=PROMPT_LEN, max_new_tokens=12,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=3, prompt_len=PROMPT_LEN, max_new_tokens=12,
+                      chunk_steps=2))
     report = batcher.run(reqs, wait_for_arrivals=False)
     by_rid = {c.rid: c for c in report.completions}
     assert by_rid[1].finished_s < by_rid[2].finished_s < by_rid[0].finished_s
@@ -102,9 +109,11 @@ def test_continuous_matches_static_pipeline_temp0(served):
     slots, mixed gen lengths, and slot reuse included."""
     model, params = served
     reqs = _requests([6, 2, 4, 3, 6])
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=6,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+                      chunk_steps=2))
     report = batcher.run(reqs, wait_for_arrivals=False)
     got = report.tokens_by_rid()
     for req in reqs:
@@ -146,9 +155,11 @@ def test_continuous_matches_static_ssm_pattern():
     prompts = rng.integers(0, cfg.vocab, (3, PROMPT_LEN), dtype=np.int32)
     reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=g)
             for i, g in enumerate([4, 2, 6])]
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=6,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+                      chunk_steps=2))
     got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
     for req in reqs:
         np.testing.assert_array_equal(
@@ -203,8 +214,10 @@ def test_slot_pool_guards():
 def test_empty_trace_returns_empty_report(served):
     """A trace with no requests must terminate immediately, not idle-spin."""
     model, params = served
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4))
     report = batcher.run([], wait_for_arrivals=True)
     assert report.completions == []
     assert report.generated_tokens == 0
@@ -220,9 +233,11 @@ def test_all_arrivals_at_t0_admit_fifo(served):
     model, params = served
     reqs = [Request(r.rid, r.prompt, r.max_new_tokens, arrival_s=0.0)
             for r in _requests([2, 2, 2, 2, 2])]
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2))
     report = batcher.run(reqs, wait_for_arrivals=True)
     assert len(report.completions) == 5
     by_rid = {c.rid: c for c in report.completions}
@@ -235,9 +250,11 @@ def test_gen_len_one_matches_static(served):
     retires after its first retire pass without a decode emission."""
     model, params = served
     reqs = _requests([1, 1, 1], seed=9)
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2)
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2))
     got = batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
     for req in reqs:
         want = _static_tokens(model, params, req)
@@ -314,10 +331,12 @@ def test_paged_requeue_preserves_fifo_order(served):
     model, params = served
     reqs = _requests([4, 4, 4, 4])
     need = -(-(PROMPT_LEN + 4) // 4)             # pages per request @ size 4
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2, paged=True, page_size=4,
-                                n_pages=1 + need)    # exactly one request
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2, paged=True, page_size=4,
+                      n_pages=1 + need))        # exactly one request
     report = batcher.run(reqs, wait_for_arrivals=False)
     assert len(report.completions) == 4
     by_rid = {c.rid: c for c in report.completions}
@@ -335,10 +354,12 @@ def test_unservable_request_raises_with_empty_pool(served):
     from repro.serving import PoolExhausted
 
     model, params = served
-    batcher = ContinuousBatcher(model, params, n_slots=2,
-                                prompt_len=PROMPT_LEN, max_new_tokens=4,
-                                chunk_steps=2, paged=True, page_size=4,
-                                n_pages=2)           # 1 usable page
+    batcher = ContinuousBatcher(
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4,
+                      chunk_steps=2, paged=True, page_size=4,
+                      n_pages=2))               # 1 usable page
     with pytest.raises(PoolExhausted, match="never"):
         batcher.run(_requests([4]), wait_for_arrivals=False)
 

@@ -20,7 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.launch.generate import make_generate, serve_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request, ServeConfig
 
 N_DEV = len(jax.devices())
 needs_mesh = pytest.mark.skipif(
@@ -95,9 +95,11 @@ def _continuous_tokens(model, params, prompts, mesh=None, paged=False):
                     max_new_tokens=GEN_LEN - (i % 2) * 4)
             for i in range(prompts.shape[0])]
     batcher = ContinuousBatcher(
-        model, params, n_slots=2, prompt_len=PROMPT_LEN,
-        max_new_tokens=GEN_LEN, chunk_steps=2, paged=paged,
-        page_size=PAGE_SIZE, mesh=mesh)
+                  model, params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
+                      chunk_steps=2, paged=paged, page_size=PAGE_SIZE,
+                      mesh=mesh))
     return batcher.run(reqs, wait_for_arrivals=False).tokens_by_rid()
 
 
@@ -189,10 +191,12 @@ def test_speculative_sharded_matches_unsharded_vanilla(arch, paged):
                     max_new_tokens=GEN_LEN - (i % 2) * 4)
             for i in range(prompts.shape[0])]
     batcher = ContinuousBatcher(
-        model, dense_params, n_slots=2, prompt_len=PROMPT_LEN,
-        max_new_tokens=GEN_LEN, chunk_steps=2, paged=paged,
-        page_size=PAGE_SIZE, mesh=mesh, speculative=True,
-        draft_params=packed_params, draft_k=3)
+                  model, dense_params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
+                      chunk_steps=2, paged=paged, page_size=PAGE_SIZE,
+                      mesh=mesh, speculative=True, draft_params=packed_params,
+                      draft_k=3))
     report = batcher.run(reqs, wait_for_arrivals=False)
     got = report.tokens_by_rid()
     assert set(got) == set(want)
@@ -234,8 +238,10 @@ def test_kv_pool_sharded_over_heads(arch):
     name, model, dense_params, _ = arch
     mesh = make_host_mesh(model=4)
     batcher = ContinuousBatcher(
-        model, dense_params, n_slots=2, prompt_len=PROMPT_LEN,
-        max_new_tokens=GEN_LEN, chunk_steps=2, mesh=mesh)
+                  model, dense_params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
+                      chunk_steps=2, mesh=mesh))
     prompts = _prompts(model.cfg.vocab, n=2, seed=2)
     reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=2)
             for i in range(2)]
@@ -266,8 +272,11 @@ def test_pallas_asserted_unreachable_under_mesh(arch):
     # the arch fixture pre-set the flag; clear it so this test proves the
     # mesh-aware construction path flips it back on
     set_sharded_serving(False)
-    ContinuousBatcher(model, packed_params, n_slots=2, prompt_len=PROMPT_LEN,
-                      max_new_tokens=GEN_LEN, mesh=make_host_mesh(model=2))
+    ContinuousBatcher(
+        model, packed_params,
+        ServeConfig.build(
+            n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
+            mesh=make_host_mesh(model=2)))
     assert sharded_serving(), "batcher did not flip the sharded-serve guard"
     stacked = next(p for p in jax.tree.leaves(
         packed_params, is_leaf=lambda x: isinstance(x, PackedLinear))

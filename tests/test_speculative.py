@@ -20,7 +20,7 @@ from repro.launch.generate import (
     spec_cache_len,
 )
 from repro.models.model import build_model
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request, ServeConfig
 
 PROMPT_LEN = 8
 GEN_LENS = (5, 2, 4, 1)       # mixed budgets incl. the gen-1 edge
@@ -89,10 +89,12 @@ def _spec_static(model, t_params, d_params, prompts, gen_len,
 def _spec_continuous(model, t_params, d_params, reqs, paged=False,
                      draft_k=DRAFT_K, **extra):
     batcher = ContinuousBatcher(
-        model, t_params, n_slots=2, prompt_len=PROMPT_LEN,
-        max_new_tokens=MAX_NEW, chunk_steps=4, paged=paged,
-        page_size=PAGE_SIZE, speculative=True, draft_params=d_params,
-        draft_k=draft_k, **extra)
+                  model, t_params,
+                  ServeConfig.build(
+                      n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                      chunk_steps=4, paged=paged, page_size=PAGE_SIZE,
+                      speculative=True, draft_params=d_params, draft_k=draft_k,
+                      **extra))
     return batcher.run(reqs, wait_for_arrivals=False)
 
 
@@ -249,15 +251,25 @@ def test_speculative_validation_errors():
     params = model.init(jax.random.PRNGKey(0))
     kw = dict(n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=4)
     with pytest.raises(ValueError, match="draft_params"):
-        ContinuousBatcher(model, params, speculative=True, **kw)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                speculative=True, **kw))
     with pytest.raises(ValueError, match="greedy-only"):
-        ContinuousBatcher(model, params, speculative=True,
-                          draft_params=params, temperature=0.7, **kw)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                speculative=True, draft_params=params, temperature=0.7, **kw))
     with pytest.raises(ValueError, match="draft_k"):
-        ContinuousBatcher(model, params, speculative=True,
-                          draft_params=params, draft_k=0, **kw)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                speculative=True, draft_params=params, draft_k=0, **kw))
     with pytest.raises(ValueError, match="speculative"):
-        ContinuousBatcher(model, params, draft_params=params, **kw)
+        ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                draft_params=params, **kw))
     with pytest.raises(ValueError, match="draft_k must be positive"):
         make_speculative_decode(model, prompt_len=PROMPT_LEN, gen_len=4,
                                 draft_k=0)
@@ -283,13 +295,17 @@ def test_spec_cache_len_headroom():
     batcher_len = spec_cache_len(PROMPT_LEN, MAX_NEW, DRAFT_K)
     model = build_model(CFGS["gqa"], dtype=jnp.float32, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    b = ContinuousBatcher(model, params, n_slots=2, prompt_len=PROMPT_LEN,
-                          max_new_tokens=MAX_NEW, speculative=True,
-                          draft_params=params, draft_k=DRAFT_K)
+    b = ContinuousBatcher(
+            model, params,
+            ServeConfig.build(
+                n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                speculative=True, draft_params=params, draft_k=DRAFT_K))
     assert b.alloc_len == batcher_len
     # paged: the headroom pages are part of the all-or-nothing reservation
-    bp = ContinuousBatcher(model, params, n_slots=2, prompt_len=PROMPT_LEN,
-                           max_new_tokens=MAX_NEW, speculative=True,
-                           draft_params=params, draft_k=DRAFT_K, paged=True,
-                           page_size=PAGE_SIZE)
+    bp = ContinuousBatcher(
+             model, params,
+             ServeConfig.build(
+                 n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                 speculative=True, draft_params=params, draft_k=DRAFT_K,
+                 paged=True, page_size=PAGE_SIZE))
     assert bp.max_blocks == -(-batcher_len // PAGE_SIZE)
