@@ -143,6 +143,15 @@ def preempt_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
         },
         "fifo_matches_reference": matches(fifo),
         "preempt_matches_reference": matches(tier),
+        # full TTFT / inter-token latency distributions from the run's
+        # metrics registry (log2 buckets; ungated — the record behind the
+        # p95 scalar the gate watches)
+        "latency_histograms": {
+            name: {metric: rep.metrics["histograms"]
+                   .get(metric, {}).get("", {})
+                   for metric in ("serve.ttft_s", "serve.itl_s")}
+            for name, rep in (("fifo", fifo), ("tiered_preempt", tier))
+        },
     }
 
     for name, rep in (("fifo", fifo), ("tiered_preempt", tier)):

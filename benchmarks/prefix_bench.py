@@ -125,6 +125,13 @@ def prefix_bench(rows: Row, out_json: str = OUT_JSON, seed: int = 0) -> dict:
             "cow_copies": shared_ref.prefix["cow_copies"],
             "lru_evictions": shared_ref.prefix["lru_evictions"],
         },
+        # the time-weighted residency gauge from the metrics registry
+        # (ungated): sharing shows up as a lower page-seconds integral
+        "pages_in_use_gauge": {
+            name: rep.metrics["gauges"].get("pages.in_use", {}).get("", {})
+            for name, rep in (("unshared", plain_ref),
+                              ("shared", shared_ref))
+        },
         "shared_prefix_matches_unshared": matches,
         "prefill_saved_matches_floor": prefill_saved >= PREFILL_SAVED_FLOOR,
         "resident_bytes_matches_floor": alloc_saved >= RESIDENT_SAVED_FLOOR,

@@ -1,0 +1,147 @@
+"""CI smoke validator for serve-run telemetry artifacts.
+
+The bench gate runs one traced serve (``repro.launch.serve --continuous
+--trace-out ... --metrics-out ...``) and then this script, which fails the
+job when either artifact is malformed:
+
+  * the trace must be a Chrome ``trace_event`` JSON object Perfetto can
+    open — ``displayTimeUnit`` + ``traceEvents``, every event carrying
+    name/ph/ts/pid/tid, spans ("X") with ``dur >= 0``, instants ("i") with
+    a scope, metadata ("M") naming every (pid, tid) track that events
+    land on;
+  * the trace must contain the core lifecycle events a non-degenerate
+    serve run always produces (enqueue, admit, prefill, chunk, retire) —
+    extra event types are fine, a missing core one means the batcher
+    stopped emitting a transition;
+  * the metrics snapshot must be the registry's
+    ``{counters, gauges, histograms}`` shape with numeric leaves, and its
+    core serve counters must be present and consistent (retired <=
+    admitted, tokens > 0).
+
+  python -m benchmarks.validate_telemetry TRACE.json METRICS.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+CORE_EVENTS = ("enqueue", "admit", "prefill", "chunk", "retire")
+CORE_COUNTERS = ("serve.chunks", "serve.prefills", "serve.admitted",
+                 "serve.retired", "serve.tokens")
+
+
+def validate_trace(doc: dict) -> list[str]:
+    """Chrome trace_event shape errors (empty list == valid)."""
+    errors = []
+    if doc.get("displayTimeUnit") not in ("ms", "ns"):
+        errors.append("displayTimeUnit missing or not ms/ns")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return errors + ["traceEvents missing or empty"]
+
+    named_tracks, used_tracks = set(), set()
+    seen_names = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M"):
+            errors.append(f"{where}: unexpected ph {ph!r}")
+            continue
+        for key in ("name", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        if ph == "M":
+            if ev.get("name") not in ("process_name", "thread_name"):
+                errors.append(f"{where}: unknown metadata {ev.get('name')!r}")
+            elif not (ev.get("args") or {}).get("name"):
+                errors.append(f"{where}: metadata without args.name")
+            if ev.get("name") == "thread_name":
+                named_tracks.add((ev.get("pid"), ev.get("tid")))
+            continue
+        seen_names.add(ev.get("name"))
+        used_tracks.add((ev.get("pid"), ev.get("tid")))
+        if not isinstance(ev.get("ts"), numbers.Real):
+            errors.append(f"{where}: non-numeric ts {ev.get('ts')!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, numbers.Real) or dur < 0:
+                errors.append(f"{where}: span with bad dur {dur!r}")
+        if ph == "i" and ev.get("s") not in ("t", "p", "g"):
+            errors.append(f"{where}: instant without scope")
+
+    for track in sorted(used_tracks - named_tracks):
+        errors.append(f"track {track} has events but no thread_name metadata")
+    for name in CORE_EVENTS:
+        if name not in seen_names:
+            errors.append(f"core lifecycle event {name!r} never recorded")
+    return errors
+
+
+def validate_metrics(doc: dict) -> list[str]:
+    """Registry snapshot shape errors (empty list == valid)."""
+    errors = []
+    for section in ("counters", "gauges", "histograms"):
+        if not isinstance(doc.get(section), dict):
+            errors.append(f"snapshot section {section!r} missing")
+    if errors:
+        return errors
+
+    for name, series in doc["counters"].items():
+        for key, value in series.items():
+            if not isinstance(value, numbers.Real):
+                errors.append(f"counter {name}[{key!r}] non-numeric: {value!r}")
+    for name, series in doc["gauges"].items():
+        for key, stats in series.items():
+            for stat in ("value", "peak", "time_avg"):
+                if not isinstance(stats.get(stat), numbers.Real):
+                    errors.append(f"gauge {name}[{key!r}].{stat} non-numeric")
+    for name, series in doc["histograms"].items():
+        for key, stats in series.items():
+            for stat in ("count", "sum", "min", "max"):
+                if not isinstance(stats.get(stat), numbers.Real):
+                    errors.append(
+                        f"histogram {name}[{key!r}].{stat} non-numeric")
+            if not isinstance(stats.get("buckets"), dict):
+                errors.append(f"histogram {name}[{key!r}] without buckets")
+
+    total = lambda n: sum(doc["counters"].get(n, {}).values())
+    for name in CORE_COUNTERS:
+        if name not in doc["counters"]:
+            errors.append(f"core counter {name!r} missing from snapshot")
+    if not errors:
+        if total("serve.retired") > total("serve.admitted"):
+            errors.append("serve.retired exceeds serve.admitted")
+        if total("serve.tokens") <= 0:
+            errors.append("serve.tokens is zero — degenerate run")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace_event json from --trace-out")
+    ap.add_argument("metrics", help="registry snapshot from --metrics-out")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        trace = json.load(f)
+    with open(args.metrics) as f:
+        metrics = json.load(f)
+
+    failures = ([f"trace: {e}" for e in validate_trace(trace)]
+                + [f"metrics: {e}" for e in validate_metrics(metrics)])
+    for line in failures:
+        print(line)
+    if failures:
+        print(f"\nTELEMETRY VALIDATION FAILED: {len(failures)} error(s)")
+        return 1
+    n_events = len(trace["traceEvents"])
+    n_counters = len(metrics["counters"])
+    print(f"telemetry ok: {n_events} trace events, {n_counters} counters "
+          f"({args.trace}, {args.metrics})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

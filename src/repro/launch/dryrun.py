@@ -105,14 +105,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec.update(status="skipped", reason=why)
         return rec
 
-    t0 = time.time()
+    # perf_counter, not time.time(): lower/compile timings are durations,
+    # and wall clock can step (NTP) mid-compile on long cells.
+    t0 = time.perf_counter()
     try:
         bundle = build_bundle(cfg, shape, mesh, model_kw=model_kw,
                               packed=packed, serve_replicated=serve_replicated)
         lowered = lower_bundle(bundle, mesh)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         report = roofline_from_lowered(
             lowered, compiled, arch=arch, shape=shape_name,

@@ -67,6 +67,13 @@ temperature 0. ``--max-requeues`` bounds failed-admission retries before a
 request is shed. Overload runs use the deterministic chunk clock, so the
 same flags replay the same schedule.
 
+``--trace-out`` / ``--metrics-out`` / ``--profile-dir`` (with
+``--continuous``) export the run's observability artifacts: a Chrome
+``trace_event`` JSON of every request-lifecycle event (one Perfetto track
+per slot and per request; byte-identical across runs on the deterministic
+chunk clock), the full metrics-registry snapshot, and a ``jax.profiler``
+device trace with serve-phase annotations — see README "Observability".
+
 ``--tp N`` / ``--mesh DxM`` serve tensor-parallel over a device mesh: params
 are device_put under the weight-stationary TP specs (packed bit-planes shard
 their N dim over 'model' — each device streams only its slice of the
@@ -509,6 +516,20 @@ def main() -> None:
                    action="store_false",
                    help="keep every cached prefix resident; pool pressure "
                         "falls through to preemption/requeue instead")
+    g = ap.add_argument_group("observability (ServeConfig.observability)")
+    g.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write the run's request-lifecycle trace as Chrome "
+                        "trace_event JSON (open in Perfetto: "
+                        "ui.perfetto.dev); deterministic runs export "
+                        "byte-identical files (--continuous)")
+    g.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the run's full metrics-registry snapshot "
+                        "(counters / gauges / histograms) as JSON "
+                        "(--continuous)")
+    g.add_argument("--profile-dir", default=None, metavar="DIR",
+                   help="capture a jax.profiler device trace of the run "
+                        "(TensorBoard/Perfetto), with serve.prefill / "
+                        "serve.decode_chunk annotations (--continuous)")
     g = ap.add_argument_group("parallelism")
     g.add_argument("--tp", type=int, default=None,
                    help="tensor-parallel degree: serve over a "

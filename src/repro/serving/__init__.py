@@ -17,7 +17,12 @@ keeps the device busy across many concurrent requests instead:
                     request occupies only the pages its tokens need;
   * ``faults``    — deterministic fault injection (pool exhaustion,
                     allocator failure, oversized bursts) so tests exercise
-                    the overload/recovery paths on purpose.
+                    the overload/recovery paths on purpose;
+  * ``telemetry`` — labeled metrics registry + lifecycle trace recorder
+                    (Chrome/Perfetto export, optional ``jax.profiler``
+                    hooks) threaded through all of the above; under the
+                    deterministic chunk clock, traces are byte-identical
+                    across runs.
 
 The batcher's ``speculative=True`` mode swaps the chunk's inner loop for
 speculative rounds (packed structured-binary draft -> one dense multi-token
@@ -67,6 +72,12 @@ from repro.serving.scheduler import (
     select_victim,
 )
 from repro.serving.slots import PoolExhausted, SlotError, SlotPool
+from repro.serving.telemetry import (
+    MetricsRegistry,
+    ObservabilityConfig,
+    Telemetry,
+    TraceRecorder,
+)
 
 __all__ = [
     "AllocatorFault",
@@ -76,6 +87,8 @@ __all__ = [
     "FIFOScheduler",
     "FaultInjector",
     "FaultPlan",
+    "MetricsRegistry",
+    "ObservabilityConfig",
     "PTQ_DRAFT",
     "PageAllocator",
     "PageStats",
@@ -92,7 +105,9 @@ __all__ = [
     "SpeculationConfig",
     "SlotError",
     "SlotPool",
+    "Telemetry",
     "TieredScheduler",
+    "TraceRecorder",
     "bursty_trace",
     "pages_needed",
     "poisson_trace",

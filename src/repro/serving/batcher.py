@@ -105,6 +105,12 @@ from repro.serving.scheduler import (
     select_victim,
 )
 from repro.serving.slots import PoolExhausted, SlotError, SlotPool
+from repro.serving.telemetry import (
+    LOOP_TRACK,
+    Telemetry,
+    request_track,
+    slot_track,
+)
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.serving").info
@@ -141,6 +147,10 @@ class Completion:
     requeues: int = 0
     preemptions: int = 0
     first_token_s: float | None = None
+    # serve-clock host-visibility time of each entry of ``tokens`` (the
+    # chunk boundary it synced at). Spans preemption stints; empty when the
+    # batcher predates the timeline (static baseline).
+    token_times_s: tuple[float, ...] = field(default=(), repr=False)
 
     @property
     def latency_s(self) -> float:
@@ -155,6 +165,14 @@ class Completion:
         """Time to first token (None if none was emitted before a shed)."""
         return (None if self.first_token_s is None
                 else self.first_token_s - self.arrival_s)
+
+    @property
+    def itl_s(self) -> list[float]:
+        """Inter-token gaps along the per-token timeline (chunked serving
+        emits chunk-size bursts, so zeros within a chunk and the chunk
+        cadence between them)."""
+        tt = self.token_times_s
+        return [b - a for a, b in zip(tt, tt[1:])]
 
 
 @dataclass
@@ -178,6 +196,10 @@ class ServeReport:
     # lengths included) — the prefill-FLOPs proxy prefix_bench gates on:
     # prefix hits shrink it, everything else leaves it equal
     n_prefill_positions: int = 0
+    # the run's full MetricsRegistry.snapshot() — every counter/gauge/
+    # histogram, superset of the summary() fields. Not part of summary()
+    # (whose keys are a stable CLI/bench contract).
+    metrics: dict | None = None
 
     @property
     def ok_completions(self) -> list[Completion]:
@@ -598,8 +620,10 @@ class ContinuousBatcher:
         self._alloc: PageAllocator | None = None
         self._tables: BlockTableSet | None = None
         self._trie: RadixPrefixCache | None = None
-        self._px: dict = {}
-        self._n_prefill_positions = 0
+        # the last run()'s telemetry bundle (registry + trace), replaced at
+        # every run start with one driven by that run's serve clock; the
+        # placeholder keeps the admission helpers usable standalone
+        self.telemetry = Telemetry(config.observability)
 
     def _alloc_pages(self, n: int) -> list[int]:
         """``PageAllocator.alloc`` with the prefix cache's LRU backstop:
@@ -658,14 +682,18 @@ class ContinuousBatcher:
         except PoolExhausted:
             self._alloc.free(matched)
             raise
-        self._px["hit_pages"] += m
-        self._px["fresh_pages"] += len(fresh)
+        met = self.telemetry.metrics
+        met.counter("prefix.hit_pages").inc(m)
+        met.counter("prefix.fresh_pages").inc(len(fresh))
+        if m:
+            self.telemetry.trace.instant(request_track(req.rid),
+                                         "prefix_hit", pages=m)
         if cow:
             return _PageClaim(matched[:-1] + fresh, m, matched[-1])
         return _PageClaim(matched + fresh, m, None)
 
     def _prefix_admit(self, claim: _PageClaim, prompt: np.ndarray, tlen: int,
-                      slot: int, caches, d_caches, key):
+                      slot: int, caches, d_caches, key, mode: str):
         """Prefix-cache admission: point ``slot``'s block table at the
         claim's (shared + fresh) pages and prefill only the unmatched
         suffix, straight into the page pool through the table row — one
@@ -681,6 +709,8 @@ class ContinuousBatcher:
         inserted into the trie (first-writer-wins on existing nodes), so
         the next admission can match what this one just prefilled.
         """
+        tele = self.telemetry
+        met = tele.metrics
         pages = claim.pages
         ps = self.page_size
         self._tables.assign(slot, pages)
@@ -697,7 +727,9 @@ class ContinuousBatcher:
             # and any later admission's writes are ordered behind it by
             # donation data-dependency.
             self._alloc.free([claim.cow_src])
-            self._px["cow_copies"] += 1
+            met.counter("prefix.cow_copies").inc()
+            tele.trace.instant(slot_track(slot), "prefix_cow",
+                               src=int(claim.cow_src), dst=int(dst))
             start = tlen - 1
         else:
             start = claim.n_matched * ps
@@ -705,14 +737,19 @@ class ContinuousBatcher:
         t_pad = -(-t // ps) * ps          # whole-page jit buckets
         padded = np.zeros(t_pad, np.int32)
         padded[:t] = prompt[start:]
-        self._px["tokens_saved"] += start
-        self._n_prefill_positions += t_pad
+        met.counter("prefix.tokens_saved").inc(start)
+        met.counter("serve.prefill_positions").inc(t_pad)
         row = jnp.asarray(self._tables.array[slot][None, :])
         args = (jnp.asarray(padded[None, :]), jnp.int32(start),
                 jnp.int32(tlen), row, key)
-        tok0, caches = self._suffix(self.params, caches, *args)
-        if self.speculative:
-            _, d_caches = self._suffix_d(self.draft_params, d_caches, *args)
+        p0 = tele.now()
+        with tele.annotate("serve.prefill"):
+            tok0, caches = self._suffix(self.params, caches, *args)
+            if self.speculative:
+                _, d_caches = self._suffix_d(self.draft_params, d_caches,
+                                             *args)
+        tele.trace.complete(slot_track(slot), "prefill", p0, mode=mode,
+                            positions=t_pad)
         # publish the prompt's whole-page prefix; the trie holds one
         # reference per node it actually created (hits keep first writer)
         full = tlen // ps
@@ -767,9 +804,11 @@ class ContinuousBatcher:
             prompt = np.concatenate(
                 [prompt, np.asarray(req.resume.emitted, np.int32)])
             tlen += n_done
+        tele = self.telemetry
         if self._trie is not None:
             caches, d_caches, tok0 = self._prefix_admit(
-                claim, prompt, tlen, slot, caches, d_caches, key)
+                claim, prompt, tlen, slot, caches, d_caches, key,
+                "resume" if n_done else "suffix")
         else:
             if n_done:
                 pad_len, fresh = self._resume_pad, self._fresh_resume
@@ -777,15 +816,20 @@ class ContinuousBatcher:
                 pad_len, fresh = self.prompt_len, self._fresh
             padded = np.zeros(pad_len, np.int32)
             padded[:tlen] = prompt
-            self._n_prefill_positions += pad_len
-            tok0, one = self._prefill(self.params, fresh,
-                                      jnp.asarray(padded[None, :]),
-                                      jnp.int32(tlen), key)
-            d_one = None
-            if self.speculative:
-                _, d_one = self._d_prefill(self.draft_params, fresh,
-                                           jnp.asarray(padded[None, :]),
-                                           jnp.int32(tlen), key)
+            tele.metrics.counter("serve.prefill_positions").inc(pad_len)
+            p0 = tele.now()
+            with tele.annotate("serve.prefill"):
+                tok0, one = self._prefill(self.params, fresh,
+                                          jnp.asarray(padded[None, :]),
+                                          jnp.int32(tlen), key)
+                d_one = None
+                if self.speculative:
+                    _, d_one = self._d_prefill(self.draft_params, fresh,
+                                               jnp.asarray(padded[None, :]),
+                                               jnp.int32(tlen), key)
+            tele.trace.complete(slot_track(slot), "prefill", p0,
+                                mode="resume" if n_done else "full",
+                                positions=pad_len)
             if self.paged:
                 pages = claim.pages
                 self._tables.assign(slot, pages)
@@ -840,36 +884,50 @@ class ContinuousBatcher:
         if not wait_for_arrivals:
             requests = [replace(r, arrival_s=0.0, deadline_s=None)
                         for r in requests]
-        if self.scheduler_kind == "tiered":
-            sched = TieredScheduler(requests, age_after_s=self.age_after_s)
-        else:
-            sched = FIFOScheduler(requests)
-        pool = SlotPool(self.n_slots)
-        if self.faults is not None:
-            self.faults.reset()
-        self._n_prefill_positions = 0
-        self._px = dict(hit_pages=0, fresh_pages=0, cow_copies=0,
-                        tokens_saved=0)
         d_caches = None
-        if self.paged:
-            self._alloc = PageAllocator(self.n_pages, self.page_size)
-            self._tables = BlockTableSet(self.n_slots, self.max_blocks)
-            self._trie = (RadixPrefixCache(self.page_size)
-                          if self.prefix_cache else None)
-            pool_kw = dict(n_pages=self.n_pages, page_size=self.page_size)
-            caches = self.model.init_cache(self.n_slots, self.alloc_len,
-                                           **pool_kw)
-            if self.speculative:
-                d_caches = self.model.init_cache(self.n_slots, self.alloc_len,
-                                                 **pool_kw)
-        else:
-            caches = self.model.init_cache(self.n_slots, self.alloc_len)
-            if self.speculative:
-                d_caches = self.model.init_cache(self.n_slots, self.alloc_len)
+        pool_kw = (dict(n_pages=self.n_pages, page_size=self.page_size)
+                   if self.paged else {})
+        caches = self.model.init_cache(self.n_slots, self.alloc_len,
+                                       **pool_kw)
+        if self.speculative:
+            d_caches = self.model.init_cache(self.n_slots, self.alloc_len,
+                                             **pool_kw)
         if self.mesh is not None:
             caches = jax.device_put(caches, self._pool_shard)
             if self.speculative:
                 d_caches = jax.device_put(d_caches, self._pool_shard)
+
+        # the serve clock starts *after* device cache allocation (wall_s
+        # measures serving, not pool setup) and *before* any host
+        # bookkeeping, so everything stamped against it — scheduler,
+        # allocator residency, trace events — shares one timeline
+        t0 = time.perf_counter()
+        vnow = 0.0
+        if clock == "wall":
+            clk = lambda: time.perf_counter() - t0
+        else:
+            clk = lambda: vnow
+
+        # one Telemetry per run, on the run's clock: under clock="chunks"
+        # every timestamp it records is a deterministic chunk count, so the
+        # exported trace is byte-identical run to run
+        tele = self.telemetry = Telemetry(self.config.observability,
+                                          clock=clk)
+        met = tele.metrics
+        if self.scheduler_kind == "tiered":
+            sched = TieredScheduler(requests, age_after_s=self.age_after_s,
+                                    telemetry=tele)
+        else:
+            sched = FIFOScheduler(requests, telemetry=tele)
+        pool = SlotPool(self.n_slots, telemetry=tele)
+        if self.faults is not None:
+            self.faults.reset(telemetry=tele)
+        if self.paged:
+            self._alloc = PageAllocator(self.n_pages, self.page_size,
+                                        clock=clk, telemetry=tele)
+            self._tables = BlockTableSet(self.n_slots, self.max_blocks)
+            self._trie = (RadixPrefixCache(self.page_size, telemetry=tele)
+                          if self.prefix_cache else None)
         tok = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros(self.n_slots, np.int32)
         rem = np.zeros(self.n_slots, np.int32)
@@ -879,22 +937,20 @@ class ContinuousBatcher:
         # latencies are measured against the arrival times admission actually
         # honored (all zero when wait_for_arrivals=False)
         arrivals = {r.rid: r.arrival_s for r in requests}
+        if tele.trace.enabled:
+            for r in requests:
+                tele.trace.instant(request_track(r.rid), "enqueue",
+                                   ts=r.arrival_s, priority=r.priority,
+                                   gen=r.max_new_tokens)
 
         completions: list[Completion] = []
         requeue_counts: dict[int, int] = {}
-        n_chunks = n_prefills = n_requeues = n_preemptions = n_shed = 0
-        t0 = time.perf_counter()
-        vnow = 0.0
-        if clock == "wall":
-            clk = lambda: time.perf_counter() - t0
-        else:
-            clk = lambda: vnow
 
         def shed(req: Request, why: str) -> None:
             """Give up on ``req`` with a typed completion (keeping any
             tokens a pre-preemption stint already produced)."""
-            nonlocal n_shed
-            n_shed += 1
+            met.counter("serve.shed").inc(reason=why)
+            tele.trace.instant(request_track(req.rid), "shed", reason=why)
             now = clk()
             res = req.resume
             completions.append(Completion(
@@ -911,19 +967,20 @@ class ContinuousBatcher:
                 shed_reason=why,
                 requeues=requeue_counts.get(req.rid, 0),
                 preemptions=res.preemptions if res else 0,
-                first_token_s=res.first_token_s if res else None))
+                first_token_s=res.first_token_s if res else None,
+                token_times_s=res.token_times if res else ()))
 
         def requeue(req: Request) -> bool:
             """Push a failed admission back for a later chunk boundary;
             shed it instead once the bounded-retry budget is spent.
             Returns True if the request went back in the queue."""
-            nonlocal n_requeues
             n = requeue_counts.get(req.rid, 0) + 1
             requeue_counts[req.rid] = n
             if self.max_requeues is not None and n > self.max_requeues:
                 shed(req, "retries")
                 return False
-            n_requeues += 1
+            met.counter("serve.requeues").inc()
+            tele.trace.instant(request_track(req.rid), "requeue", attempt=n)
             sched.push_front(req)
             return True
 
@@ -947,9 +1004,12 @@ class ContinuousBatcher:
             device rows need no reset: rem=0 makes them inert (frozen pos,
             invalid emissions, null-page/own-row writes) until the next
             admission's prefill overwrites them."""
-            nonlocal n_preemptions
-            n_preemptions += 1
+            met.counter("serve.preemptions").inc()
             rec = pool.preempt(s)
+            tele.trace.instant(slot_track(s), "preempt",
+                               rid=rec.request.rid)
+            tele.trace.instant(request_track(rec.request.rid), "preempt",
+                               slot=s, emitted=len(rec.emitted))
             if self.paged:
                 if self._trie is not None:
                     # publish the victim's whole-page prefix before the
@@ -976,11 +1036,13 @@ class ContinuousBatcher:
                 first_admitted_s=rec.first_admitted_s,
                 first_token_s=rec.first_token_s,
                 accepted_drafts=int(acc_slots[s]),
-                drafted=int(drf_slots[s]))
+                drafted=int(drf_slots[s]),
+                token_times=tuple(rec.token_times))
             # the start deadline was met at first admission — the re-queued
             # victim must not be shed while it waits to resume
             sched.push_front(replace(r, deadline_s=None, resume=snap))
 
+        tele.start()
         while len(sched) or pool.any_active():
             # ---- shed: queued requests whose start deadline passed -------
             for dead in sched.expire(clk()):
@@ -1050,18 +1112,24 @@ class ContinuousBatcher:
                 if res is not None:
                     # the snapshot's history continues in this slot
                     rec.emitted.extend(res.emitted)
+                    rec.token_times.extend(res.token_times)
                     rec.first_admitted_s = res.first_admitted_s
                     rec.first_token_s = res.first_token_s
                     acc_slots[slot] = res.accepted_drafts
                     drf_slots[slot] = res.drafted
+                    tele.trace.instant(slot_track(slot), "resume",
+                                       rid=req.rid,
+                                       emitted=len(res.emitted))
                 else:
                     rec.first_admitted_s = now
                     acc_slots[slot] = drf_slots[slot] = 0
                 if first is not None:
-                    pool.extend(slot, [first])
+                    pool.extend(slot, [first], now=clk())
                     if rec.first_token_s is None:
                         rec.first_token_s = clk()
-                n_prefills += 1
+                met.counter("serve.prefills").inc()
+                tele.trace.complete(slot_track(slot), "admit", now,
+                                    rid=req.rid)
 
             if not pool.any_active():
                 # nothing live: advance to the next arrival (idle bubble —
@@ -1085,39 +1153,56 @@ class ContinuousBatcher:
 
             # ---- decode one chunk over all slots -------------------------
             self.key, k = jax.random.split(self.key)
+            c0 = clk()
+            n_active = len(pool.active_slots())
             chunk_args = (jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(rem))
-            if self.speculative:
-                spec_args = (self.params, self.draft_params, caches, d_caches,
-                             *chunk_args)
-                if self.paged:
-                    (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
-                     acc_d, drf_d) = self._chunk(
-                        *spec_args, jnp.asarray(self._tables.array), None)
+            spec_deltas = None
+            with tele.annotate("serve.decode_chunk"):
+                if self.speculative:
+                    spec_args = (self.params, self.draft_params, caches,
+                                 d_caches, *chunk_args)
+                    if self.paged:
+                        (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
+                         acc_d, drf_d) = self._chunk(
+                            *spec_args, jnp.asarray(self._tables.array), None)
+                    else:
+                        (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
+                         acc_d, drf_d) = self._chunk(*spec_args, None)
+                    spec_deltas = (np.asarray(acc_d), np.asarray(drf_d))
+                    acc_slots += spec_deltas[0]
+                    drf_slots += spec_deltas[1]
+                elif self.paged:
+                    toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
+                        self.params, caches, *chunk_args,
+                        jnp.asarray(self._tables.array), None, k)
                 else:
-                    (toks, valid, tok_d, caches, d_caches, pos_d, rem_d,
-                     acc_d, drf_d) = self._chunk(*spec_args, None)
-                acc_slots += np.asarray(acc_d)
-                drf_slots += np.asarray(drf_d)
-            elif self.paged:
-                toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
-                    self.params, caches, *chunk_args,
-                    jnp.asarray(self._tables.array), None, k)
-            else:
-                toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
-                    self.params, caches, *chunk_args, None, k)
-            toks = np.asarray(toks)          # the chunk's single host sync
+                    toks, valid, tok_d, caches, pos_d, rem_d = self._chunk(
+                        self.params, caches, *chunk_args, None, k)
+                toks = np.asarray(toks)      # the chunk's single host sync
             valid = np.asarray(valid)
             tok = np.array(tok_d)            # writable copies: admissions
             pos = np.array(pos_d)            # mutate these slotwise
             rem = np.array(rem_d)
-            n_chunks += 1
+            met.counter("serve.chunks").inc()
             if clock == "chunks":
                 vnow += 1.0
             now = clk()
+            tele.trace.complete(LOOP_TRACK, "chunk", c0, active=n_active)
+            if spec_deltas is not None:
+                met.counter("spec.accepted_drafts").inc(
+                    int(spec_deltas[0].sum()))
+                met.counter("spec.drafted").inc(int(spec_deltas[1].sum()))
+                if tele.trace.enabled:
+                    for slot in pool.active_slots():
+                        d = int(spec_deltas[1][slot])
+                        if d:
+                            tele.trace.instant(
+                                slot_track(slot), "spec_round", drafted=d,
+                                accepted=int(spec_deltas[0][slot]))
 
             # ---- retire: collect emissions, free finished slots ----------
             for slot in pool.active_slots():
-                pool.extend(slot, toks[slot][valid[slot]])
+                pool.extend(slot, toks[slot][valid[slot]], now=now)
                 rec = pool.get(slot)
                 if rec.first_token_s is None and rec.emitted:
                     rec.first_token_s = now
@@ -1127,7 +1212,7 @@ class ContinuousBatcher:
                         # release immediately: out-of-order completion hands
                         # pages to the next queued prompt at this boundary
                         self._alloc.free(self._tables.release(slot))
-                    completions.append(Completion(
+                    comp = Completion(
                         rid=rec.request.rid,
                         tokens=np.asarray(rec.emitted, np.int32),
                         slot=slot,
@@ -1141,7 +1226,21 @@ class ContinuousBatcher:
                         preemptions=(rec.request.resume.preemptions
                                      if rec.request.resume else 0),
                         first_token_s=rec.first_token_s,
-                    ))
+                        token_times_s=tuple(rec.token_times),
+                    )
+                    completions.append(comp)
+                    met.counter("serve.retired").inc()
+                    met.counter("serve.tokens").inc(len(rec.emitted))
+                    met.histogram("serve.latency_s").observe(comp.latency_s)
+                    met.histogram("serve.queue_s").observe(comp.queue_s)
+                    if comp.ttft_s is not None:
+                        met.histogram("serve.ttft_s").observe(comp.ttft_s)
+                    for gap in comp.itl_s:
+                        met.histogram("serve.itl_s").observe(gap)
+                    tele.trace.instant(slot_track(slot), "retire",
+                                       rid=comp.rid)
+                    tele.trace.instant(request_track(comp.rid), "retire",
+                                       tokens=len(rec.emitted))
 
         spec_summary = None
         if self.speculative:
@@ -1157,22 +1256,29 @@ class ContinuousBatcher:
         prefix_summary = None
         if self._trie is not None:
             prefix_summary = {
-                **self._px,
+                "hit_pages": int(met.value("prefix.hit_pages")),
+                "fresh_pages": int(met.value("prefix.fresh_pages")),
+                "cow_copies": int(met.value("prefix.cow_copies")),
+                "tokens_saved": int(met.value("prefix.tokens_saved")),
                 "lru_evictions": self._trie.n_evicted,
                 "cached_pages_end": self._trie.n_pages,
             }
         report = ServeReport(
             completions=sorted(completions, key=lambda c: c.rid),
-            wall_s=clk(), n_chunks=n_chunks, n_prefills=n_prefills,
+            wall_s=clk(),
+            n_chunks=int(met.value("serve.chunks")),
+            n_prefills=int(met.value("serve.prefills")),
             peak_active=pool.peak_active,
             total_admitted=pool.total_admitted,
             pages=self._alloc.stats().summary() if self.paged else None,
             spec=spec_summary,
-            n_requeues=n_requeues, n_preemptions=n_preemptions,
-            n_shed=n_shed,
+            n_requeues=int(met.value("serve.requeues")),
+            n_preemptions=int(met.value("serve.preemptions")),
+            n_shed=int(met.value("serve.shed")),
             faults=self.faults.summary() if self.faults else None,
             prefix=prefix_summary,
-            n_prefill_positions=self._n_prefill_positions)
+            n_prefill_positions=int(met.value("serve.prefill_positions")),
+            metrics=met.snapshot())
         s = report.summary()
         paged_note = ""
         if self.paged:
@@ -1200,8 +1306,9 @@ class ContinuousBatcher:
             f"{s['generated_tokens']} toks in {s['wall_s']:.2f}s "
             f"({s['throughput_tok_s']:.1f} tok/s, "
             f"p50 {s['p50_latency_s']:.2f}s p95 {s['p95_latency_s']:.2f}s, "
-            f"{n_chunks} chunks x {self.chunk_steps} steps, "
-            f"{n_prefills} prefills, "
+            f"{s['n_chunks']} chunks x {self.chunk_steps} steps, "
+            f"{s['n_prefills']} prefills, "
             f"peak {s['peak_active_slots']}/{self.n_slots} slots, "
             f"{s['total_admitted']} admitted{over_note}{paged_note})")
+        tele.finish()
         return report

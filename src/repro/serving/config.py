@@ -15,7 +15,10 @@ actually layered:
                                  chunk loop;
   * :class:`PreemptionConfig`  — victim eviction + bounded requeue budget;
   * :class:`PrefixCacheConfig` — the radix prefix cache over shared pages
-                                 (requires the paged pool).
+                                 (requires the paged pool);
+  * :class:`ObservabilityConfig` — lifecycle trace / metrics-snapshot
+                                 export and jax.profiler capture (defined
+                                 in :mod:`repro.serving.telemetry`).
 
 Every *model-independent* cross-knob rule fires in
 ``ServeConfig.__post_init__`` — identically for CLI (``ServeConfig.
@@ -31,6 +34,8 @@ emits a ``DeprecationWarning``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+from repro.serving.telemetry import ObservabilityConfig
 
 # Sentinel draft_params value: "the packed planes serve() builds after its
 # PTQ pass". ``ServeConfig.from_args`` uses it because the CLI parses before
@@ -144,6 +149,8 @@ class ServeConfig:
     preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
     prefix_cache: PrefixCacheConfig = field(
         default_factory=PrefixCacheConfig)
+    observability: ObservabilityConfig = field(
+        default_factory=ObservabilityConfig)
     chunk_steps: int = 8
     temperature: float = 0.0
     prefill_mode: str = "auto"
@@ -232,7 +239,10 @@ class ServeConfig:
               age_after_s: float | None = None, preemption: bool = False,
               max_requeues: int | None = None, faults=None,
               prefix_cache: bool = False,
-              prefix_lru: bool = True) -> "ServeConfig":
+              prefix_lru: bool = True, trace: bool = False,
+              trace_out: str | None = None,
+              metrics_out: str | None = None,
+              profile_dir: str | None = None) -> "ServeConfig":
         """Build from the flat legacy kwarg spelling (the pre-ServeConfig
         ``ContinuousBatcher`` signature, plus the prefix-cache knobs). The
         deprecation shim forwards here; new code should construct the
@@ -250,6 +260,10 @@ class ServeConfig:
                                         max_requeues=max_requeues),
             prefix_cache=PrefixCacheConfig(enabled=prefix_cache,
                                            lru=prefix_lru),
+            observability=ObservabilityConfig(trace=trace,
+                                              trace_out=trace_out,
+                                              metrics_out=metrics_out,
+                                              profile_dir=profile_dir),
             chunk_steps=chunk_steps, temperature=temperature,
             prefill_mode=prefill_mode, seed=seed, mesh=mesh, faults=faults)
 
@@ -280,4 +294,6 @@ class ServeConfig:
             draft_k=args.draft_k, scheduler=args.scheduler,
             age_after_s=args.age_after, preemption=args.preemption,
             max_requeues=args.max_requeues, faults=faults,
-            prefix_cache=args.prefix_cache, prefix_lru=args.prefix_lru)
+            prefix_cache=args.prefix_cache, prefix_lru=args.prefix_lru,
+            trace_out=args.trace_out, metrics_out=args.metrics_out,
+            profile_dir=args.profile_dir)

@@ -90,14 +90,20 @@ class FaultInjector:
     def __post_init__(self):
         self.reset()
 
-    def reset(self) -> None:
+    def reset(self, telemetry=None) -> None:
         """Arm the plan for a fresh trace (one-shot rids re-armed, RNG
-        re-seeded, counters zeroed)."""
+        re-seeded, counters zeroed). The batcher passes its per-run
+        telemetry, so injected faults also land as ``faults.*`` counters."""
         self._pending_exhaust = set(self.plan.exhaust_rids)
         self._pending_fail = set(self.plan.fail_rids)
         self._rng = np.random.default_rng(self.plan.seed)
+        self._tele = telemetry
         self.n_exhaust = 0
         self.n_alloc_fail = 0
+
+    def _count(self, name: str) -> None:
+        if self._tele is not None:
+            self._tele.metrics.counter(name).inc()
 
     def on_admit(self, request: Request) -> None:
         """Called by the batcher before claiming resources for ``request``;
@@ -105,17 +111,20 @@ class FaultInjector:
         if request.rid in self._pending_fail:
             self._pending_fail.discard(request.rid)
             self.n_alloc_fail += 1
+            self._count("faults.alloc_fail")
             raise AllocatorFault(
                 f"injected allocator failure admitting request "
                 f"{request.rid}")
         if request.rid in self._pending_exhaust:
             self._pending_exhaust.discard(request.rid)
             self.n_exhaust += 1
+            self._count("faults.exhaust")
             raise PoolExhausted(
                 f"injected pool exhaustion admitting request {request.rid}")
         if self.plan.p_exhaust and \
                 self._rng.random() < self.plan.p_exhaust:
             self.n_exhaust += 1
+            self._count("faults.exhaust")
             raise PoolExhausted(
                 f"injected random pool exhaustion (p={self.plan.p_exhaust}) "
                 f"admitting request {request.rid}")

@@ -44,6 +44,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.serving.slots import PoolExhausted, SlotError
+from repro.serving.telemetry import LOOP_TRACK
 
 NULL_PAGE = 0
 
@@ -109,7 +110,8 @@ class PageAllocator:
     alloc/free semantics unchanged (including double-free detection).
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, *, clock=None,
+                 telemetry=None):
         if n_pages < 2:
             raise ValueError(f"need >= 2 pages (1 usable + null), got {n_pages}")
         if page_size <= 0:
@@ -120,8 +122,18 @@ class PageAllocator:
         self._ref: dict[int, int] = {}   # page id -> holder count
         self.peak_in_use = 0
         self.total_allocs = 0
-        self._t0 = self._t_last = time.perf_counter()
+        # the residency integral ticks on this clock — the batcher passes
+        # its serve clock, so avg/peak page stats are wall-seconds under
+        # clock="wall" and chunk units (deterministic, replayable) under
+        # clock="chunks"; standalone allocators keep real time
+        self._clock = clock or time.perf_counter
+        self._tele = telemetry
+        self._t0 = self._t_last = self._clock()
         self._page_seconds = 0.0   # integral of in_use over time
+        if telemetry is not None:
+            # zero the gauge now so its time-weighted window starts at
+            # construction, same as _t0 — gauge time_avg == avg_in_use
+            telemetry.metrics.gauge("pages.in_use").set(0)
 
     @property
     def available(self) -> int:
@@ -132,7 +144,7 @@ class PageAllocator:
         return len(self._ref)
 
     def _tick(self) -> None:
-        now = time.perf_counter()
+        now = self._clock()
         self._page_seconds += len(self._ref) * (now - self._t_last)
         self._t_last = now
 
@@ -150,6 +162,9 @@ class PageAllocator:
             self._ref[p] = 1
         self.total_allocs += n
         self.peak_in_use = max(self.peak_in_use, len(self._ref))
+        if self._tele is not None:
+            self._tele.metrics.counter("pages.allocs").inc(n)
+            self._tele.metrics.gauge("pages.in_use").set(len(self._ref))
         return pages
 
     def share(self, pages: list[int]) -> None:
@@ -176,6 +191,8 @@ class PageAllocator:
             if self._ref[p] == 0:
                 del self._ref[p]
                 self._free.append(p)
+        if self._tele is not None:
+            self._tele.metrics.gauge("pages.in_use").set(len(self._ref))
 
     def stats(self) -> PageStats:
         self._tick()
@@ -266,12 +283,13 @@ class RadixPrefixCache:
     order replays identically run to run — wall time never enters.
     """
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, *, telemetry=None):
         if page_size <= 0:
             raise ValueError(f"page_size must be positive (got {page_size})")
         self.page_size = page_size
         self._root = _TrieNode(None, NULL_PAGE, None, 0)
         self._clock = 0
+        self._tele = telemetry
         self.n_evicted = 0        # pages recycled by evict() over the run
 
     def _touch(self, node: _TrieNode) -> None:
@@ -377,4 +395,7 @@ class RadixPrefixCache:
             allocator.free([victim.page])
             freed += 1
             self.n_evicted += 1
+        if freed and self._tele is not None:
+            self._tele.metrics.counter("prefix.lru_evictions").inc(freed)
+            self._tele.trace.instant(LOOP_TRACK, "prefix_evict", pages=freed)
         return freed

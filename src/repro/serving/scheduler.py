@@ -64,6 +64,9 @@ class ResumeState:
     # Completion's draft stats cover the whole request, not its last stint
     accepted_drafts: int = 0
     drafted: int = 0
+    # serve-clock timestamp of each entry of ``emitted`` (the per-token
+    # timeline survives eviction the same way the tokens do)
+    token_times: tuple[float, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -123,8 +126,14 @@ class FIFOScheduler:
     where a literal ``appendleft`` per push would reverse them.
     """
 
-    def __init__(self, requests):
+    def __init__(self, requests, *, telemetry=None):
         self._queue: list[Request] = sorted(requests, key=_order)
+        self._tele = telemetry
+        self._gauge()
+
+    def _gauge(self) -> None:
+        if self._tele is not None:
+            self._tele.metrics.gauge("sched.queue_depth").set(len(self))
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -139,13 +148,18 @@ class FIFOScheduler:
 
     def pop(self, now: float) -> Request | None:
         """Admit the head request if it has arrived; None otherwise."""
-        return self._queue.pop(0) if self.ready(now) else None
+        if not self.ready(now):
+            return None
+        req = self._queue.pop(0)
+        self._gauge()
+        return req
 
     def push_front(self, request: Request) -> None:
         """Return a popped request to its arrival-ordered queue position
         (admission was rolled back — the page pool could not cover it this
         chunk, or the request was preempted and re-queued for resume)."""
         insort(self._queue, request, key=_order)
+        self._gauge()
 
     def expire(self, now: float) -> list[Request]:
         """Remove and return every queued request whose ``deadline_s`` has
@@ -155,6 +169,9 @@ class FIFOScheduler:
         if dead:
             self._queue = [r for r in self._queue
                            if r.deadline_s is None or r.deadline_s > now]
+            if self._tele is not None:
+                self._tele.metrics.counter("sched.expired").inc(len(dead))
+            self._gauge()
         return dead
 
     def next_arrival(self) -> float | None:
@@ -175,7 +192,8 @@ class TieredScheduler:
     queued request whose deadline has passed, whatever its tier.
     """
 
-    def __init__(self, requests, *, age_after_s: float | None = None):
+    def __init__(self, requests, *, age_after_s: float | None = None,
+                 telemetry=None):
         if age_after_s is not None and age_after_s <= 0:
             raise ValueError(
                 f"age_after_s must be positive (got {age_after_s}); it is "
@@ -184,6 +202,12 @@ class TieredScheduler:
         self._tiers: dict[int, list[Request]] = {}
         for r in sorted(requests, key=_order):
             self._tiers.setdefault(r.priority, []).append(r)
+        self._tele = telemetry
+        self._gauge()
+
+    def _gauge(self) -> None:
+        if self._tele is not None:
+            self._tele.metrics.gauge("sched.queue_depth").set(len(self))
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._tiers.values())
@@ -220,6 +244,7 @@ class TieredScheduler:
         req = self._tiers[tier].pop(0)
         if not self._tiers[tier]:
             del self._tiers[tier]
+        self._gauge()
         return req
 
     def push_front(self, request: Request) -> None:
@@ -227,6 +252,7 @@ class TieredScheduler:
         tier (rollback or preemption re-queue)."""
         insort(self._tiers.setdefault(request.priority, []), request,
                key=_order)
+        self._gauge()
 
     def expire(self, now: float) -> list[Request]:
         """Remove and return every queued request whose deadline passed."""
@@ -241,6 +267,10 @@ class TieredScheduler:
                 self._tiers[tier] = kept
             else:
                 del self._tiers[tier]
+        if dead:
+            if self._tele is not None:
+                self._tele.metrics.counter("sched.expired").inc(len(dead))
+            self._gauge()
         return sorted(dead, key=_order)
 
     def next_arrival(self) -> float | None:

@@ -49,6 +49,11 @@ class SlotRecord:
     emitted: list[int] = field(default_factory=list)
     first_admitted_s: float | None = None
     first_token_s: float | None = None
+    # serve-clock timestamp of each entry of ``emitted`` (host-visibility
+    # time: the chunk boundary the token synced at, not the device step) —
+    # the source of the per-token timeline on Completion and the
+    # inter-token-latency histogram
+    token_times: list[float] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
@@ -58,16 +63,23 @@ class SlotRecord:
 class SlotPool:
     """Fixed set of ``n_slots`` decode slots, reused across requests."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, *, telemetry=None):
         if n_slots <= 0:
             raise ValueError(
                 f"n_slots must be positive (got {n_slots}); the pool needs "
                 f"at least one decode slot")
         self.n_slots = n_slots
         self._slots: list[SlotRecord | None] = [None] * n_slots
+        self._tele = telemetry
         self.peak_active = 0
         self.total_admitted = 0
         self.total_preempted = 0
+        self._gauge()   # window starts (at 0 active) from construction
+
+    def _gauge(self) -> None:
+        if self._tele is not None:
+            self._tele.metrics.gauge("slots.active").set(
+                sum(s is not None for s in self._slots))
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
@@ -98,11 +110,20 @@ class SlotPool:
         self.total_admitted += 1
         self.peak_active = max(self.peak_active,
                                self.n_slots - len(self.free_slots()))
+        if self._tele is not None:
+            self._tele.metrics.counter("serve.admitted").inc()
+        self._gauge()
         return index
 
-    def extend(self, index: int, tokens) -> None:
-        """Append a chunk's valid emissions for the request in ``index``."""
-        self.get(index).emitted.extend(int(t) for t in np.asarray(tokens))
+    def extend(self, index: int, tokens, now: float | None = None) -> None:
+        """Append a chunk's valid emissions for the request in ``index``;
+        ``now`` (the serve clock at the chunk's host sync) stamps each
+        appended token's host-visibility time onto the record."""
+        rec = self.get(index)
+        toks = [int(t) for t in np.asarray(tokens)]
+        rec.emitted.extend(toks)
+        if now is not None:
+            rec.token_times.extend([now] * len(toks))
 
     def retire(self, index: int, now: float) -> tuple[SlotRecord, float]:
         """Free the slot; returns its final record + finish timestamp."""
@@ -112,6 +133,7 @@ class SlotPool:
                 f"retiring slot {index} after {len(rec.emitted)} of "
                 f"{rec.request.max_new_tokens} tokens")
         self._slots[index] = None
+        self._gauge()
         return rec, now
 
     def preempt(self, index: int) -> SlotRecord:
@@ -131,4 +153,5 @@ class SlotPool:
                 f"is finished — retire it instead")
         self._slots[index] = None
         self.total_preempted += 1
+        self._gauge()
         return rec

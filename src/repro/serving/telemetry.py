@@ -1,0 +1,487 @@
+"""Serve-loop telemetry: metrics registry, lifecycle tracing, profiler hooks.
+
+Every number this repo reports used to come from hand-rolled
+``time.perf_counter()`` pairs and a grab-bag of mutable ints on
+``ServeReport``; meanwhile the serving stack grew seven interacting
+subsystems (slots, pages, prefix trie, tiered scheduler, preemption,
+speculation, faults) whose interactions were invisible. This module is the
+one place every lifecycle event and every timing lands:
+
+  * :class:`MetricsRegistry` — named counters / gauges / log-bucket
+    histograms with optional labels. Gauges are *time-weighted* against the
+    registry's clock (peak + average over the run), which is how the paged
+    allocator's ``PageStats`` are now computed — hand it the batcher's
+    deterministic chunk clock and residency stats replay identically run to
+    run. ``MetricsRegistry(enabled=False)`` is a true no-op: every
+    instrument method returns immediately and ``snapshot()`` is empty.
+  * :class:`TraceRecorder` — typed span ("X") / instant ("i") events on
+    (process, thread) tracks, exported as Chrome ``trace_event`` JSON that
+    Perfetto (https://ui.perfetto.dev) opens directly: one track per decode
+    slot, one per request, one for the batcher loop. Timestamps come from
+    the clock the recorder is constructed with — under the batcher's
+    ``clock="chunks"`` virtual clock the exported file is **byte-identical
+    across runs** of the same seeded trace (the determinism tests and the
+    CI smoke gate depend on this).
+  * :class:`Telemetry` — the per-run bundle the batcher threads through the
+    scheduler, slot pool, page allocator, prefix trie, and fault injector:
+    a registry, a recorder, and the ``jax.profiler`` hooks
+    (``start_trace(profile_dir)`` around the run plus ``TraceAnnotation``
+    scopes around the prefill / decode-chunk dispatches, so a TPU profile
+    attributes device time to serve-loop phases — the instrumentation the
+    ROADMAP's open roofline measurement needs).
+
+Event catalog (the ``name`` field of trace events; one per request
+lifecycle transition):
+
+  ``enqueue``      request entered the trace (instant, request track)
+  ``admit``        a slot claimed + prefilled (span, slot track)
+  ``prefill``      the prefill dispatch inside admit (span, slot track;
+                   ``mode`` arg: full / suffix / resume)
+  ``chunk``        one jitted decode chunk over all slots (span, loop track)
+  ``spec_round``   a chunk's speculative rounds for one slot (instant, slot
+                   track; ``drafted`` / ``accepted`` args — host-side
+                   granularity is the chunk sync, rounds inside the jit are
+                   aggregated)
+  ``prefix_hit``   admission matched shared prefix pages (instant)
+  ``prefix_cow``   page-aligned full match copy-on-wrote its boundary page
+  ``prefix_evict`` LRU eviction recycled trie-only pages (instant, loop)
+  ``preempt``      a victim was evicted mid-generation (instant, both tracks)
+  ``resume``       a preempted request re-admitted by re-prefill (instant)
+  ``requeue``      a failed admission pushed back for retry (instant)
+  ``shed``         the batcher gave up (instant; ``reason`` arg)
+  ``retire``       a finished request left its slot (instant, both tracks)
+
+Metric name catalog (see README "Observability" for the full table):
+``serve.chunks`` ``serve.prefills`` ``serve.prefill_positions``
+``serve.requeues`` ``serve.preemptions`` ``serve.shed{reason=}``
+``serve.retired`` ``serve.tokens`` ``serve.admitted`` — counters;
+``slots.active`` ``pages.in_use`` ``sched.queue_depth`` — time-weighted
+gauges; ``serve.ttft_s`` ``serve.itl_s`` ``serve.latency_s``
+``serve.queue_s`` — log-bucket histograms; plus ``pages.*`` ``prefix.*``
+``spec.*`` ``sched.*`` ``faults.*`` counters from the subsystems.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from contextlib import nullcontext
+from dataclasses import dataclass
+
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.serving.telemetry")
+
+
+@dataclass(frozen=True)
+class ObservabilityConfig:
+    """The ``ServeConfig.observability`` node: what telemetry to keep/emit.
+
+    The metrics registry itself is always on inside the batcher (it *is*
+    the serve counters — host-side dict arithmetic, no device cost); this
+    node controls the optional artifacts:
+
+      * ``trace`` — record lifecycle trace events in memory (implied by
+        ``trace_out``); off by default so the steady-state serve loop
+        allocates nothing per event.
+      * ``trace_out`` — write the run's Chrome ``trace_event`` JSON here
+        after every ``run()`` (open in Perfetto).
+      * ``metrics_out`` — write the run's registry snapshot JSON here.
+      * ``profile_dir`` — wrap the run in ``jax.profiler.start_trace``/
+        ``stop_trace`` and annotate the prefill / decode-chunk dispatches,
+        for TensorBoard/Perfetto device profiles (the TPU roofline
+        measurement's capture path).
+    """
+
+    trace: bool = False
+    trace_out: str | None = None
+    metrics_out: str | None = None
+    profile_dir: str | None = None
+
+    @property
+    def trace_enabled(self) -> bool:
+        return self.trace or self.trace_out is not None
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def _label_key(labels: dict) -> str:
+    """Canonical string key for a label set ('' for unlabeled)."""
+    if not labels:
+        return ""
+    return ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+
+
+class _Null:
+    """Shared no-op instrument: every method accepts anything, does nothing."""
+
+    def inc(self, n=1, **labels):
+        pass
+
+    def set(self, value, **labels):
+        pass
+
+    def observe(self, value, **labels):
+        pass
+
+
+_NULL = _Null()
+
+
+class Counter:
+    """Monotonic counter; one value per label set."""
+
+    def __init__(self):
+        self._values: dict[str, float] = {}
+
+    def inc(self, n: float = 1, **labels) -> None:
+        key = _label_key(labels)
+        self._values[key] = self._values.get(key, 0) + n
+
+    def value(self, **labels) -> float:
+        """The exact label set's count — or, with no labels given, the
+        total across every label set (so ``serve.shed`` sums its
+        per-reason series)."""
+        if labels:
+            return self._values.get(_label_key(labels), 0)
+        if "" in self._values:
+            return self._values[""]
+        return sum(self._values.values())
+
+    def snapshot(self) -> dict:
+        return dict(sorted(self._values.items()))
+
+
+class Gauge:
+    """Point-in-time value, tracked time-weighted against the registry clock.
+
+    ``set`` integrates the previous value over the time it held, so
+    ``time_avg`` is the true time-weighted mean (the paged allocator's
+    ``avg_pages_in_use``) and ``peak`` the high-water mark. Under a
+    deterministic clock every statistic replays identically.
+    """
+
+    def __init__(self, clock):
+        self._clock = clock
+        self._state: dict[str, list] = {}   # key -> [value, peak, integral,
+                                            #         t_start, t_last]
+
+    def set(self, value: float, **labels) -> None:
+        key = _label_key(labels)
+        now = self._clock()
+        st = self._state.get(key)
+        if st is None:
+            self._state[key] = [value, value, 0.0, now, now]
+            return
+        st[2] += st[0] * (now - st[4])
+        st[0] = value
+        st[1] = max(st[1], value)
+        st[4] = now
+
+    def value(self, **labels) -> float:
+        st = self._state.get(_label_key(labels))
+        return st[0] if st else 0.0
+
+    def peak(self, **labels) -> float:
+        st = self._state.get(_label_key(labels))
+        return st[1] if st else 0.0
+
+    def time_avg(self, **labels) -> float:
+        """Time-weighted mean since the gauge's first set."""
+        st = self._state.get(_label_key(labels))
+        if st is None:
+            return 0.0
+        now = self._clock()
+        integral = st[2] + st[0] * (now - st[4])
+        elapsed = now - st[3]
+        return integral / elapsed if elapsed > 0 else st[0]
+
+    def snapshot(self) -> dict:
+        out = {}
+        for key in sorted(self._state):
+            lbl = dict(kv.split("=", 1) for kv in key.split(",")) if key \
+                else {}
+            out[key] = {"value": self.value(**lbl), "peak": self.peak(**lbl),
+                        "time_avg": self.time_avg(**lbl)}
+        return out
+
+
+class Histogram:
+    """Log-bucket (powers of two) histogram: count / sum / min / max plus
+    ``le_<2^k>`` bucket counts — fixed memory whatever the value range,
+    enough resolution for latency distributions (TTFT, inter-token)."""
+
+    def __init__(self):
+        self._series: dict[str, dict] = {}
+
+    @staticmethod
+    def _bucket(value: float) -> str:
+        if value <= 0:
+            return "le_0"
+        return f"le_{2.0 ** math.ceil(math.log2(value)):g}"
+
+    def observe(self, value: float, **labels) -> None:
+        key = _label_key(labels)
+        s = self._series.get(key)
+        if s is None:
+            s = self._series[key] = {"count": 0, "sum": 0.0,
+                                     "min": value, "max": value,
+                                     "buckets": {}}
+        s["count"] += 1
+        s["sum"] += value
+        s["min"] = min(s["min"], value)
+        s["max"] = max(s["max"], value)
+        b = self._bucket(value)
+        s["buckets"][b] = s["buckets"].get(b, 0) + 1
+
+    def value(self, **labels) -> dict:
+        s = self._series.get(_label_key(labels))
+        return dict(s, buckets=dict(s["buckets"])) if s else \
+            {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0, "buckets": {}}
+
+    def snapshot(self) -> dict:
+        out = {}
+        for key in sorted(self._series):
+            s = self._series[key]
+            out[key] = {**{k: s[k] for k in ("count", "sum", "min", "max")},
+                        "buckets": dict(sorted(s["buckets"].items()))}
+        return out
+
+
+class MetricsRegistry:
+    """Named metric instruments, memoized per name.
+
+    ``counter`` / ``gauge`` / ``histogram`` create-or-return the named
+    instrument; reads go through :meth:`value` / :meth:`peak` /
+    :meth:`time_avg` (0 for never-touched names, so report assembly never
+    key-errors). With ``enabled=False`` every instrument accessor returns
+    one shared no-op object and :meth:`snapshot` is empty — a disabled
+    registry costs one attribute lookup per call, nothing else.
+    """
+
+    def __init__(self, *, enabled: bool = True, clock=None):
+        self.enabled = enabled
+        self._clock = clock or time.perf_counter
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if not self.enabled:
+            return _NULL
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        if not self.enabled:
+            return _NULL
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(self._clock)
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        if not self.enabled:
+            return _NULL
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram()
+        return h
+
+    # ---- reads (0 / empty for unknown names, so reports never key-error)
+    def value(self, name: str, **labels) -> float:
+        c = self._counters.get(name)
+        if c is not None:
+            return c.value(**labels)
+        g = self._gauges.get(name)
+        return g.value(**labels) if g is not None else 0.0
+
+    def peak(self, name: str, **labels) -> float:
+        g = self._gauges.get(name)
+        return g.peak(**labels) if g is not None else 0.0
+
+    def time_avg(self, name: str, **labels) -> float:
+        g = self._gauges.get(name)
+        return g.time_avg(**labels) if g is not None else 0.0
+
+    def snapshot(self) -> dict:
+        """Full registry state as plain JSON-serializable dicts."""
+        if not self.enabled:
+            return {}
+        return {
+            "counters": {n: c.snapshot()
+                         for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.snapshot()
+                       for n, g in sorted(self._gauges.items())},
+            "histograms": {n: h.snapshot()
+                           for n, h in sorted(self._histograms.items())},
+        }
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+# --------------------------------------------------------------------------
+# lifecycle trace recorder (Chrome trace_event / Perfetto)
+# --------------------------------------------------------------------------
+
+# (pid, tid, process name, thread name) tracks. One process per subsystem
+# view: the batcher loop, the slot pool (one thread per slot), the request
+# population (one thread per rid).
+LOOP_TRACK = (0, 0, "batcher", "serve loop")
+
+
+def slot_track(slot: int) -> tuple:
+    return (1, slot, "slots", f"slot {slot}")
+
+
+def request_track(rid: int) -> tuple:
+    return (2, rid, "requests", f"req {rid}")
+
+
+class TraceRecorder:
+    """Typed lifecycle events on (process, thread) tracks.
+
+    ``ts`` comes from ``clock`` — seconds on the wall clock, chunk units on
+    the batcher's virtual clock — and is scaled to microseconds (the Chrome
+    ``trace_event`` unit) only at export. Events append in call order;
+    under a deterministic clock and schedule the exported JSON (sorted
+    keys, fixed separators) is byte-identical across runs. Disabled
+    recorders drop every call before allocating anything.
+    """
+
+    def __init__(self, clock, *, enabled: bool = True):
+        self._clock = clock
+        self.enabled = enabled
+        self.events: list[dict] = []
+        self._tracks_seen: set[tuple] = set()
+
+    def now(self) -> float:
+        return self._clock()
+
+    def _track(self, track: tuple) -> tuple:
+        if track not in self._tracks_seen:
+            self._tracks_seen.add(track)
+        return track
+
+    def instant(self, track: tuple, name: str, ts: float | None = None,
+                **args) -> None:
+        """A point event ('i') on ``track`` — at now(), or at an explicit
+        clock reading ``ts`` (e.g. a request's arrival time)."""
+        if not self.enabled:
+            return
+        pid, tid, _, _ = self._track(track)
+        ev = {"name": name, "ph": "i",
+              "ts": self._clock() if ts is None else ts, "pid": pid,
+              "tid": tid, "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def complete(self, track: tuple, name: str, ts: float, **args) -> None:
+        """A span ('X') on ``track`` from ``ts`` (an earlier ``now()``)
+        to the current clock reading."""
+        if not self.enabled:
+            return
+        pid, tid, _, _ = self._track(track)
+        ev = {"name": name, "ph": "X", "ts": ts,
+              "dur": max(self._clock() - ts, 0.0), "pid": pid, "tid": tid}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def to_chrome(self) -> dict:
+        """The run's events as a Chrome ``trace_event`` JSON object
+        (Perfetto opens it directly). Clock units scale to microseconds:
+        1 s (or 1 chunk on the virtual clock) = 1e6 ts units."""
+        scale = 1e6
+        events: list[dict] = []
+        for pid, tid, pname, tname in sorted(self._tracks_seen):
+            events.append({"name": "process_name", "ph": "M", "pid": pid,
+                           "tid": 0, "args": {"name": pname}})
+            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                           "tid": tid, "args": {"name": tname}})
+        for ev in self.events:
+            out = dict(ev)
+            out["ts"] = round(ev["ts"] * scale, 3)
+            if "dur" in ev:
+                out["dur"] = round(ev["dur"] * scale, 3)
+            events.append(out)
+        return {"displayTimeUnit": "ms", "traceEvents": events}
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f, indent=1, sort_keys=True,
+                      separators=(",", ": "))
+            f.write("\n")
+
+
+# --------------------------------------------------------------------------
+# per-run bundle + jax.profiler hooks
+# --------------------------------------------------------------------------
+
+class Telemetry:
+    """One serve run's telemetry: registry + recorder + profiler hooks.
+
+    The batcher constructs one per ``run()`` (with the run's clock — real
+    or virtual) and threads it through every subsystem; ``finish()`` writes
+    whatever artifacts the :class:`ObservabilityConfig` asked for. The
+    registry is always enabled — it *is* the serve counters the
+    :class:`~repro.serving.batcher.ServeReport` is assembled from — while
+    trace recording and profiling stay true no-ops unless requested.
+    """
+
+    def __init__(self, config: ObservabilityConfig | None = None, *,
+                 clock=None):
+        self.config = config or ObservabilityConfig()
+        self.clock = clock or time.perf_counter
+        self.metrics = MetricsRegistry(clock=self.clock)
+        self.trace = TraceRecorder(self.clock,
+                                   enabled=self.config.trace_enabled)
+        self._profiling = False
+
+    def now(self) -> float:
+        return self.clock()
+
+    # ---- jax.profiler hooks -------------------------------------------
+    def annotate(self, name: str):
+        """Context manager attributing device work inside it to ``name``
+        in the profiler timeline (no-op unless profiling this run)."""
+        if not self._profiling:
+            return nullcontext()
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+
+    def start(self) -> None:
+        """Begin the run: start the device profiler when configured.
+        Profiling is best-effort observability — a profiler that cannot
+        start must not take the serve loop down with it."""
+        if self.config.profile_dir is None:
+            return
+        try:
+            import jax
+            jax.profiler.start_trace(self.config.profile_dir)
+            self._profiling = True
+        except Exception as e:  # pragma: no cover - environment-dependent
+            log.warning("jax.profiler.start_trace(%s) failed: %s",
+                        self.config.profile_dir, e)
+
+    def finish(self) -> None:
+        """End the run: stop the profiler and write trace/metrics files."""
+        if self._profiling:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception as e:  # pragma: no cover
+                log.warning("jax.profiler.stop_trace failed: %s", e)
+            self._profiling = False
+        if self.config.trace_out is not None:
+            self.trace.export(self.config.trace_out)
+        if self.config.metrics_out is not None:
+            self.metrics.export(self.config.metrics_out)

@@ -1,18 +1,44 @@
+"""Package logging: one stderr handler on the ``repro`` root logger.
+
+Every module calls ``get_logger(__name__)``; configuration happens once,
+on the first call, and is idempotent after that:
+
+  * the ``repro`` logger gets exactly one stderr ``StreamHandler`` — a
+    repeat call never stacks a second one, even if the module is
+    re-imported or an embedding app resets module state;
+  * ``propagate`` is False so records do not ALSO reach the root logger
+    (double-printing under pytest's ``logging`` plugin or any app that
+    configures the root);
+  * ``REPRO_LOG_LEVEL`` (e.g. ``DEBUG``, ``WARNING``, ``25``) overrides
+    the default INFO level at process start — handy for quieting the
+    serve loop's per-run summary lines in benchmark sweeps.
+"""
 import logging
+import os
 import sys
 
-_CONFIGURED = False
+_HANDLER_NAME = "repro-stderr"
+
+
+def _level_from_env() -> int:
+    raw = os.environ.get("REPRO_LOG_LEVEL", "").strip()
+    if not raw:
+        return logging.INFO
+    if raw.isdigit():
+        return int(raw)
+    level = logging.getLevelName(raw.upper())
+    return level if isinstance(level, int) else logging.INFO
 
 
 def get_logger(name: str = "repro") -> logging.Logger:
-    global _CONFIGURED
-    if not _CONFIGURED:
+    root = logging.getLogger("repro")
+    if not any(h.get_name() == _HANDLER_NAME for h in root.handlers):
         handler = logging.StreamHandler(sys.stderr)
+        handler.set_name(_HANDLER_NAME)
         handler.setFormatter(
             logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s")
         )
-        root = logging.getLogger("repro")
         root.addHandler(handler)
-        root.setLevel(logging.INFO)
-        _CONFIGURED = True
+        root.setLevel(_level_from_env())
+        root.propagate = False
     return logging.getLogger(name)
