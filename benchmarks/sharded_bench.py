@@ -9,12 +9,19 @@ multi-device host mesh and writes ``BENCH_sharded.json`` at the repo root:
     not speed: GSPMD partitioning of the dequantize-in-HLO path costs
     collectives that only pay for themselves against real HBM);
   * ``continuous_paged`` — the slot-pooled continuous batcher over the paged
-    KV pool (kv_heads sharded over 'model'), unsharded vs TP.
+    KV pool (kv_heads sharded over 'model'), unsharded vs TP;
+  * ``packed_pallas`` — the same static packed workload with auto-dispatch
+    *unpinned*: under the mesh it lowers the shard_map'd Pallas kernels
+    (each device runs the packed GEMV / fused SwiGLU on its local plane
+    slice; interpret-mode off TPU). ``kernel_matches_jnp`` gates the tokens
+    against the GSPMD jnp cell; its tok/s column is the artifact the first
+    TPU roofline run fills in (on CPU, interpret mode loses by construction).
 
-Every cell replays the identical ``seed``-fixed workload, and the
-``sharded_matches_unsharded`` flag (CI's regression gate fails on false)
-asserts the TP tokens are bit-exact vs the single-device path at
-temperature 0.
+The jnp A/B cells pin both sides with ``force_impl("jnp")`` so their match
+flag compares sharded-vs-unsharded, never kernel-vs-jnp. Every cell replays
+the identical ``seed``-fixed workload, and the ``sharded_matches_unsharded``
+flags (CI's regression gate fails on false) assert the TP tokens are
+bit-exact vs the single-device path at temperature 0.
 
 Needs >= 2 visible devices; run locally with
 
@@ -48,10 +55,12 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT_JSON = os.path.join(ROOT, "BENCH_sharded.json")
 
 # n_kv_heads divisible by the TP degree so the KV pool actually shards;
-# d_model 128-aligned so every transformer linear packs
+# d_model 128-aligned so every transformer linear packs; d_ff 512 so the
+# FFN-down K axis row-shards at tp=2 (4 scale groups split evenly) and the
+# packed_pallas cell exercises the fused SwiGLU kernel, not its fallback
 SHARD_CFG = ModelConfig(
     arch_id="sharded-bench", family="dense", n_layers=2, d_model=128,
-    n_heads=4, n_kv_heads=4, d_ff=384, vocab=512, head_dim=32)
+    n_heads=4, n_kv_heads=4, d_ff=512, vocab=512, head_dim=32)
 
 TP = 2
 N_REQUESTS = 8
@@ -136,13 +145,7 @@ def sharded_serve_bench(rows: Row, out_json: str = OUT_JSON,
         rows.add("sharded/skipped", 0, results["skipped"])
         return results
 
-    # pin BOTH sides of the A/B to the GSPMD jnp dispatch up front: on a
-    # multi-device TPU host the unsharded baseline would otherwise trace the
-    # Pallas kernels (~=jnp at 1e-4, not bit-equal) while the tp cell uses
-    # jnp, and the match flag would compare two kernel implementations
-    # instead of sharded-vs-unsharded
-    from repro.kernels.ops import set_sharded_serving
-    set_sharded_serving(True)
+    from repro.kernels.ops import force_impl
 
     model = build_model(SHARD_CFG, dtype=jnp.float32, remat=False)
     params = model.init(jax.random.PRNGKey(0))
@@ -160,16 +163,29 @@ def sharded_serve_bench(rows: Row, out_json: str = OUT_JSON,
     requests = [Request(rid=i, prompt=np.asarray(prompts[i]),
                         max_new_tokens=GEN_LEN) for i in range(N_REQUESTS)]
 
-    base_cell, base_toks = _static_cell(model, packed, prompts, None)
-    tp_cell, tp_toks = _static_cell(model, packed_tp, prompts, mesh)
-    static_match = bool(np.array_equal(base_toks, tp_toks))
+    # pin BOTH sides of the jnp A/B up front: on a multi-device host the
+    # mesh-scoped auto-dispatch would otherwise trace the shard_map'd Pallas
+    # kernels for the tp cells while the unsharded side stays jnp, and the
+    # match flags would compare two implementations instead of
+    # sharded-vs-unsharded
+    with force_impl("jnp"):
+        base_cell, base_toks = _static_cell(model, packed, prompts, None)
+        tp_cell, tp_toks = _static_cell(model, packed_tp, prompts, mesh)
+        static_match = bool(np.array_equal(base_toks, tp_toks))
 
-    cont_base, cont_base_toks = _continuous_cell(model, res.params, requests,
-                                                 None)
-    cont_tp, cont_tp_toks = _continuous_cell(model, res.params, requests,
-                                             mesh)
-    cont_match = all(np.array_equal(cont_base_toks[r.rid],
-                                    cont_tp_toks[r.rid]) for r in requests)
+        cont_base, cont_base_toks = _continuous_cell(model, res.params,
+                                                     requests, None)
+        cont_tp, cont_tp_toks = _continuous_cell(model, res.params, requests,
+                                                 mesh)
+        cont_match = all(np.array_equal(cont_base_toks[r.rid],
+                                        cont_tp_toks[r.rid])
+                         for r in requests)
+
+    # unpinned cell: the mesh-scoped auto-dispatch lowers the shard_map'd
+    # packed kernels (interpret mode off TPU, so the tok/s here is a
+    # correctness artifact on CPU and a roofline number on a real mesh)
+    pallas_cell, pallas_toks = _static_cell(model, packed_tp, prompts, mesh)
+    pallas_match = bool(np.array_equal(pallas_toks, base_toks))
 
     results = {
         "config": config,
@@ -183,6 +199,10 @@ def sharded_serve_bench(rows: Row, out_json: str = OUT_JSON,
             f"tp{TP}": cont_tp,
             "sharded_matches_unsharded": bool(cont_match),
         },
+        "packed_pallas": {
+            f"tp{TP}": pallas_cell,
+            "kernel_matches_jnp": pallas_match,
+        },
     }
 
     for name, cell in (("static_packed", results["static_packed"]),
@@ -195,6 +215,9 @@ def sharded_serve_bench(rows: Row, out_json: str = OUT_JSON,
                  f"tok_s={cell[f'tp{TP}']['tok_s']:.1f} (x{ratio:.2f})")
         rows.add(f"sharded/{name}/match", 0,
                  str(cell["sharded_matches_unsharded"]))
+    rows.add(f"sharded/packed_pallas/tp{TP}", 0,
+             f"tok_s={pallas_cell['tok_s']:.1f}")
+    rows.add("sharded/packed_pallas/match", 0, str(pallas_match))
 
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)

@@ -3,66 +3,155 @@
 ``stb_matmul(x, packed, impl=...)`` dispatches between:
   * "pallas"      — the TPU kernels (compiled on TPU, interpret=True
                     elsewhere); the *variant* (small-M GEMV vs tiled GEMM)
-                    and its block sizes come from the heuristic table below
-  * "jnp"         — dequantize-in-HLO + dense matmul; this is what the
-                    distributed serve path lowers on any backend (the decode
-                    ops appear in the HLO, so dry-run byte counts reflect the
-                    packed HBM traffic)
+                    and its block sizes come from the heuristic table below.
+                    Under a >1-device serve mesh (see below) this is the
+                    shard_map'd variant: each device runs the kernel on its
+                    local plane slice.
+  * "jnp"         — dequantize-in-HLO + dense matmul; GSPMD partitions it on
+                    any backend (the decode ops appear in the HLO, so
+                    dry-run byte counts reflect the packed HBM traffic)
   * "ref"         — alias of the oracle in ref.py
-  * None          — auto: pallas on TPU, jnp otherwise
+  * None          — auto: pallas on TPU or under a serve mesh, jnp otherwise
 
-``stb_swiglu(x, pg, pu, pd)`` is the FFN analogue: on TPU it runs the fused
-packed SwiGLU kernel (bit-planes decode in VMEM, hidden never in HBM); off
-TPU it lowers the dequantize-fused jnp path.
+``stb_swiglu(x, pg, pu, pd)`` is the FFN analogue: the fused packed SwiGLU
+kernel (bit-planes decode in VMEM, hidden never in HBM), or the
+dequantize-fused jnp path.
+
+Mesh-scoped dispatch
+--------------------
+Sharded serving (launch/serve --tp/--mesh) used to pin every packed matmul
+to the jnp path through a sticky process-wide flag, abandoning the packed
+HBM roofline exactly when the model needs a mesh. The dispatch is now
+*mesh-scoped*: builders wrap the functions they jit with
+:func:`mesh_scoped`, so :func:`serve_mesh` returns the serve mesh exactly
+while those functions trace (and on retraces), and is ``None`` everywhere
+else. Under a mesh, auto-dispatch picks the **shard_map'd** Pallas kernels:
+each device runs the kernel on its local mask/sign/region/scale slice
+(interpret-mode off TPU, so CPU CI exercises the real code path) —
+
+  * ``stb_matmul``: column-parallel, planes N-sliced over 'model', no
+    collective (every output column's K loop is untouched, so the result is
+    bitwise equal to the single-device kernel);
+  * ``stb_swiglu``: gate/up planes column-sliced over d_ff, down planes
+    row-sliced over their K (= d_ff) axis, one ``psum`` on the down output
+    — mirroring the dense TP layout in ``sharding/rules.py``. Falls back to
+    the jnp path when ``row_shardable(d_ff, tp)`` fails (the sharding rules
+    then column-shard the down planes the same way, so dispatch and layout
+    always agree).
+
+Because the scope restores the previous mesh on exit (and is only ever
+active during a trace), an unsharded serve after a sharded one reclaims the
+single-device fast path with no manual reset — the old
+``set_sharded_serving`` sticky-flag footgun is gone structurally.
 """
 from __future__ import annotations
 
+import functools
+from contextlib import contextmanager
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.ref import stb_matmul_ref
 from repro.kernels.stb_gemm import stb_gemm_packed, stb_gemv_packed
-from repro.quant.packing import PackedLinear, unpack_to_dense
+from repro.quant.packing import (
+    PackedLinear,
+    local_view,
+    row_shardable,
+    unpack_to_dense,
+)
 
 
 def _platform() -> str:
     return jax.devices()[0].platform
 
 
-# Sharded serving (launch/serve --tp/--mesh) lowers every packed matmul
-# through the jnp dequantize-in-HLO path so GSPMD can partition it along the
-# TP-sharded N dim; the Pallas kernels are a single-device fast path (their
-# grids index the *global* plane shapes) and must not see sharded operands.
-# serve_shardings() flips this flag when the mesh has more than one device;
-# auto-dispatch then picks "jnp" even on TPU, and an explicit impl="pallas"
-# request fails loudly instead of miscomputing. The flag is deliberately
-# process-wide and sticky: a process that has served sharded once keeps the
-# conservative jnp dispatch for later unsharded serves too (correct, slower
-# on TPU — call set_sharded_serving(False) to reclaim the fast path; a
-# mesh-scoped guard arrives with the shard_map'd kernels, see ROADMAP).
-_SHARDED_SERVING = False
+# --------------------------------------------------------------------------
+# mesh-scoped dispatch state
+# --------------------------------------------------------------------------
+_SERVE_MESH = None       # jax.sharding.Mesh while tracing a sharded serve fn
+_FORCE_IMPL = None       # benches pin auto-dispatch ("jnp") for clean A/Bs
 
 
-def set_sharded_serving(on: bool) -> None:
-    """Mark the process as serving over a >1-device mesh (GSPMD paths only)."""
-    global _SHARDED_SERVING
-    _SHARDED_SERVING = bool(on)
+@contextmanager
+def serving_mesh(mesh):
+    """Scope the packed-kernel dispatch to ``mesh`` (None or size-1 meshes
+    are a no-op). Always restores the previous scope on exit, including on
+    error — serving sharded can never leak dispatch state into a later
+    unsharded serve."""
+    global _SERVE_MESH
+    prev = _SERVE_MESH
+    _SERVE_MESH = mesh if (mesh is not None and mesh.size > 1) else None
+    try:
+        yield
+    finally:
+        _SERVE_MESH = prev
 
 
-def sharded_serving() -> bool:
-    return _SHARDED_SERVING
+def serve_mesh():
+    """The mesh the current trace serves under, or None (single device)."""
+    return _SERVE_MESH
+
+
+def mesh_scoped(fn, mesh):
+    """Wrap ``fn`` so every call (hence every jit trace *and retrace*) runs
+    under ``serving_mesh(mesh)``.
+
+    Apply **before** ``jax.jit`` — ``jax.jit(mesh_scoped(f, mesh), ...)`` —
+    so the scope is active exactly while jit traces the function; compiled
+    cache hits re-enter the (trivially cheap) context but never re-trace.
+    With ``mesh=None`` (or a 1-device mesh) returns ``fn`` unchanged.
+    """
+    if mesh is None or mesh.size <= 1:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with serving_mesh(mesh):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+
+@contextmanager
+def force_impl(impl: str | None):
+    """Pin auto-dispatch (``impl=None`` calls) to a fixed impl within the
+    scope. Benches use ``force_impl("jnp")`` to hold both sides of a
+    sharded-vs-unsharded A/B on the GSPMD path, so the match flag compares
+    sharding, not kernel implementations. Explicit ``impl=`` arguments
+    still win."""
+    global _FORCE_IMPL
+    prev = _FORCE_IMPL
+    _FORCE_IMPL = impl
+    try:
+        yield
+    finally:
+        _FORCE_IMPL = prev
 
 
 def _dispatch_impl(impl: str | None) -> str:
     if impl is None:
-        if _SHARDED_SERVING:
-            return "jnp"
+        impl = _FORCE_IMPL
+    if impl is None:
+        if _SERVE_MESH is not None:
+            # the shard_map'd kernel path — interpret-mode off TPU, so the
+            # forced-host-device CI meshes exercise the real dispatch
+            return "pallas"
         return "pallas" if _platform() == "tpu" else "jnp"
-    if impl == "pallas" and _SHARDED_SERVING:
-        raise AssertionError(
-            "Pallas STB kernels are the single-device fast path; a >1-device "
-            "serve mesh must lower the GSPMD jnp path (impl='jnp')")
     return impl
+
+
+def auto_impl() -> str:
+    """The impl auto-dispatch would pick right now ("pallas" or "jnp").
+    Kernel call sites outside this module (paged attention) consult it so
+    ``force_impl("jnp")`` pins *every* packed/fused kernel, not just the
+    matmuls."""
+    return _dispatch_impl(None)
+
+
+def _tp(mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
 
 
 # ---------------------------------------------------------------------------
@@ -84,26 +173,134 @@ STB_BLOCK_TABLE: tuple[tuple[int, dict], ...] = (
 GEMM_BLOCKS = dict(bm=128, bn=128, bk=128)
 
 
-def select_stb_blocks(m: int) -> tuple[str, dict]:
+def select_stb_blocks(m: int, n: int | None = None,
+                      k: int | None = None) -> tuple[str, dict]:
     """(variant, block kwargs) for an [M, K] x packed matmul.
 
-    The choice depends on M only: K/N re-fitting to divisor blocks happens
-    inside the kernel wrappers (``_fit_block``), which see the real plane
-    shapes.
+    The variant depends on M only. When ``n``/``k`` are given they are the
+    **local** (post-``shard_map``-slice) plane dims: when the chosen row's
+    ``bn`` exceeds the local N the lookup falls forward to narrower rows'
+    ``bn`` (finally clamping to N itself) instead of handing the kernel a
+    tile wider than the shard — at high TP on small configs the table's
+    widest tiles exceed the local N. ``bk`` stays the M-selected row's
+    (clamped only by ``k``): under column-parallel sharding the local K
+    equals the global K, and keeping the K tiling fixed keeps the sharded
+    kernel's accumulation order — hence its output — **bitwise** identical
+    to the single-device kernel's at every TP. Never raises; exact divisor
+    re-fitting still happens inside the kernel wrappers (``_fit_block``),
+    which see the real padded plane shapes.
     """
-    for max_m, kw in STB_BLOCK_TABLE:
+    pick = None
+    for i, (max_m, _) in enumerate(STB_BLOCK_TABLE):
         if m <= max_m:
-            return "gemv", dict(kw)
-    return "gemm", dict(GEMM_BLOCKS)
+            pick = i
+            break
+    if pick is None:
+        kw = dict(GEMM_BLOCKS)
+        if n is not None:
+            kw["bn"] = min(kw["bn"], max(n, 1))
+        if k is not None:
+            kw["bk"] = min(kw["bk"], max(k, 1))
+        return "gemm", kw
+    kw = dict(STB_BLOCK_TABLE[pick][1])
+    j = pick
+    while (n is not None and j + 1 < len(STB_BLOCK_TABLE)
+           and STB_BLOCK_TABLE[j][1]["bn"] > n):
+        j += 1                          # fall forward to a narrower bn
+    kw["bn"] = STB_BLOCK_TABLE[j][1]["bn"]
+    if n is not None:
+        kw["bn"] = min(kw["bn"], max(n, 1))
+    if k is not None:
+        kw["bk"] = min(kw["bk"], max(k, 1))
+    return "gemv", kw
+
+
+# ---------------------------------------------------------------------------
+# shard_map'd kernel variants (>1-device serve meshes)
+# ---------------------------------------------------------------------------
+def _stb_matmul_spmd(x2: jnp.ndarray, p: PackedLinear, mesh,
+                     **kw) -> jnp.ndarray:
+    """Column-parallel shard_map'd STB matmul: planes N-sliced over 'model',
+    x replicated, no collective — each device decodes and multiplies only
+    its own packed bytes, and every output column's K loop is identical to
+    the single-device kernel's (bitwise-equal partials)."""
+    from jax.experimental.shard_map import shard_map
+
+    tp = _tp(mesh)
+    variant, blocks = select_stb_blocks(x2.shape[0], n=p.n // tp, k=p.k)
+    blocks.update(kw)
+    if variant == "gemv":
+        blocks.pop("bm", None)
+    fn = stb_gemv_packed if variant == "gemv" else stb_gemm_packed
+    interpret = _platform() != "tpu"
+    n_m = p.n_m
+
+    def body(xl, mask, sign, sres, reg, sc):
+        lp = local_view(mask, sign, sres, reg, sc, n_m)
+        return fn(xl, lp, interpret=interpret, **blocks)
+
+    col = P(None, "model")
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), col, col, col, col, P(None, "model", None)),
+        out_specs=col, check_rep=False,
+    )(x2, p.mask_bits, p.sign_bits, p.sign_res_bits, p.region_bits, p.scales)
+
+
+def _stb_swiglu_spmd(x2: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
+                     pd: PackedLinear, mesh) -> jnp.ndarray:
+    """shard_map'd fused packed SwiGLU: gate/up planes column-sliced over
+    d_ff, down planes row-sliced over their K (= d_ff) axis, one ``psum``
+    on the down output (the only collective). Each device runs the fused
+    kernel over its d_ff shard — hidden tiles never leave its VMEM, packed
+    HBM reads are local bytes only."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.fused_ffn import _planes, fused_swiglu_packed
+
+    interpret = _platform() != "tpu"
+    n_m = pg.n_m
+
+    def body(xl, *planes):
+        lg = local_view(*planes[0:5], n_m)
+        lu = local_view(*planes[5:10], n_m)
+        ld = local_view(*planes[10:15], n_m)
+        y = fused_swiglu_packed(xl, lg, lu, ld, interpret=interpret)
+        return jax.lax.psum(y, "model")
+
+    col = (P(None, "model"),) * 4 + (P(None, "model", None),)
+    row = (P("model", None),) * 4 + (P("model", None, None),)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(),) + col + col + row,
+        out_specs=P(), check_rep=False,
+    )(x2, *_planes(pg), *_planes(pu), *_planes(pd))
 
 
 def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
-               **kw) -> jnp.ndarray:
-    """y = x @ decode(W).  x: [..., K] -> [..., N]."""
+               name: str | None = None, **kw) -> jnp.ndarray:
+    """y = x @ decode(W).  x: [..., K] -> [..., N].
+
+    ``name`` is the layer name (threaded from ``modules.dense``) — layers
+    the sharding rules keep replicated for correctness (wk_rope: rope's
+    split/concat on a 'model'-sharded last dim miscompiles on the jax
+    0.4.37 CPU SPMD backend, see ``sharding/rules.py``) must not be
+    column-sharded by the kernel path either, and take the jnp route under
+    a mesh.
+    """
     impl = _dispatch_impl(impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if impl == "pallas":
+    mesh = _SERVE_MESH
+    if impl == "pallas" and mesh is not None:
+        if ("model" not in mesh.axis_names or p.n % _tp(mesh)
+                or (name is not None and "wk_rope" in name)):
+            # non-divisible N (the rules replicate these planes) or a
+            # rule-replicated layer: GSPMD jnp path, same as the spec side
+            y = stb_matmul_ref(x2, p)
+        else:
+            y = _stb_matmul_spmd(x2, p, mesh, **kw)
+    elif impl == "pallas":
         variant, blocks = select_stb_blocks(x2.shape[0])
         blocks.update(kw)
         fn = stb_gemv_packed if variant == "gemv" else stb_gemm_packed
@@ -120,7 +317,7 @@ def stb_matmul(x: jnp.ndarray, p: PackedLinear, impl: str | None = None,
 
 def _stb_swiglu_jnp(x2: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
                     pd: PackedLinear) -> jnp.ndarray:
-    """Dequantize-in-HLO fused reference — the non-TPU serve lowering."""
+    """Dequantize-in-HLO fused reference — the GSPMD serve lowering."""
     g = jnp.matmul(x2, unpack_to_dense(pg, x2.dtype),
                    preferred_element_type=jnp.float32)
     u = jnp.matmul(x2, unpack_to_dense(pu, x2.dtype),
@@ -137,7 +334,18 @@ def stb_swiglu(x: jnp.ndarray, pg: PackedLinear, pu: PackedLinear,
     impl = _dispatch_impl(impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if impl == "pallas":
+    mesh = _SERVE_MESH
+    if impl == "pallas" and mesh is not None:
+        # the down planes row-shard only when every plane's K axis slices
+        # evenly (rules.py uses the same predicate); d must carry whole
+        # scale groups for the kernel. Otherwise the rules column-shard the
+        # down planes and the jnp path lowers through GSPMD.
+        if ("model" in mesh.axis_names
+                and row_shardable(pd.k, _tp(mesh)) and pd.n % 128 == 0):
+            y = _stb_swiglu_spmd(x2, pg, pu, pd, mesh)
+        else:
+            y = _stb_swiglu_jnp(x2, pg, pu, pd)
+    elif impl == "pallas":
         from repro.kernels.fused_ffn import fused_swiglu_packed
         y = fused_swiglu_packed(x2, pg, pu, pd,
                                 interpret=_platform() != "tpu")

@@ -135,6 +135,54 @@ def paged_decode_attention(
     )(tables, q, k_pages, k_scale, v_pages, v_scale, lens)
 
 
+def paged_decode_attention_spmd(
+    q: jnp.ndarray,         # [B, KH, G, D]
+    k_pages: jnp.ndarray,   # [P, page_size, KH, D] int8
+    k_scale: jnp.ndarray,   # [P, page_size, KH] f32
+    v_pages: jnp.ndarray,   # [P, page_size, KH, D] int8
+    v_scale: jnp.ndarray,   # [P, page_size, KH] f32
+    block_tables: jnp.ndarray,  # [B, NB] int32
+    cache_len: jnp.ndarray,     # [] or [B] int32
+    mesh,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """shard_map'd paged decode attention: the KV-head axis mapped over
+    'model', everything else replicated.
+
+    The serve pools already shard KH over 'model' (``sharding/rules.py``
+    ``_serve_pool_spec``) and q's head axis follows the head-sharded
+    projections, so each device's shard of the pool holds exactly the pages
+    its local heads attend over. Block tables and lengths are replicated
+    host state. Per device the kernel body is *unchanged* — same grid, same
+    scalar-prefetched tables, just ``KH / tp`` heads — and heads never mix,
+    so the output is bitwise equal to the single-device kernel, no
+    collective needed. Callers must check ``KH % tp == 0`` (the jnp gather
+    path is the fallback).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b = q.shape[0]
+    # broadcast to [B] *outside* the shard_map: inside the body, an implicit
+    # scalar->B broadcast would be a per-device re-derivation; explicit and
+    # replicated is clearer and free
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+
+    def body(ql, kp, ks, vp, vs, tb, cl):
+        return paged_decode_attention(ql, kp, ks, vp, vs, tb, cl,
+                                      interpret=interpret)
+
+    kh_q = P(None, "model")           # [B, KH, G, D]
+    kh_pool = P(None, None, "model")  # [P, ps, KH(, D)] — pages/scales alike
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(kh_q, kh_pool, kh_pool, kh_pool, kh_pool, P(), P()),
+        out_specs=kh_q, check_rep=False,
+    )(q, k_pages, k_scale, v_pages, v_scale,
+      jnp.asarray(block_tables, jnp.int32), lens)
+
+
 def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
     """[P, page_size, ...] pool + [B, NB] tables -> [B, NB * page_size, ...]
     contiguous logical-order caches (the HLO fallback / oracle layout)."""

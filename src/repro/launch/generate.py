@@ -29,9 +29,13 @@ and jit with explicit ``in_shardings``/``out_shardings`` — params under
 and dense weights shard their N dim over 'model', no per-token FSDP gathers),
 caches under the serve-pool specs (kv_heads over 'model'), scalars/tokens
 replicated. Cache donation is preserved, so the decode scan still runs
-in-place over each device's pool shard. The math lowers through GSPMD on the
-jnp paths; the Pallas kernels stay the single-device TPU fast path
-(``repro.kernels.ops`` asserts they are unreachable under a >1-device mesh).
+in-place over each device's pool shard. Every function a builder jits is
+wrapped with :func:`repro.kernels.ops.mesh_scoped` first, so while it traces
+(and on retraces) auto-dispatch sees the serve mesh and lowers the
+**shard_map'd Pallas kernels** — each device runs the packed kernel on its
+local plane/pool slice (interpret-mode off TPU); dense math still lowers
+through GSPMD. The scope restores itself after every call, so sharded and
+unsharded pipelines coexist in one process with no global dispatch state.
 """
 from __future__ import annotations
 
@@ -43,6 +47,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.ops import mesh_scoped
 
 
 @dataclass(frozen=True)
@@ -111,18 +117,15 @@ def serve_shardings(model, mesh, params, batch: int, max_len: int, *,
     ShapeDtypeStruct tree — only shapes and pytree structure are read, so
     PackedLinear-substituted trees spec their planes per leaf.
 
-    Every mesh-aware serve path funnels through here, so this is also where
-    a >1-device mesh pins the packed-kernel dispatch to the GSPMD jnp path
-    (the Pallas kernels index global plane/pool shapes and must never see
-    sharded operands) — callers don't have to remember the guard.
+    This is a *pure* layout computation: it flips no dispatch state. The
+    packed-kernel dispatch is scoped to each jitted function's trace via
+    :func:`repro.kernels.ops.mesh_scoped` (the builders apply it), so an
+    unsharded serve after a sharded one needs no reset of any kind — the
+    old ``set_sharded_serving`` sticky flag is gone.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.sharding.rules import cache_specs, named_shardings, param_specs
-
-    if mesh.size > 1:
-        from repro.kernels.ops import set_sharded_serving
-        set_sharded_serving(True)
 
     p_shard = named_shardings(
         param_specs(params, mesh, serve_replicated=True), mesh)
@@ -196,7 +199,8 @@ def make_suffix_prefill(model, *, temperature: float = 0.0, mesh=None,
                                               axis=1)
         return sample(logits, key), caches
 
-    return jax.jit(suffix_prefill, donate_argnums=(1,), **jit_kw)
+    return jax.jit(mesh_scoped(suffix_prefill, mesh), donate_argnums=(1,),
+                   **jit_kw)
 
 
 def make_generate(model, *, prompt_len: int, gen_len: int,
@@ -262,8 +266,9 @@ def make_generate(model, *, prompt_len: int, gen_len: int,
     # alias through the depth scan (a spurious warning); donate only the
     # decode loop, where in-place cache reuse matters for memory.
     return GeneratePipeline(
-        prefill_fn=jax.jit(prefill, **jit_kw),
-        decode_fn=jax.jit(decode, donate_argnums=(1,) if donate else (),
+        prefill_fn=jax.jit(mesh_scoped(prefill, mesh), **jit_kw),
+        decode_fn=jax.jit(mesh_scoped(decode, mesh),
+                          donate_argnums=(1,) if donate else (),
                           **decode_jit_kw),
         prompt_len=prompt_len,
         gen_len=gen_len,
@@ -497,8 +502,8 @@ def make_speculative_decode(model, *, prompt_len: int, gen_len: int,
         return out, stats, t_caches, d_caches
 
     return SpeculativePipeline(
-        prefill_fn=jax.jit(prefill, **jit_kw),
-        decode_fn=jax.jit(decode,
+        prefill_fn=jax.jit(mesh_scoped(prefill, mesh), **jit_kw),
+        decode_fn=jax.jit(mesh_scoped(decode, mesh),
                           donate_argnums=(2, 3) if donate else (),
                           **decode_jit_kw),
         prompt_len=prompt_len, gen_len=gen_len, draft_k=draft_k,
@@ -603,14 +608,16 @@ def make_speculative_chunked_decode(model, *, draft_k: int,
 
     donate = (2, 3)
     if paged:
-        return jax.jit(chunk, donate_argnums=donate, **jit_kw)
+        return jax.jit(mesh_scoped(chunk, mesh), donate_argnums=donate,
+                       **jit_kw)
 
     def dense_chunk(t_params, d_params, t_caches, d_caches, tok, pos,
                     remaining, memory):
         return chunk(t_params, d_params, t_caches, d_caches, tok, pos,
                      remaining, None, memory)
 
-    return jax.jit(dense_chunk, donate_argnums=donate, **jit_kw)
+    return jax.jit(mesh_scoped(dense_chunk, mesh), donate_argnums=donate,
+                   **jit_kw)
 
 
 def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
@@ -709,9 +716,11 @@ def make_chunked_decode(model, *, chunk_steps: int, temperature: float = 0.0,
 
     donate = (1,) if donate else ()
     if paged:
-        return jax.jit(chunk, donate_argnums=donate, **jit_kw)
+        return jax.jit(mesh_scoped(chunk, mesh), donate_argnums=donate,
+                       **jit_kw)
 
     def dense_chunk(params, caches, tok, pos, remaining, memory, key):
         return chunk(params, caches, tok, pos, remaining, None, memory, key)
 
-    return jax.jit(dense_chunk, donate_argnums=donate, **jit_kw)
+    return jax.jit(mesh_scoped(dense_chunk, mesh), donate_argnums=donate,
+                   **jit_kw)

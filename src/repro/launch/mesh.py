@@ -28,6 +28,30 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def init_distributed(coordinator: str, num_processes: int, process_id: int):
+    """Join a multi-host jax runtime before any device query.
+
+    ``coordinator`` is ``host:port`` of process 0. After this returns,
+    ``jax.devices()`` sees every process's accelerators, so the ordinary
+    mesh builders (:func:`make_host_mesh`, :func:`make_production_mesh`)
+    produce *global* meshes with no further changes — the sharding rules
+    and the serve loops are already axis-name-agnostic, and GSPMD /
+    ``shard_map`` insert the cross-host collectives. Must run before the
+    first jax call in the process (device state is frozen at first use);
+    each process then serves its own shard of every dispatch.
+    """
+    if num_processes < 2:
+        raise ValueError(f"multi-host init needs num_processes >= 2 "
+                         f"(got {num_processes}); drop --coordinator for "
+                         f"single-host serving")
+    if not 0 <= process_id < num_processes:
+        raise ValueError(f"process_id {process_id} outside "
+                         f"[0, {num_processes})")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / single host).
 

@@ -77,13 +77,22 @@ device trace with serve-phase annotations — see README "Observability".
 ``--tp N`` / ``--mesh DxM`` serve tensor-parallel over a device mesh: params
 are device_put under the weight-stationary TP specs (packed bit-planes shard
 their N dim over 'model' — each device streams only its slice of the
-mask/sign/region bytes), KV pools shard kv_heads over 'model', and every
-serve loop (static, continuous, paged) jits with explicit in/out shardings.
-For local testing force a host mesh first:
+mask/sign/region bytes; FFN-down planes shard K when it slices evenly), KV
+pools shard kv_heads over 'model', and every serve loop (static, continuous,
+paged) jits with explicit in/out shardings. Under the mesh the packed Pallas
+kernels run **shard_map'd** on each device's local plane/pool slice
+(interpret-mode off TPU) — see README "Sharded serving" for the dispatch
+rules. For local testing force a host mesh first:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \\
       --smoke --tp 2 --packed --continuous --paged
+
+``--coordinator HOST:PORT --num-processes N --process-id I`` lifts the same
+mesh to multi-host: every host runs this command with its own rank, the
+jax.distributed runtime is joined before any device query, and --mesh/--tp
+then span all processes' devices (GSPMD and shard_map insert the cross-host
+collectives; each process drives its own shard of every dispatch).
 """
 from __future__ import annotations
 
@@ -537,7 +546,26 @@ def main() -> None:
     g.add_argument("--mesh", default=None,
                    help="explicit DxM serve mesh, e.g. 2x4 (data x model); "
                         "exclusive with --tp")
+    g.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                   help="multi-host serving: join the jax.distributed "
+                        "runtime at process 0's coordinator before any "
+                        "device query; --mesh/--tp then span every "
+                        "process's devices (run the same command on each "
+                        "host with its own --process-id)")
+    g.add_argument("--num-processes", type=int, default=None,
+                   help="total participating processes (--coordinator)")
+    g.add_argument("--process-id", type=int, default=None,
+                   help="this process's rank in [0, num_processes) "
+                        "(--coordinator)")
     args = ap.parse_args()
+    if args.coordinator is not None:
+        if args.num_processes is None or args.process_id is None:
+            ap.error("--coordinator needs --num-processes and --process-id")
+        from repro.launch.mesh import init_distributed
+        init_distributed(args.coordinator, args.num_processes,
+                         args.process_id)
+    elif args.num_processes is not None or args.process_id is not None:
+        ap.error("--num-processes/--process-id only apply with --coordinator")
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
     common = dict(smoke=args.smoke, n_requests=args.n_requests, nm=args.nm,

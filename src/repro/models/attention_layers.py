@@ -211,12 +211,13 @@ def gqa_decode(params: dict, x: jnp.ndarray, cache: dict, pos, cfg: GQAConfig,
                 "k_scale": _cache_write(cache["k_scale"], ks, pos, axis=1),
                 "v_scale": _cache_write(cache["v_scale"], vs, pos, axis=1),
             }
-            from repro.kernels.ops import sharded_serving
+            from repro.kernels.ops import serve_mesh
             if t == 1 and jax.devices()[0].platform == "tpu" \
-                    and not sharded_serving():
+                    and serve_mesh() is None:
                 # fused Pallas path: int8 cache never dequantized in HBM.
-                # Like the STB kernels, it indexes global cache shapes, so a
-                # >1-device serve mesh takes the GSPMD jnp path below instead.
+                # It indexes global cache shapes, so under a >1-device serve
+                # mesh the GSPMD jnp path below runs instead (paged serving
+                # is the sharded-kernel path; see _gqa_decode_paged).
                 from repro.kernels.decode_attn import decode_attention_int8
                 b_, _, h, dh = q.shape
                 kh = cache["k"].shape[2]
@@ -260,16 +261,33 @@ def _gqa_decode_paged(params: dict, x: jnp.ndarray, cache: dict, pos,
                 "k_scale": _page_write(cache["k_scale"], ks, page, off),
                 "v_scale": _page_write(cache["v_scale"], vs, page, off),
             }
-            from repro.kernels.ops import sharded_serving
-            if t == 1 and jax.devices()[0].platform == "tpu" \
-                    and not sharded_serving():
-                # fused Pallas path: pages gathered in VMEM via scalar-
-                # prefetched block tables, never materialized in HBM. Under
-                # a >1-device serve mesh the pool is KH-sharded and the
-                # kernel's global-shape grid is wrong — take the jnp gather.
+            from repro.kernels.ops import auto_impl, serve_mesh
+            mesh = serve_mesh()
+            platform = jax.devices()[0].platform
+            kh = cache["k"].shape[2]
+            tp = (int(mesh.shape["model"])
+                  if mesh is not None and "model" in mesh.axis_names else 0)
+            if (t == 1 and mesh is not None and tp and kh % tp == 0
+                    and auto_impl() == "pallas"):
+                # shard_map'd fused Pallas path: each device runs the kernel
+                # over its local kv-head slice of the pool (the pool specs
+                # already put KH over 'model'); block tables replicated, no
+                # collective, bitwise equal per head. Interpret-mode off TPU
+                # so the forced-host-device CI meshes run this same path.
+                from repro.kernels.paged_attn import paged_decode_attention_spmd
+                b_, _, h, dh = q.shape
+                qg = (q[:, 0] * (dh ** -0.5)).reshape(b_, kh, h // kh, dh)
+                o = paged_decode_attention_spmd(
+                    qg, cache["k"], cache["k_scale"], cache["v"],
+                    cache["v_scale"], block_tables, p1, mesh,
+                    interpret=platform != "tpu")
+                y = dense(params["wo"], o.reshape(b_, 1, -1), "wo")
+                return y, cache
+            if t == 1 and mesh is None and platform == "tpu":
+                # single-device fused Pallas path: pages gathered in VMEM via
+                # scalar-prefetched block tables, never materialized in HBM.
                 from repro.kernels.paged_attn import paged_decode_attention
                 b_, _, h, dh = q.shape
-                kh = cache["k"].shape[2]
                 qg = (q[:, 0] * (dh ** -0.5)).reshape(b_, kh, h // kh, dh)
                 o = paged_decode_attention(
                     qg, cache["k"], cache["k_scale"], cache["v"],

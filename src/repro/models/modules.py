@@ -92,7 +92,7 @@ def dense(params: dict, x: jnp.ndarray, name: str = "dense") -> jnp.ndarray:
     w = params["w"]
     if isinstance(w, PackedLinear):
         from repro.kernels.ops import stb_matmul
-        return stb_matmul(x, w)
+        return stb_matmul(x, w, name=name)
     _record(name, x)
     return jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
 

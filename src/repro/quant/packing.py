@@ -165,6 +165,40 @@ def packable(k: int, n: int) -> bool:
     return k % SCALE_GROUP == 0 and n % 8 == 0
 
 
+def row_shardable(k: int, tp: int) -> bool:
+    """Whether a packed [K, N] layer's planes can shard their K axis ``tp``
+    ways with *every* plane slicing evenly.
+
+    The five planes carry K at different densities (K/8 rows for the 1-bit
+    planes, K/4 for regions, K/128 for scales), so a per-plane divisibility
+    check can shard the bit planes while replicating the scales — an
+    incoherent layout no kernel can consume. The single coherent condition
+    is that the scale-group count splits: ``(K / SCALE_GROUP) % tp == 0``,
+    which implies every coarser plane splits too. Shared by
+    ``sharding.rules`` (spec assignment) and ``kernels.ops`` (shard_map
+    dispatch) so the two always agree.
+    """
+    return tp >= 1 and k % SCALE_GROUP == 0 and (k // SCALE_GROUP) % tp == 0
+
+
+def local_view(mask_bits, sign_bits, sign_res_bits, region_bits, scales,
+               n_m=(4, 8)) -> PackedLinear:
+    """Rebuild a PackedLinear around device-local plane slices.
+
+    Inside a ``shard_map`` body the planes are per-device shards, but
+    ``PackedLinear.k``/``n`` are *static* aux fields that would still hold
+    the global shapes if the sharded tree's object were reused — every
+    kernel shape check would then reject the local operands. This derives
+    the local k/n from the mask plane (k = rows * 8, n = cols), which is
+    exact for any slicing the sharding rules produce (N-slices keep k;
+    K-slices satisfy ``row_shardable``, so rows * 8 is the local K).
+    """
+    return PackedLinear(
+        mask_bits=mask_bits, sign_bits=sign_bits,
+        sign_res_bits=sign_res_bits, region_bits=region_bits, scales=scales,
+        k=mask_bits.shape[-2] * 8, n=mask_bits.shape[-1], n_m=tuple(n_m))
+
+
 def stack_packed(packs: list[PackedLinear]) -> PackedLinear:
     """Stack per-group PackedLinears along a new leading axis.
 

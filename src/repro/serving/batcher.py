@@ -448,9 +448,9 @@ class ContinuousBatcher:
         mesh_kw: dict = {}
         spec_mesh_kw: dict = {}
         if mesh is not None:
-            # one serve_shardings call covers params + pool (and pins the
-            # packed-kernel dispatch to the GSPMD jnp path); the chunk jit
-            # reuses the triple instead of re-walking the param tree
+            # one serve_shardings call covers params + pool (a pure layout
+            # computation — kernel dispatch is mesh-scoped per jitted fn);
+            # the chunk jit reuses the triple instead of re-walking the tree
             pool_kw = (dict(n_pages=self.n_pages, page_size=page_size)
                        if paged else {})
             p_shard, self._pool_shard, repl = serve_shardings(
@@ -520,15 +520,16 @@ class ContinuousBatcher:
                 lambda: self.model.init_cache(1, fresh_len))
             self._fresh_shard = named_shardings(
                 cache_specs(fresh_shapes, mesh, 1, serve_pool=True), mesh)
+            from repro.kernels.ops import mesh_scoped
             self._prefill = jax.jit(
-                prefill,
+                mesh_scoped(prefill, mesh),
                 in_shardings=(p_shard, self._fresh_shard, repl, repl, repl),
                 out_shardings=(repl, self._fresh_shard))
             # the draft tree has its own pytree structure (PackedLinear
             # planes), so the target-tree in_shardings must not be prefix-
             # broadcast onto it — jit the draft prefill with its own specs
             self._d_prefill = (jax.jit(
-                prefill,
+                mesh_scoped(prefill, mesh),
                 in_shardings=(pd_shard, self._fresh_shard, repl, repl, repl),
                 out_shardings=(repl, self._fresh_shard))
                 if speculative else None)

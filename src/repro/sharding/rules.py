@@ -21,6 +21,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.quant.packing import SCALE_GROUP, row_shardable
 from repro.utils.tree import tree_map_with_path
 
 # params that stay replicated: norms, biases, scalar gates, small SSM tensors.
@@ -57,6 +58,24 @@ def _guard(spec: P, shape, mesh: Mesh) -> P:
 
 _PACKED_PLANE = re.compile(
     r"/(mask_bits|sign_bits|sign_res_bits|region_bits|scales)$")
+# FFN down-projection packed planes: row-parallel (K = d_ff over 'model')
+# like their dense counterparts, so the fused SwiGLU's gate/up column shard
+# feeds the down kernel's K shard with no resharding in between. Attention
+# wo planes stay column-parallel: dense() can't see which layer it serves,
+# so the matmul kernel is column-only and a K-shard there would force a
+# GSPMD reshard per call.
+_FFN_DOWN_PLANE = re.compile(
+    r"(ffn/wo|down_proj|ffn_down)(/w)?"
+    r"/(mask_bits|sign_bits|sign_res_bits|region_bits|scales)$")
+
+
+def _plane_k(path: str, shape: tuple[int, ...]) -> int:
+    """Recover the logical K of a packed plane from its row density."""
+    if path.endswith("/scales"):
+        return shape[-3] * SCALE_GROUP
+    if path.endswith("/region_bits"):
+        return shape[-2] * 4
+    return shape[-2] * 8
 
 
 def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
@@ -75,9 +94,18 @@ def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
         # packed sub-1-bit weight planes [..., K', N(, 5)]: serving is
         # weight-stationary — replicate over 'data'/'pod' (no per-token FSDP
         # gather), TP over N. Each device then reads only its packed bytes,
-        # which is the paper's memory-roofline win.
+        # which is the paper's memory-roofline win. FFN down planes shard K
+        # (= d_ff) instead when *every* plane's K axis slices evenly —
+        # ``row_shardable``, the same predicate ``kernels.ops`` uses to pick
+        # the shard_map'd fused-SwiGLU path, so spec and dispatch agree.
         tail = 1 if path.endswith("/scales") else 0
         ndims = len(shape)
+        tp = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+        if (tp > 1 and _FFN_DOWN_PLANE.search(path)
+                and row_shardable(_plane_k(path, shape), tp)):
+            spec = [None] * ndims
+            spec[ndims - 2 - tail] = "model"
+            return P(*spec)
         spec = [None] * ndims
         spec[ndims - 1 - tail] = "model"
         return _guard(P(*spec), shape, mesh)

@@ -1,11 +1,19 @@
 """Tensor-parallel sharded serving: bit-exact tokens vs the unsharded path.
 
-Acceptance matrix (ISSUE 4): on a forced multi-device host mesh, serve at
-tp in {2, 4} across {static, continuous, paged} x {GQA, MLA} x {dense,
-packed} and assert the emitted tokens equal the single-device path's at
-temperature 0. Plus: packed planes and KV pools are *actually* sharded
-(each device holds only its slice), and the Pallas kernels are asserted
-unreachable under a >1-device mesh.
+Acceptance matrix (ISSUE 4, kernel path ISSUE 9): on a forced multi-device
+host mesh, serve at tp in {2, 4} across {static, continuous, paged} x
+{GQA, MLA} x {dense, packed} and assert the emitted tokens equal the
+single-device path's at temperature 0. Under the mesh, packed matmuls and
+the fused SwiGLU auto-dispatch to the **shard_map'd Pallas kernels**
+(interpret-mode on CPU — the same dispatch TPU takes), so these rows
+exercise per-device kernel slices, not just GSPMD. Plus: packed planes and
+KV pools are *actually* sharded (each device holds only its slice), the
+paged int8-KV pool drives the shard_map'd ``paged_attn`` kernel, and the
+dispatch scope provably restores itself (no sticky flag).
+
+tp=2 vs tp=4 on the 256-wide d_ff also split the dispatch: d_ff/128 = 2
+scale groups row-shard at tp=2 (fused kernel) but not at tp=4 (jnp
+fallback), so both sides of the ``row_shardable`` predicate are covered.
 
 These tests need >= 4 visible devices; the per-push tier-1 lane (one CPU
 device) skips them and the dedicated CI job runs them under
@@ -49,17 +57,16 @@ PAGE_SIZE = 4
 def arch(request):
     """(name, model, dense_params, packed_params) — PTQ'd once per arch.
 
-    Pins the packed dispatch to the GSPMD jnp path before the *unsharded*
-    baselines trace: on a multi-device TPU host they would otherwise take
-    the Pallas kernels (close to jnp, not bit-equal) and the matrix would
-    compare kernel implementations instead of sharded-vs-unsharded.
+    No dispatch pinning: auto-dispatch is mesh-scoped now, so the unsharded
+    baselines trace outside any serve mesh (jnp on CPU, single-device
+    Pallas on TPU) and the sharded runs trace under it (shard_map'd Pallas)
+    — exactly what each path serves in production. Equality is asserted on
+    emitted *tokens* at temperature 0, which absorbs the row-parallel
+    psum's float reassociation.
     """
     from repro.core.pipeline import pack_model_params, quantize_model
     from repro.core.stbllm import STBConfig
     from repro.data import calibration_batch
-    from repro.kernels.ops import set_sharded_serving
-
-    set_sharded_serving(True)
 
     cfg = GQA_CFG if request.param == "gqa" else MLA_CFG
     model = build_model(cfg, dtype=jnp.float32, remat=False)
@@ -256,35 +263,93 @@ def test_kv_pool_sharded_over_heads(arch):
 
 
 @needs_mesh
-def test_pallas_asserted_unreachable_under_mesh(arch):
-    """Once a >1-device mesh is serving, an explicit impl='pallas' request
-    must fail loudly instead of indexing global plane shapes on shards."""
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["continuous", "paged"])
+def test_int8_kv_sharded_matches_unsharded(arch, paged):
+    """int8-quantized KV pools under the mesh: the paged row drives the
+    shard_map'd ``paged_attn`` kernel over each device's local kv-head
+    pages (kh=4 divides tp=2), the dense-pool row the GSPMD dequantize
+    path — both token-exact with the unsharded int8 run."""
+    import dataclasses
+
+    name, model, dense_params, _ = arch
+    qmodel = dataclasses.replace(model, kv_quant=True)
+    prompts = _prompts(model.cfg.vocab, seed=3)
+    want = _continuous_tokens(qmodel, dense_params, prompts, paged=paged)
+    mesh = make_host_mesh(model=2)
+    got = _continuous_tokens(qmodel, dense_params, prompts, mesh=mesh,
+                             paged=paged)
+    assert set(got) == set(want)
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"{name}/int8-kv/{'paged' if paged else 'dense-pool'} "
+                    f"tp=2 request {rid}")
+
+
+# ------------------------------------------------- mesh-scoped dispatch
+@needs_mesh
+def test_pallas_dispatch_works_under_mesh(arch):
+    """The PR-4 'impl=pallas is unreachable under a mesh' guard is gone:
+    under a serve mesh both auto-dispatch and an explicit impl='pallas'
+    lower the shard_map'd kernel on per-device plane slices, matching the
+    GSPMD jnp path."""
     name, model, _, packed_params = arch
     if name == "mla":
-        pytest.skip("one arch suffices; the guard is global")
-    from repro.kernels.ops import (
-        set_sharded_serving,
-        sharded_serving,
-        stb_matmul,
-    )
+        pytest.skip("one arch suffices; dispatch is layer-agnostic")
+    from repro.kernels.ops import serving_mesh, stb_matmul
     from repro.quant.packing import PackedLinear
 
-    # the arch fixture pre-set the flag; clear it so this test proves the
-    # mesh-aware construction path flips it back on
-    set_sharded_serving(False)
-    ContinuousBatcher(
-        model, packed_params,
-        ServeConfig.build(
-            n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
-            mesh=make_host_mesh(model=2)))
-    assert sharded_serving(), "batcher did not flip the sharded-serve guard"
     stacked = next(p for p in jax.tree.leaves(
         packed_params, is_leaf=lambda x: isinstance(x, PackedLinear))
         if isinstance(p, PackedLinear))
     plane = jax.tree.map(lambda a: a[0], stacked)     # group 0: 2-D planes
-    x = jnp.ones((1, plane.k), jnp.float32)
-    with pytest.raises(AssertionError, match="single-device"):
-        stb_matmul(x, plane, impl="pallas")
-    # auto-dispatch under the guard picks the GSPMD jnp path and still works
-    y = stb_matmul(x, plane)
-    assert y.shape == (1, plane.n)
+    x = jnp.ones((2, plane.k), jnp.float32)
+    want = np.asarray(stb_matmul(x, plane, impl="jnp"))
+    mesh = make_host_mesh(model=2)
+    with serving_mesh(mesh):
+        got_auto = np.asarray(stb_matmul(x, plane))
+        got_explicit = np.asarray(stb_matmul(x, plane, impl="pallas"))
+    np.testing.assert_allclose(got_auto, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_explicit, want, rtol=2e-5, atol=2e-5)
+
+
+@needs_mesh
+def test_dispatch_scope_restores(arch):
+    """The sticky-flag footgun is structurally gone: building sharded
+    pipelines/batchers leaves no global dispatch state behind, and nested
+    scopes restore their predecessors (even on error)."""
+    name, model, dense_params, packed_params = arch
+    if name == "mla":
+        pytest.skip("one arch suffices; the scope is global")
+    from repro.kernels.ops import serve_mesh, serving_mesh
+    from repro.launch.generate import serve_shardings
+
+    assert serve_mesh() is None
+    mesh = make_host_mesh(model=2)
+    # serve_shardings is a pure layout computation now
+    serve_shardings(model, mesh, dense_params, 2, PROMPT_LEN + GEN_LEN)
+    assert serve_mesh() is None, "serve_shardings leaked dispatch state"
+    # a full sharded batcher build + run leaves no scope behind
+    prompts = _prompts(model.cfg.vocab, n=2, seed=4)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=2)
+            for i in range(2)]
+    ContinuousBatcher(
+        model, packed_params,
+        ServeConfig.build(
+            n_slots=2, prompt_len=PROMPT_LEN, max_new_tokens=GEN_LEN,
+            chunk_steps=2, mesh=mesh)).run(reqs, wait_for_arrivals=False)
+    assert serve_mesh() is None, "sharded serve leaked dispatch state"
+    # nesting + exception safety
+    with serving_mesh(mesh):
+        assert serve_mesh() is mesh
+        with serving_mesh(None):
+            assert serve_mesh() is None
+        assert serve_mesh() is mesh
+        try:
+            with serving_mesh(make_host_mesh(model=4)):
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        assert serve_mesh() is mesh
+    assert serve_mesh() is None

@@ -62,6 +62,52 @@ def test_packed_plane_nondivisible_n_falls_back():
     assert spec == P(None, None, None)
 
 
+# ----------------------------------------------------- packed FFN-down rows
+def test_ffn_down_planes_row_shard_when_coherent():
+    """FFN down-projection planes [..., K', N] put 'model' on the K axis
+    (row-parallel, matching the fused SwiGLU's psum layout) when every
+    plane's K slices evenly — K/128 = 4 scale groups split 2 ways here."""
+    for plane, shape, want in (
+        ("mask_bits", (2, 64, 128), P(None, "model", None)),     # K=512
+        ("sign_bits", (2, 64, 128), P(None, "model", None)),
+        ("region_bits", (2, 128, 128), P(None, "model", None)),
+        ("scales", (2, 4, 128, 5), P(None, "model", None, None)),
+    ):
+        spec = param_spec_for(f"blocks/0/ffn/wo/w/{plane}", shape, MESH)
+        assert spec == want, plane
+
+
+def test_ffn_down_planes_fall_back_to_column_when_not_row_shardable():
+    """K=256 has 2 scale groups — not divisible at model=8, so *every* plane
+    falls back to the column spec together (coherence: a per-plane check
+    could shard the bit planes while replicating the scales)."""
+    mesh = StubMesh(data=1, model=8)
+    spec = param_spec_for("blocks/0/ffn/wo/w/mask_bits", (2, 32, 128), mesh)
+    assert spec == P(None, None, "model")
+    spec = param_spec_for("blocks/0/ffn/wo/w/scales", (2, 2, 128, 5), mesh)
+    assert spec == P(None, None, "model", None)
+
+
+def test_attention_wo_planes_stay_column_parallel():
+    """Only FFN down planes row-shard; the attention out-projection's planes
+    keep TP over N (the matmul kernel path is column-parallel)."""
+    spec = param_spec_for("blocks/0/mixer/wo/w/mask_bits", (2, 64, 128), MESH)
+    assert spec == P(None, None, "model")
+
+
+def test_rules_and_dispatch_share_row_predicate():
+    """The spec assignment and the kernel dispatch must agree on when the
+    down planes row-shard — both call packing.row_shardable."""
+    from repro.quant.packing import row_shardable
+
+    for k, tp in ((512, 2), (512, 4), (256, 2), (256, 4), (384, 2)):
+        mesh = StubMesh(data=1, model=tp)
+        spec = param_spec_for("blocks/0/ffn/wo/w/mask_bits",
+                              (2, k // 8, 128), mesh)
+        rules_row = spec == P(None, "model", None)
+        assert rules_row == row_shardable(k, tp), (k, tp)
+
+
 # ------------------------------------------------------------------- _guard
 def test_guard_drops_only_nondivisible_axes():
     mesh = StubMesh(data=4, model=2)

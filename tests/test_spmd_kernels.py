@@ -1,0 +1,244 @@
+"""shard_map'd Pallas kernel equivalence: per-device slices == single device.
+
+ISSUE 9's per-kernel suite. Each packed kernel runs twice — once on the full
+operands on one device, once shard_map'd over a forced-host mesh so every
+device sees only its local mask/sign/region/scale slice (or kv-head pages)
+— and the outputs are compared against each other and against the jnp GSPMD
+oracle:
+
+  * ``stb_gemv`` / ``stb_gemm`` column-parallel (planes N-sliced): no
+    collective, every output column's K loop is untouched, so sharded vs
+    single-device is **bitwise** equal;
+  * fused packed SwiGLU (gate/up column-sliced over d_ff, down row-sliced
+    + one psum): the psum reassociates float adds, so equality is allclose;
+  * ``paged_attn`` over local kv-head pages: heads never mix — bitwise.
+
+Dispatch goes through the *public* ``stb_matmul``/``stb_swiglu`` under
+``serving_mesh`` where possible, so the suite also pins the mesh-scoped
+auto-dispatch (the exact path sharded serving traces). Runs in interpret
+mode on CPU — the same lowering the CI mesh job and a TPU mesh share.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (
+    GEMM_BLOCKS,
+    STB_BLOCK_TABLE,
+    force_impl,
+    select_stb_blocks,
+    serving_mesh,
+    stb_matmul,
+    stb_swiglu,
+)
+from repro.quant.packing import (
+    NUM_SCALES,
+    SCALE_GROUP,
+    PackedLinear,
+    row_shardable,
+    unpack_to_dense,
+)
+
+N_DEV = len(jax.devices())
+needs_mesh = pytest.mark.skipif(
+    N_DEV < 4 or N_DEV % 4,
+    reason="needs a multiple of 4 host devices; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mesh(tp):
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(model=tp)
+
+
+def _rand_packed(rng, k, n):
+    return PackedLinear(
+        mask_bits=jnp.asarray(rng.integers(0, 256, (k // 8, n),
+                                           dtype=np.uint8)),
+        sign_bits=jnp.asarray(rng.integers(0, 256, (k // 8, n),
+                                           dtype=np.uint8)),
+        sign_res_bits=jnp.asarray(rng.integers(0, 256, (k // 8, n),
+                                               dtype=np.uint8)),
+        region_bits=jnp.asarray(rng.integers(0, 256, (k // 4, n),
+                                             dtype=np.uint8)),
+        scales=jnp.asarray(rng.standard_normal(
+            (k // SCALE_GROUP, n, NUM_SCALES)).astype(np.float32) * 0.05),
+        k=k, n=n, n_m=(4, 8))
+
+
+# ------------------------------------------------------------- matmuls
+@needs_mesh
+@pytest.mark.parametrize("m", [4, 200], ids=["gemv", "gemm"])
+@pytest.mark.parametrize("tp", [2, 4])
+def test_stb_matmul_spmd_bitwise_vs_single_device(m, tp):
+    rng = np.random.default_rng(0)
+    k, n = 256, 512
+    p = _rand_packed(rng, k, n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    from repro.kernels.stb_gemm import stb_gemm_packed, stb_gemv_packed
+    variant, blocks = select_stb_blocks(m)
+    if variant == "gemv":
+        blocks.pop("bm", None)
+        single = stb_gemv_packed(x, p, interpret=True, **blocks)
+    else:
+        single = stb_gemm_packed(x, p, interpret=True, **blocks)
+    with serving_mesh(_mesh(tp)):
+        sharded = stb_matmul(x, p)                    # auto -> shard_map'd
+    # column-parallel: every device computes its columns with the identical
+    # K loop — bitwise, not just allclose
+    np.testing.assert_array_equal(np.asarray(sharded), np.asarray(single))
+    oracle = x @ unpack_to_dense(p, jnp.float32)
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+@needs_mesh
+def test_stb_matmul_spmd_indivisible_n_falls_back():
+    """N % tp != 0: the sharding rules replicate such planes, and dispatch
+    takes the jnp path instead of an uneven shard_map — same numbers."""
+    rng = np.random.default_rng(1)
+    p = _rand_packed(rng, 256, 24)         # 24 columns don't split 4 ways
+    x = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+    want = np.asarray(stb_matmul(x, p, impl="jnp"))
+    with serving_mesh(_mesh(4)):
+        got = np.asarray(stb_matmul(x, p))
+    np.testing.assert_array_equal(got, want)
+
+
+@needs_mesh
+def test_wk_rope_named_layer_stays_unsharded():
+    """Layers the sharding rules replicate (wk_rope: rope splits its output
+    dim) must not be column-sharded by the kernel either — the name= thread
+    from modules.dense routes them to the jnp path under a mesh."""
+    rng = np.random.default_rng(2)
+    p = _rand_packed(rng, 128, 16)                    # qk_rope_dim-shaped
+    x = jnp.asarray(rng.standard_normal((4, 128)).astype(np.float32))
+    want = np.asarray(stb_matmul(x, p, impl="jnp"))
+    with serving_mesh(_mesh(tp=2)):
+        got = np.asarray(stb_matmul(x, p, name="wk_rope"))
+    np.testing.assert_array_equal(got, want)
+
+
+@needs_mesh
+def test_force_impl_pins_auto_dispatch_under_mesh():
+    """force_impl('jnp') (the benches' A/B pin) overrides the mesh's kernel
+    dispatch and restores on exit."""
+    from repro.kernels.ops import auto_impl
+    with serving_mesh(_mesh(tp=2)):
+        assert auto_impl() == "pallas"
+        with force_impl("jnp"):
+            assert auto_impl() == "jnp"
+        assert auto_impl() == "pallas"
+    assert auto_impl() in ("jnp", "pallas")           # platform default
+
+
+# ---------------------------------------------------------- fused SwiGLU
+@needs_mesh
+def test_fused_swiglu_spmd_matches_single_device_and_oracle():
+    rng = np.random.default_rng(3)
+    d, d_ff, m, tp = 256, 512, 4, 4
+    assert row_shardable(d_ff, tp)
+    pg, pu = _rand_packed(rng, d, d_ff), _rand_packed(rng, d, d_ff)
+    pd = _rand_packed(rng, d_ff, d)
+    x = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    from repro.kernels.fused_ffn import fused_swiglu_packed
+    single = fused_swiglu_packed(x, pg, pu, pd, interpret=True)
+    with serving_mesh(_mesh(tp)):
+        sharded = stb_swiglu(x, pg, pu, pd)           # auto -> spmd kernel
+    # the down psum reassociates the d_ff reduction across devices: allclose
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(single),
+                               rtol=2e-4, atol=2e-4)
+    oracle = stb_swiglu(x, pg, pu, pd, impl="jnp")
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(oracle),
+                               rtol=2e-4, atol=2e-4)
+
+
+@needs_mesh
+def test_fused_swiglu_not_row_shardable_falls_back():
+    """d_ff = 256 has 2 scale groups: row_shardable at tp=2, NOT at tp=4 —
+    the tp=4 dispatch must take the jnp path (matching the rules' column
+    fallback), not hand the kernel a ragged K shard."""
+    rng = np.random.default_rng(4)
+    d, d_ff = 256, 256
+    assert row_shardable(d_ff, 2) and not row_shardable(d_ff, 4)
+    pg, pu = _rand_packed(rng, d, d_ff), _rand_packed(rng, d, d_ff)
+    pd = _rand_packed(rng, d_ff, d)
+    x = jnp.asarray(rng.standard_normal((4, d)).astype(np.float32))
+    want = np.asarray(stb_swiglu(x, pg, pu, pd, impl="jnp"))
+    for tp, tol in ((2, 2e-4), (4, 0.0)):
+        with serving_mesh(_mesh(tp)):
+            got = np.asarray(stb_swiglu(x, pg, pu, pd))
+        if tol:
+            np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+        else:                         # jnp fallback: identical computation
+            np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ paged attn
+@needs_mesh
+def test_paged_attn_spmd_bitwise_vs_single_device():
+    from repro.kernels.paged_attn import (
+        paged_decode_attention,
+        paged_decode_attention_ref,
+        paged_decode_attention_spmd,
+    )
+
+    rng = np.random.default_rng(5)
+    b, kh, g, d = 2, 4, 2, 32
+    npages, ps, nb = 9, 4, 4
+    q = jnp.asarray(rng.standard_normal((b, kh, g, d)).astype(np.float32))
+    kp = jnp.asarray(rng.integers(-127, 127, (npages, ps, kh, d),
+                                  dtype=np.int8))
+    vp = jnp.asarray(rng.integers(-127, 127, (npages, ps, kh, d),
+                                  dtype=np.int8))
+    ks = jnp.asarray(
+        rng.standard_normal((npages, ps, kh)).astype(np.float32) * 0.01)
+    vs = jnp.asarray(
+        rng.standard_normal((npages, ps, kh)).astype(np.float32) * 0.01)
+    tables = jnp.asarray(np.stack([[1, 3, 5, 0], [2, 4, 0, 0]]), jnp.int32)
+    lens = jnp.asarray([11, 6], jnp.int32)
+
+    single = paged_decode_attention(q, kp, ks, vp, vs, tables, lens,
+                                    interpret=True)
+    for tp in (2, 4):
+        sharded = paged_decode_attention_spmd(
+            q, kp, ks, vp, vs, tables, lens, _mesh(tp), interpret=True)
+        # heads never mix: per-device kernels reproduce the single-device
+        # output bitwise
+        np.testing.assert_array_equal(np.asarray(sharded),
+                                      np.asarray(single))
+    ref = paged_decode_attention_ref(q, kp, ks, vp, vs, tables, lens)
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------ block-table lookup
+def test_select_stb_blocks_clamps_to_local_shapes():
+    """ISSUE 9 satellite: at high TP on small configs the table's widest bn
+    exceeds the local (post-slice) N — the lookup falls forward to narrower
+    rows and finally clamps instead of asserting."""
+    # widest row wants bn=512; a tp=8 shard of n=1024 leaves 128 local cols
+    variant, kw = select_stb_blocks(4, n=128, k=256)
+    assert variant == "gemv" and kw["bn"] <= 128
+    # even smaller than the narrowest row: clamp, never raise
+    variant, kw = select_stb_blocks(4, n=8, k=64)
+    assert variant == "gemv" and kw["bn"] <= 8 and kw["bk"] <= 64
+    # gemm side clamps too
+    variant, kw = select_stb_blocks(400, n=64, k=32)
+    assert variant == "gemm" and kw["bn"] <= 64 and kw["bk"] <= 32
+    # without local dims the table is unchanged (single-device behavior)
+    variant, kw = select_stb_blocks(4)
+    assert (variant, kw) == ("gemv", dict(STB_BLOCK_TABLE[0][1]))
+    variant, kw = select_stb_blocks(4096)
+    assert (variant, kw) == ("gemm", GEMM_BLOCKS)
+
+
+def test_row_shardable_predicate():
+    """The single coherence predicate shared by sharding rules and kernel
+    dispatch: K must split into whole scale groups per shard."""
+    assert row_shardable(512, 2) and row_shardable(512, 4)
+    assert row_shardable(256, 2) and not row_shardable(256, 4)
+    assert not row_shardable(384, 2)      # 3 groups don't split 2 ways
+    assert not row_shardable(100, 2)      # not even group-aligned
+    assert row_shardable(128, 1)
