@@ -32,6 +32,10 @@ import sys
 THROUGHPUT_KEYS = ("tok_s", "throughput_tok_s", "goodput_tok_s")
 # higher-is-worse leaves: gated against RISING past the baseline instead
 LATENCY_KEYS = ("p95_ttft_s",)
+# model-quality leaves (BENCH_quality.json): lower-is-better like latency,
+# but unitless — a recipe's perplexity drifting up past the threshold means
+# a quantization-quality regression, not a perf one
+QUALITY_KEYS = ("ppl", "loss")
 
 
 def _walk(tree, path=()):
@@ -54,6 +58,7 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list, list]:
     for path, value in base_leaves.items():
         gated = path and (path[-1] in THROUGHPUT_KEYS
                           or path[-1] in LATENCY_KEYS
+                          or path[-1] in QUALITY_KEYS
                           or ("match" in path[-1] and isinstance(value, bool)))
         if gated and path not in fresh_leaves:
             failures.append(
@@ -86,6 +91,19 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list, list]:
             else:
                 notes.append(
                     f"OK   {name}: {value:.3f}s vs {base:.3f}s "
+                    f"({(value / base - 1) * 100:+.0f}%)")
+        elif path and path[-1] in QUALITY_KEYS:
+            base = base_leaves.get(path)
+            if base is None or base == 0:
+                notes.append(f"NEW  {name}: {value:.4f} (no usable baseline)")
+            elif value > base * (1.0 + threshold):
+                failures.append(
+                    f"QUAL {name}: {value:.4f} vs baseline "
+                    f"{base:.4f} (+{(value / base - 1) * 100:.0f}%, "
+                    f"threshold {threshold * 100:.0f}%)")
+            else:
+                notes.append(
+                    f"OK   {name}: {value:.4f} vs {base:.4f} "
                     f"({(value / base - 1) * 100:+.0f}%)")
         elif path and "match" in path[-1] and isinstance(value, bool):
             if value:

@@ -19,9 +19,9 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig
-from repro.data import DataLoader, LoaderConfig
+from repro.core.eval import EvalConfig, evaluate_lm
+from repro.data import DataLoader, LoaderConfig, calibration_batch
 from repro.launch.steps import make_train_step
-from repro.models.loss import lm_loss, perplexity
 from repro.models.model import Model, build_model
 from repro.optim import AdamWConfig, adamw_init
 
@@ -67,45 +67,35 @@ def get_bench_model(cfg: ModelConfig = BENCH_CFG, steps: int = TRAIN_STEPS,
     return model, params
 
 
+def bench_eval_cfg(split: str = "valid", n_batches: int = 4,
+                   batch: int = 8) -> EvalConfig:
+    """The bench-substrate eval protocol as a core.eval config."""
+    return EvalConfig(split=split, n_batches=n_batches, batch=batch,
+                      seq_len=SEQ, **LOADER_KW)
+
+
+def eval_lm(model: Model, params, split: str = "valid", n_batches: int = 4,
+            batch: int = 8) -> dict:
+    """PPL + top-1 via the shared core.eval harness (one code path with CI)."""
+    return evaluate_lm(model, params, bench_eval_cfg(split, n_batches, batch))
+
+
 def eval_ppl(model: Model, params, split: str = "valid", n_batches: int = 4,
              batch: int = 8) -> float:
     """Perplexity on a held-out split (the Wikitext2 protocol stand-in)."""
-    loader = DataLoader(LoaderConfig(
-        global_batch=batch, seq_len=SEQ, vocab=model.cfg.vocab, split=split,
-        **LOADER_KW))
-    fwd = jax.jit(lambda p, t: model.forward(p, t)[0])
-    tot, cnt = 0.0, 0
-    for _ in range(n_batches):
-        b = next(loader)
-        logits = fwd(params, jnp.asarray(b["tokens"]))
-        tot += float(lm_loss(logits, jnp.asarray(b["labels"]),
-                             model.cfg.vocab, z_loss=0.0))
-        cnt += 1
-    return perplexity(tot / cnt)
+    return eval_lm(model, params, split, n_batches, batch)["ppl"]
 
 
 def eval_top1(model: Model, params, split: str = "valid",
               n_batches: int = 2) -> float:
     """Next-token top-1 accuracy — the zero-shot-accuracy stand-in."""
-    loader = DataLoader(LoaderConfig(
-        global_batch=8, seq_len=SEQ, vocab=model.cfg.vocab, split=split,
-        **LOADER_KW))
-    fwd = jax.jit(lambda p, t: model.forward(p, t)[0])
-    hits, tot = 0, 0
-    for _ in range(n_batches):
-        b = next(loader)
-        logits = fwd(params, jnp.asarray(b["tokens"]))
-        pred = np.asarray(jnp.argmax(logits[..., :model.cfg.vocab], -1))
-        hits += int((pred == b["labels"]).sum())
-        tot += pred.size
-    return hits / tot
+    return eval_lm(model, params, split, n_batches, batch=8)["top1"]
 
 
 def calib_tokens(n_samples: int = 8, split_seed: int = 1234) -> np.ndarray:
-    from repro.data import SyntheticCorpus, ZipfMarkovConfig
-    corpus = SyntheticCorpus(ZipfMarkovConfig(
-        vocab=BENCH_CFG.vocab, seed=split_seed, doc_len=SEQ, **LOADER_KW))
-    return np.stack([corpus.document(i, "calib") for i in range(n_samples)])
+    """Calibration batch on the bench corpus, via the shared data path."""
+    return calibration_batch(BENCH_CFG.vocab, n_samples=n_samples,
+                             seq_len=SEQ, seed=split_seed, **LOADER_KW)
 
 
 def timeit(fn, *args, repeat: int = 5, warmup: int = 2) -> float:

@@ -1,0 +1,114 @@
+"""Quality gate: PPL + next-token accuracy for every registered recipe.
+
+Runs each compression recipe from ``repro.core.recipes`` over the trained
+bench substrate (the same 8L d128 LM every paper table uses), scores it with
+the shared ``core.eval`` harness on the 'valid' split, and writes
+``BENCH_quality.json`` at the repo root:
+
+  recipes.<name>.ppl / top1 / loss      quality of the dequantized model
+  recipes.<name>.avg_bits               MEASURED param-weighted average bits
+  recipes.<name>.bits_budget            the recipe's declared budget
+  recipes.<name>.bits_within_budget_match   measured <= declared
+  gates.fp16_floor_match                fp16 PPL <= every quantized PPL
+  gates.stb_beats_rtn_at_lower_bits_match   STBLLM PPL <= 1-bit RTN PPL at
+                                        equal-or-lower average bits
+
+``ppl`` leaves are gated lower-is-better by benchmarks.check_regression
+(rising past the threshold fails CI); the ``*_match`` bools are strict.
+Everything in the json is deterministic for a fixed ``--seed``: same seed
+⇒ byte-identical metrics (no wall-times in the file).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import (
+    BENCH_CFG, ROOT, Row, bench_eval_cfg, calib_tokens, get_bench_model)
+from repro.core import STBConfig
+from repro.core.eval import evaluate_lm
+from repro.core.pipeline import quantize_model
+from repro.core.recipes import registered_recipes
+
+EPS = 1e-6
+
+
+def quality_cells(model, params, recipes, seed: int = 0,
+                  rows: Row | None = None, ecfg=None, calib=None) -> dict:
+    """One {ppl, top1, avg_bits, ...} cell per recipe — the json's metrics
+    block. Factored out so the determinism test can run it on a tiny LM
+    (pass its own ``ecfg``/``calib``; the bench defaults are the substrate's).
+    """
+    if calib is None:
+        # 32 sequences (the paper's 128-sample C4 protocol scaled down, but
+        # well past the point the Hessian estimates stabilize on this model)
+        calib = calib_tokens(n_samples=32, split_seed=1234 + seed)
+    if ecfg is None:
+        # 16 batches = 16k scored positions: enough that the fp16-floor
+        # ordering is signal, not eval-sample noise (at 4 batches a 1-bit
+        # recipe can "beat" fp16 by ~0.01 ppl)
+        ecfg = bench_eval_cfg(n_batches=16)
+    # The gate's STBLLM operating point is 6:8 — 0.82 measured avg bits,
+    # still sub-1-bit, and clearly ahead of 1-bit RTN on this substrate.
+    # The aggressive 4:8 / 0.55-bit paper-headline point lives in Table 2
+    # and the nightly stbllm-mixed row; recipes with a pinned sparsify
+    # (billm-nm, stbllm-mixed) override this allocation target per chain.
+    base_cfg = STBConfig(n=6, m=8, beta=min(128, model.cfg.d_model))
+    cells = {}
+    for r in recipes:
+        t0 = time.time()
+        res = quantize_model(model, params, calib, base_cfg, recipe=r)
+        m = evaluate_lm(model, res.params, ecfg)
+        cells[r.name] = {
+            "ppl": round(m["ppl"], 6),
+            "top1": round(m["top1"], 6),
+            "loss": round(m["loss"], 6),
+            "avg_bits": round(res.avg_bits, 6),
+            "bits_budget": r.bits_budget,
+            "bits_within_budget_match": bool(res.avg_bits <= r.bits_budget + EPS),
+        }
+        if rows is not None:
+            rows.add(f"quality/{r.name}", (time.time() - t0) * 1e6,
+                     f"ppl={m['ppl']:.2f} top1={m['top1']:.3f} "
+                     f"bits={res.avg_bits:.3f}/{r.bits_budget}")
+    return cells
+
+
+def quality_gates(cells: dict) -> dict:
+    """The cross-recipe orderings the paper's story rests on."""
+    gates = {}
+    if "fp16" in cells:
+        fp = cells["fp16"]["ppl"]
+        gates["fp16_floor_match"] = bool(all(
+            fp <= c["ppl"] + EPS for n, c in cells.items() if n != "fp16"))
+    if "stbllm" in cells and "rtn" in cells:
+        stb, rtn = cells["stbllm"], cells["rtn"]
+        gates["stb_beats_rtn_at_lower_bits_match"] = bool(
+            stb["ppl"] <= rtn["ppl"] + EPS
+            and stb["avg_bits"] <= rtn["avg_bits"] + EPS)
+    return gates
+
+
+def quality_bench(rows: Row, seed: int = 0, tier: str = "default") -> dict:
+    model, params = get_bench_model()
+    recipes = registered_recipes(tier)
+    cells = quality_cells(model, params, recipes, seed=seed, rows=rows)
+    gates = quality_gates(cells)
+    for k, v in gates.items():
+        rows.add(f"quality/gates/{k}", 0, str(v))
+
+    report = {
+        "config": {
+            "arch": BENCH_CFG.arch_id, "seed": seed, "tier": tier,
+            "split": "valid", "recipes": [r.name for r in recipes],
+        },
+        "recipes": cells,
+        "gates": gates,
+    }
+    out = os.path.join(ROOT, "BENCH_quality.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    rows.add("quality/report", 0, f"wrote {os.path.relpath(out, ROOT)}")
+    return report

@@ -9,6 +9,7 @@
   PYTHONPATH=src python -m benchmarks.run --only spec     # BENCH_spec.json
   PYTHONPATH=src python -m benchmarks.run --only preempt  # BENCH_preempt.json
   PYTHONPATH=src python -m benchmarks.run --only prefix   # BENCH_prefix.json
+  PYTHONPATH=src python -m benchmarks.run --only quality  # BENCH_quality.json
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m benchmarks.run --only sharded  # BENCH_sharded.json
 
@@ -40,7 +41,13 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table4 table5 table6 table8 "
                          "table9 table10 table11 table13 fig4 roofline "
-                         "decode serving paged sharded spec preempt prefix")
+                         "decode serving paged sharded spec preempt prefix "
+                         "quality")
+    ap.add_argument("--quality-tier", default="default",
+                    choices=("default", "full"),
+                    help="recipe set for --only quality: 'default' is the "
+                         "per-push bench-gate set, 'full' adds the "
+                         "nightly-only recipes (BENCH_quality.json)")
     ap.add_argument("--seed", type=int, default=0,
                     help="workload seed for the decode/serving/paged/sharded "
                          "benches (explicit so the CI bench-gate replays the "
@@ -104,6 +111,10 @@ def main(argv=None) -> int:
     if want("prefix"):
         from benchmarks import prefix_bench
         prefix_bench.prefix_bench(rows, seed=args.seed)
+    if want("quality"):
+        from benchmarks import quality_bench
+        quality_bench.quality_bench(rows, seed=args.seed,
+                                    tier=args.quality_tier)
     return 0
 
 

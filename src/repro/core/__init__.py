@@ -2,10 +2,16 @@
 
 Public API:
   stbllm_quantize_layer  — structured sub-1-bit binarization of one linear
-  quantize_model         — whole-model PTQ driver (core.pipeline)
+  quantize_model         — whole-model PTQ driver (core.pipeline); with
+                           ``recipe=`` it executes a declarative stage chain
   STBConfig              — knobs (N:M, block size, metric, trisection)
   adaptive_allocation    — layer-wise N:M assignment
-  baselines              — RTN / GPTQ / PB-LLM / BiLLM(-N:M)
+  baselines              — RTN / GPTQ / PB-LLM / BiLLM(-N:M) / BTC
+  Recipe / Stage / register_recipe / get_recipe / registered_recipes
+                         — the composable calibrate → sparsify → binarize →
+                           pack registry (core.recipes)
+  EvalConfig / evaluate_lm — the PPL + next-token-accuracy harness
+                           (core.eval) behind BENCH_quality.json
 """
 from repro.core.stbllm import (
     STBConfig,
@@ -20,3 +26,12 @@ from repro.core.nm import nm_mask, check_nm, mask_density
 from repro.core.binary import binarize, residual_binarize, sign_pm1
 from repro.core.trisection import trisection_search, trisection_binarize
 from repro.core.flip import flip_signs
+from repro.core.recipes import (
+    Recipe,
+    Stage,
+    layer_family,
+    register_recipe,
+    get_recipe,
+    registered_recipes,
+)
+from repro.core.eval import EvalConfig, evaluate_lm

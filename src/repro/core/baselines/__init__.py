@@ -1,38 +1,45 @@
 from repro.core.baselines.rtn import rtn_quantize_layer
 from repro.core.baselines.gptq import gptq_quantize_layer
 from repro.core.baselines.pbllm import pbllm_quantize_layer
-from repro.core.baselines.billm import billm_quantize_layer
+from repro.core.baselines.billm import BaselineResult, billm_quantize_layer
+from repro.core.baselines.btc import btc_quantize_layer
 
 
 class _Deq:
     """Adapter so baselines plug into core.pipeline.quantize_model."""
 
-    def __init__(self, deq, avg_bits: float):
+    def __init__(self, deq, avg_bits: float, storage_bits: float | None = None,
+                 r_salient: float = 0.0):
         self.deq = deq
-        self.stats = {"avg_bits": avg_bits, "storage_bits": avg_bits,
-                      "r_salient": 0.0}
+        self.stats = {"avg_bits": avg_bits,
+                      "storage_bits": storage_bits
+                      if storage_bits is not None else avg_bits,
+                      "r_salient": r_salient}
 
 
 def baseline_quantizer(kind: str):
     """Returns quantizer(w, x, cfg, name) for quantize_model(quantizer=...).
 
-    kinds: rtn | gptq | pbllm | billm | billm-nm (uses cfg.n/cfg.m).
-    Average bits follow the paper's accounting: RTN/GPTQ 1.0; PB-LLM
-    0.1*8 + 0.9*1 = 1.7; BiLLM ~(1 + r_sal); BiLLM-N:M scaled by N/M.
+    kinds: rtn | gptq | pbllm | billm | billm-nm (uses cfg.n/cfg.m) | btc.
+    RTN/GPTQ average exactly 1.0 value bits. PB-LLM / BiLLM(-N:M) / BTC
+    report the *measured* accounting from their layer results (salient
+    fraction actually realized, codebook rate) — see each layer quantizer.
     """
     def q(w, x, cfg, name):
         if kind == "rtn":
-            return _Deq(rtn_quantize_layer(w, bits=1), 1.0)
+            return _Deq(rtn_quantize_layer(w, bits=1), 1.0,
+                        storage_bits=1.0 + 2.0 * 32.0 / cfg.beta)
         if kind == "gptq":
-            return _Deq(gptq_quantize_layer(w, x, bits=1, beta=cfg.beta), 1.0)
+            return _Deq(gptq_quantize_layer(w, x, bits=1, beta=cfg.beta), 1.0,
+                        storage_bits=1.0 + 2.0 * 32.0 / cfg.beta)
         if kind == "pbllm":
-            return _Deq(pbllm_quantize_layer(w, x, beta=cfg.beta), 1.7)
+            return pbllm_quantize_layer(w, x, beta=cfg.beta)
         if kind == "billm":
-            return _Deq(billm_quantize_layer(w, x, beta=cfg.beta), 1.09)
+            return billm_quantize_layer(w, x, beta=cfg.beta)
         if kind == "billm-nm":
-            return _Deq(
-                billm_quantize_layer(w, x, nm=(cfg.n, cfg.m), beta=cfg.beta),
-                1.09 * cfg.n / cfg.m)
+            return billm_quantize_layer(w, x, nm=(cfg.n, cfg.m), beta=cfg.beta)
+        if kind == "btc":
+            return btc_quantize_layer(w, x, scale_group=cfg.beta)
         raise ValueError(kind)
 
     return q

@@ -1,0 +1,144 @@
+"""BTC-LLM-style backend: learnable transformation + binary codebook VQ.
+
+The sub-1-bit mechanism is *codebook rate*, not structured sparsity: length-v
+weight vectors along the input dim are snapped to one of ``n_codes`` shared
+binary (+-1) codewords, so value bits per weight = log2(n_codes)/v (0.5 at
+the default 16 x 8). Two learnable pieces recover accuracy:
+
+  * a diagonal input transformation ``t`` (per input channel): W = diag(t) W',
+    updated in closed form against the calibration importance, so channels
+    with outlier energy are renormalized before vector quantization — the
+    "learnable transformation" half of BTC-LLM;
+  * Lloyd iterations over the codebook: importance-weighted assignment
+    (argmax of the weighted inner product), per-(row, scale-group) magnitude
+    alpha by weighted least squares, codeword refit as the sign of the
+    alpha-weighted assigned mass.
+
+Everything is deterministic (codebook init = the most frequent vector sign
+patterns; no RNG), so the recipe's BENCH_quality cell is byte-reproducible.
+When the layer is alignment-eligible the dequantized weights are *defined*
+as unpack(pack(planes)) — the packed serve path and the dense eval path then
+share bit-identical floats, which is what the serve --packed acceptance
+gate checks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.quant.codebook import (
+    CB_CODES, CB_VECTOR, codebook_packable, pack_codebook_layer,
+    unpack_codebook_to_dense)
+
+
+@dataclass
+class BTCQuantizedLayer:
+    """Planes are [out, in]-granular like ``core.stbllm.QuantizedLayer``."""
+    deq: np.ndarray                # [n, k] float32 dequantized weights
+    codes: np.ndarray              # [n, k/v] uint8 codeword indices
+    codebook: np.ndarray           # [n_codes, v] int8 +-1 codewords
+    scales: np.ndarray             # [n, k/sg] f32 alpha
+    t: np.ndarray                  # [k] f32 diagonal transformation
+    v: int
+    n_codes: int
+    scale_group: int
+    stats: dict = field(default_factory=dict)
+
+
+def _init_codebook(u: np.ndarray, n_codes: int, v: int) -> np.ndarray:
+    """Deterministic init: the n_codes most frequent vector sign patterns."""
+    patt = ((u >= 0).astype(np.int64) << np.arange(v)).sum(axis=-1)
+    counts = np.bincount(patt.reshape(-1), minlength=1 << v)
+    top = np.argsort(-counts, kind="stable")[:n_codes]
+    bits = (top[:, None] >> np.arange(v)[None, :]) & 1
+    return (2 * bits - 1).astype(np.float32)               # [n_codes, v]
+
+
+def btc_quantize_layer(
+    w: np.ndarray,
+    x: np.ndarray,
+    v: int = CB_VECTOR,
+    n_codes: int = CB_CODES,
+    iters: int = 6,
+    scale_group: int = 128,
+    layer_name: str = "",
+) -> BTCQuantizedLayer:
+    """Binary-codebook PTQ for one linear layer.
+
+    ``w``: [out, in] float weights; ``x``: [samples, in] calibration inputs.
+    """
+    w = np.asarray(w, np.float32)
+    n_rows, k = w.shape
+    if k % v:
+        raise ValueError(f"in_features={k} must be divisible by v={v}")
+    # scale groups must hold whole vectors; unaligned (eval-only) layers fall
+    # back to one alpha per vector
+    sg = scale_group if (k % scale_group == 0 and scale_group % v == 0) else v
+    n_sg = k // sg
+    vec_per_sg = sg // v
+    n_vec = k // v
+
+    xs = np.asarray(x, np.float32)
+    imp = np.mean(xs * xs, axis=0) + 1e-8                  # [k] col importance
+    om = imp.reshape(n_vec, v)
+    den_v = om.sum(axis=-1)                                # [n_vec]
+    den_sg = den_v.reshape(n_sg, vec_per_sg).sum(axis=-1)  # [n_sg]
+
+    t = np.maximum(np.sqrt(np.mean(w * w, axis=0)), 1e-8)  # [k]
+    cb = _init_codebook((w / t[None, :]).reshape(n_rows, n_vec, v),
+                        n_codes, v)
+
+    def _assign(tt, cbk):
+        u = (w / tt[None, :]).reshape(n_rows, n_vec, v)
+        uw = u * om[None, :, :]
+        scores = np.einsum("ngv,jv->ngj", uw, cbk)
+        assign = np.argmax(scores, axis=-1)                # [n_rows, n_vec]
+        codewords = cbk[assign]                            # [n_rows, n_vec, v]
+        num = (uw * codewords).sum(-1)                     # [n_rows, n_vec]
+        num_sg = num.reshape(n_rows, n_sg, vec_per_sg).sum(-1)
+        alpha = np.maximum(num_sg / den_sg[None, :], 1e-8)  # [n_rows, n_sg]
+        return assign, codewords, alpha, uw
+
+    for _ in range(iters):
+        assign, codewords, alpha, uw = _assign(t, cb)
+        a_vec = np.repeat(alpha, vec_per_sg, axis=1)       # [n_rows, n_vec]
+        # codeword refit: sign of the alpha- and importance-weighted mass
+        onehot = (assign[..., None] == np.arange(n_codes)).astype(np.float32)
+        mass = np.einsum("ngv,ngj->jv", a_vec[..., None] * uw, onehot)
+        cb = np.where(mass >= 0, 1.0, -1.0).astype(np.float32)
+        # closed-form diagonal transformation per input channel
+        acol = (a_vec[..., None] * codewords).reshape(n_rows, k)
+        num_t = (w * acol).sum(axis=0)
+        den_t = (acol * acol).sum(axis=0)
+        t = np.where(den_t > 1e-12, num_t / np.maximum(den_t, 1e-12), t)
+        t = np.where(np.abs(t) > 1e-8, t, 1e-8)
+
+    assign, codewords, alpha, _ = _assign(t, cb)
+    a_vec = np.repeat(alpha, vec_per_sg, axis=1)
+
+    packable = codebook_packable(k, n_rows, v=v, scale_group=sg)
+    layer = BTCQuantizedLayer(
+        deq=np.empty((n_rows, k), np.float32),
+        codes=assign.astype(np.uint8), codebook=cb.astype(np.int8),
+        scales=alpha.astype(np.float32), t=t.astype(np.float32),
+        v=v, n_codes=n_codes, scale_group=sg)
+    if packable:
+        # deq IS the unpack of the pack — packed/dense forwards share floats
+        deq = np.asarray(unpack_codebook_to_dense(pack_codebook_layer(layer))).T
+    else:
+        deq = t[None, :] * (a_vec[..., None] * codewords).reshape(n_rows, k)
+    layer.deq = deq.astype(np.float32)
+
+    err_num = float((imp[None, :] * (w - layer.deq) ** 2).sum())
+    err_den = float((imp[None, :] * w * w).sum()) + 1e-12
+    avg = np.log2(n_codes) / v
+    layer.stats = {
+        "avg_bits": avg,
+        "storage_bits": avg + 32.0 / sg
+        + (32.0 * k + v * n_codes) / (k * n_rows),
+        "r_salient": 0.0,
+        "recon_err": err_num / err_den,
+        "codebook_packable": packable,
+    }
+    return layer

@@ -13,6 +13,11 @@ from repro.core.binary import binarize
 from repro.core.obc import BlockCtx, obc_quantize
 
 
+def _baseline_result(deq, stats):
+    from repro.core.baselines.billm import BaselineResult
+    return BaselineResult(deq=deq, stats=stats)
+
+
 def _row_uniform(wb: jnp.ndarray, mask: jnp.ndarray, bits: int) -> jnp.ndarray:
     mf = mask.astype(wb.dtype)
     big = 1e30
@@ -34,8 +39,12 @@ def pbllm_quantize_layer(
     salient_bits: int = 8,
     beta: int = 128,
     percdamp: float = 0.01,
-) -> jnp.ndarray:
+):
+    """Returns a BaselineResult with the *measured* salient fraction: the
+    per-block top-k threshold can tie, so the realized high-bit fraction is
+    counted from the actual masks, not assumed to be ``salient_frac``."""
     w = jnp.asarray(w, jnp.float32)
+    salient_total = 0
 
     def quantize_block(wb: jnp.ndarray, ctx: BlockCtx):
         d = jnp.maximum(ctx.hinv_chol_diag, 1e-12)
@@ -43,8 +52,19 @@ def pbllm_quantize_layer(
         k = max(1, int(salient_frac * wb.size))
         thresh = jnp.sort(sal_score.reshape(-1))[-k]
         msal = sal_score >= thresh
+        nonlocal salient_total
+        salient_total += int(jnp.sum(msal))
         b_sal = _row_uniform(wb, msal, salient_bits)
         b_bin, _, _ = binarize(wb, ~msal)
         return b_sal + b_bin * (~msal).astype(wb.dtype), {}
 
-    return obc_quantize(w, x, quantize_block, beta=beta, percdamp=percdamp).deq
+    res = obc_quantize(w, x, quantize_block, beta=beta, percdamp=percdamp)
+    r_sal = salient_total / w.size
+    avg = r_sal * salient_bits + (1.0 - r_sal) * 1.0
+    return _baseline_result(
+        deq=res.deq,
+        stats={"avg_bits": avg,
+               # binarization scale + the salient (min, scale) pair: three
+               # f32 per row per block, amortized over the block width
+               "storage_bits": avg + 3.0 * 32.0 / beta,
+               "r_salient": r_sal, "recon_err": res.err})

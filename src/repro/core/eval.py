@@ -1,0 +1,56 @@
+"""Quality eval harness: perplexity + next-token accuracy on the corpus.
+
+One code path for every consumer — ``benchmarks/quality_bench.py`` (the CI
+quality gate), ``benchmarks.common.eval_ppl/eval_top1`` (the paper tables),
+and the ``repro.launch.eval`` CLI all call :func:`evaluate_lm`. Batches come
+from ``data.DataLoader`` (the labeled ``seq_len + 1`` doc convention), so the
+eval stream and the PTQ calibration stream (``data.calibration_batch``) share
+one doc-length code path. Fully deterministic for a fixed config: same seed
+⇒ byte-identical metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataLoader, LoaderConfig
+from repro.models.loss import lm_loss, perplexity
+
+
+@dataclass(frozen=True)
+class EvalConfig:
+    split: str = "valid"           # the Wikitext2 stand-in
+    n_batches: int = 4
+    batch: int = 8
+    seq_len: int = 128
+    seed: int = 1234
+    zipf_a: float = 1.2            # corpus hardness (see data.synthetic)
+    branch: int = 16
+
+
+def evaluate_lm(model, params, cfg: EvalConfig = EvalConfig()) -> dict:
+    """PPL + top-1 next-token accuracy in one forward pass per batch.
+
+    Returns ``{"ppl", "loss", "top1", "n_tokens"}``. ``params`` may be the
+    dense tree, a dequantized PTQ tree, or a packed tree (``dense()``
+    dispatches per leaf), so the same harness scores every recipe.
+    """
+    loader = DataLoader(LoaderConfig(
+        global_batch=cfg.batch, seq_len=cfg.seq_len, vocab=model.cfg.vocab,
+        split=cfg.split, seed=cfg.seed, zipf_a=cfg.zipf_a, branch=cfg.branch))
+    fwd = jax.jit(lambda p, t: model.forward(p, t)[0])
+    tot, hits, n_tokens = 0.0, 0, 0
+    for _ in range(cfg.n_batches):
+        b = next(loader)
+        logits = fwd(params, jnp.asarray(b["tokens"]))
+        tot += float(lm_loss(logits, jnp.asarray(b["labels"]),
+                             model.cfg.vocab, z_loss=0.0))
+        pred = np.asarray(jnp.argmax(logits[..., :model.cfg.vocab], -1))
+        hits += int((pred == b["labels"]).sum())
+        n_tokens += pred.size
+    loss = tot / cfg.n_batches
+    return {"ppl": perplexity(loss), "loss": loss,
+            "top1": hits / n_tokens, "n_tokens": n_tokens}

@@ -92,7 +92,24 @@ def quantize_model(
     quantizer: Callable | None = None,     # override: baselines
     pack: bool = False,
     progress: Callable[[str], None] | None = None,
+    recipe=None,                           # core.recipes.Recipe | name
 ) -> ModelPTQResult:
+    """PTQ the whole model — as an explicit quantizer, or as a *recipe*.
+
+    With ``recipe=`` (a ``core.recipes.Recipe`` or registered name) this
+    function is the executor of a declarative calibrate → sparsify →
+    binarize → pack chain, resolved per layer family (mixer / ffn / xattn /
+    encoder): the chain decides whether taped activations are used, whether
+    N:M comes pinned or from the model-level allocation, which value
+    quantizer runs, and which plane format ``pack=True`` materializes.
+    The legacy ``quantizer=`` path is the single-chain special case.
+    """
+    if recipe is not None:
+        if quantizer is not None:
+            raise ValueError("recipe= and quantizer= are exclusive")
+        from repro.core.recipes import get_recipe, layer_family, resolve_chain
+        if isinstance(recipe, str):
+            recipe = get_recipe(recipe)
     tape = collect_calibration(model, params, calib_tokens, memory)
     flat = flatten_with_names(params)
     targets = [(n, l) for n, l in flat if _quantizable(n, l)]
@@ -118,28 +135,49 @@ def quantize_model(
     stats: dict[str, dict] = {}
     for name, leaf in targets:
         n_i, m_i = alloc[name]
-        lcfg = replace(cfg, n=n_i, m=m_i)
-        xs = _calib_for(tape, name, d_in=int(leaf.shape[-2]))
+        if recipe is not None:
+            chain = resolve_chain(recipe, layer_family(name))
+            layer_quantizer = chain.quantizer
+            if chain.nm is not None:
+                n_i, m_i = chain.nm
+            lcfg = replace(cfg, n=n_i, m=m_i)
+            if chain.mask_metric is not None:
+                lcfg = replace(lcfg, mask_metric=chain.mask_metric)
+            pack_format = chain.pack_format if pack else None
+            use_calib = chain.uses_calib
+        else:
+            layer_quantizer = quantizer
+            lcfg = replace(cfg, n=n_i, m=m_i)
+            pack_format = "stb" if pack else None
+            use_calib = True
+        xs = _calib_for(tape, name, d_in=int(leaf.shape[-2])) \
+            if use_calib else []
         arr = np.asarray(leaf, np.float32)
         deqs = []
         for i, (sub, w_oi, _) in enumerate(_layer_iter(name, leaf)):
             x = xs[min(i if arr.ndim == 3 else i // max(arr.shape[1], 1), len(xs) - 1)] \
                 if xs else np.ones((8, w_oi.shape[1]), np.float32)
-            q = quantizer(jnp.asarray(w_oi), jnp.asarray(x), lcfg, sub)
+            q = layer_quantizer(jnp.asarray(w_oi), jnp.asarray(x), lcfg, sub)
             deqs.append(np.asarray(q.deq).T)          # back to [in, out]
             stats[sub] = dict(q.stats)
             stats[sub].pop("block_meta", None)
-            if pack and hasattr(q, "mask") and arr.ndim <= 3 \
-                    and "wkv_b" not in name:
-                # pack only dense()-routed linears: wkv_b is consumed as a
-                # raw matrix by mla_decode's absorbed path (same skip as
-                # abstract_pack_params), and 4-D MoE expert stacks are
-                # applied via raw einsums in moe_apply — substituted planes
-                # there would never be read.
+            # pack only dense()-routed linears: wkv_b is consumed as a raw
+            # matrix by mla_decode's absorbed path (same skip as
+            # abstract_pack_params), and 4-D MoE expert stacks are applied
+            # via raw einsums in moe_apply — substituted planes there would
+            # never be read. Planes are [out, in]; kernel layout [K, N].
+            if pack_format == "stb" and hasattr(q, "mask") \
+                    and arr.ndim <= 3 and "wkv_b" not in name:
                 from repro.quant.packing import packable, pack_quantized_layer
-                # planes are [out, in]; the kernel layout is [K, N] = [in, out]
                 if packable(w_oi.shape[1], w_oi.shape[0]):
                     packed[sub] = pack_quantized_layer(q)
+            elif pack_format == "codebook" and hasattr(q, "codes") \
+                    and arr.ndim <= 3 and "wkv_b" not in name:
+                from repro.quant.codebook import (
+                    codebook_packable, pack_codebook_layer)
+                if codebook_packable(w_oi.shape[1], w_oi.shape[0],
+                                     v=q.v, scale_group=q.scale_group):
+                    packed[sub] = pack_codebook_layer(q)
             if progress:
                 progress(sub)
         new = np.stack(deqs).reshape(arr.shape) if arr.ndim > 2 else deqs[0]
@@ -177,6 +215,7 @@ def pack_model_params(params, packed: dict[str, Any], mesh=None):
     mask/sign/region bytes, which is the paper's HBM-roofline win multiplied
     across the mesh — and unpackable dense weights shard TP the same way.
     """
+    from repro.quant.codebook import PackedCodebookLinear, stack_codebook
     from repro.quant.packing import stack_packed
 
     flat = flatten_with_names(params)
@@ -186,8 +225,12 @@ def pack_model_params(params, packed: dict[str, Any], mesh=None):
             out.append(packed[name])
         elif f"{name}[0]" in packed and getattr(leaf, "ndim", 0) == 3:
             groups = [packed.get(f"{name}[{g}]") for g in range(leaf.shape[0])]
-            out.append(stack_packed(groups) if all(
-                g is not None for g in groups) else leaf)
+            if all(g is not None for g in groups):
+                stack = stack_codebook if isinstance(
+                    groups[0], PackedCodebookLinear) else stack_packed
+                out.append(stack(groups))
+            else:
+                out.append(leaf)
         else:
             out.append(leaf)
     tree = jax.tree.unflatten(jax.tree.structure(params), out)
@@ -216,32 +259,58 @@ _SYNONYM = {
 }
 
 
+def _block_index(parts: list[str]) -> int | None:
+    """Pattern-position index of a param path (``blocks/<i>/...``) or None."""
+    for i, p in enumerate(parts[:-1]):
+        if p == "blocks" and parts[i + 1].isdigit():
+            return int(parts[i + 1])
+    return None
+
+
 def _calib_for(tape: dict[str, list], param_name: str,
                d_in: int | None = None) -> list[np.ndarray]:
     """Match a param path to its taped dense() inputs.
 
     Param paths look like ``blocks/0/mixer/wq/w``; tape keys like
-    ``block0/attn/wq`` (scope names, one entry per unrolled group). Match on
-    the leaf name + a synonym class for the parent; validate input dims.
+    ``block0/attn/wq`` (scope names, one entry per unrolled group).
+    Candidates must agree on the block index (``blocks/1/...`` only matches
+    ``block1/...`` keys; block-less params like the encoder's only match
+    block-less keys) and the leaf name, with the input dim validated when
+    known. Among survivors an exact parent match (``xattn`` == ``xattn``)
+    outranks a synonym-class match (``mixer`` ~ ``attn``); two distinct keys
+    at the winning rank are an unresolvable ambiguity and raise rather than
+    silently calibrating on the wrong activations.
     """
     want = param_name[:-2] if param_name.endswith("/w") else param_name
-    parts = [p for p in want.split("/") if not p.isdigit() and p != "blocks"]
+    raw = want.split("/")
+    blk = _block_index(raw)
+    parts = [p for p in raw if not p.isdigit() and p != "blocks"]
     leaf = parts[-1]
     parent = parts[-2] if len(parts) > 1 else ""
     ok_parents = _SYNONYM.get(parent, {parent})
-    best: list | None = None
+    exact: list[tuple[str, list]] = []
+    synonym: list[tuple[str, list]] = []
     for key, entries in tape.items():
         kp = key.split("/")
         if kp[-1] != leaf:
             continue
+        m = re.match(r"^block(\d+)$", kp[0])
+        kblk = int(m.group(1)) if m else None
+        if kblk != blk:
+            continue
         kparent = kp[-2] if len(kp) > 1 else ""
         kparent = re.sub(r"^block\d+$", "", kparent)
-        if kparent and ok_parents and kparent not in ok_parents:
-            continue
         if d_in is not None and entries and entries[0].shape[-1] != d_in:
             continue
-        best = entries
-        break
-    if best is None:
-        return []
-    return [np.asarray(e, np.float32) for e in best]
+        if kparent == parent:
+            exact.append((key, entries))
+        elif not kparent or kparent in ok_parents:
+            synonym.append((key, entries))
+    for cands in (exact, synonym):
+        if len(cands) > 1:
+            raise ValueError(
+                f"ambiguous calibration match for {param_name!r}: tape keys "
+                f"{sorted(k for k, _ in cands)} all match at the same rank")
+        if cands:
+            return [np.asarray(e, np.float32) for e in cands[0][1]]
+    return []

@@ -1,0 +1,267 @@
+"""Declarative compression recipes: calibrate → sparsify → binarize → pack.
+
+Every PTQ method the repo knows — STBLLM itself, the rtn/gptq/pbllm/billm
+baselines, and the BTC binary-codebook backend — is expressed as the same
+four-slot stage chain (llmc's sequentially-composable-configs shape):
+
+  calibrate   use taped dense() activations (absent → activation-free, the
+              layer quantizes against a ones input like RTN)
+  sparsify    N:M structured mask before binarization; opts: ``metric``
+              (si | magnitude | wanda | sparsegpt), optional pinned ``n, m``
+              (absent → the model-level adaptive allocation decides per layer)
+  binarize    the value quantizer; opts: ``method`` (fp | rtn | gptq | pbllm
+              | billm | stbllm | btc) + method knobs
+  pack        serving plane format; opts: ``format`` ("stb" bit-planes or
+              "codebook" BTC planes) — declares how quantize_model(pack=True)
+              materializes PackedLinear / PackedCodebookLinear leaves
+
+A :class:`Recipe` is a validated chain plus optional per-layer-family
+overrides (families: mixer / ffn / xattn / encoder / other — the param-tree
+group names), a declared ``bits_budget`` that BENCH_quality gates the
+*measured* average bits against, and a ``tier`` ("default" runs in the
+per-push bench gate; "full" only in the nightly matrix).
+
+``core.pipeline.quantize_model(recipe=...)`` is the executor: it resolves
+the chain per layer family and drives the per-layer stage pipeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+import jax.numpy as jnp
+
+_ORDER = {"calibrate": 0, "sparsify": 1, "binarize": 2, "pack": 3}
+_BINARIZERS = ("fp", "rtn", "gptq", "pbllm", "billm", "stbllm", "btc")
+# methods whose layer quantizer consumes an N:M mask stage
+_SPARSIFIABLE = ("billm", "stbllm")
+_PACK_FORMATS = {"stbllm": "stb", "btc": "codebook"}
+_FAMILIES = ("mixer", "ffn", "xattn", "encoder", "other")
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One chain slot. ``opts`` is treated as immutable after construction."""
+    kind: str
+    opts: Mapping[str, Any] = field(default_factory=dict)
+
+
+def _validate_chain(stages: tuple[Stage, ...], where: str) -> None:
+    seen: list[int] = []
+    for s in stages:
+        if s.kind not in _ORDER:
+            raise ValueError(f"{where}: unknown stage kind {s.kind!r} "
+                             f"(one of {sorted(_ORDER)})")
+        rank = _ORDER[s.kind]
+        if rank in seen:
+            raise ValueError(f"{where}: duplicate {s.kind!r} stage")
+        if seen and rank < seen[-1]:
+            raise ValueError(
+                f"{where}: stage {s.kind!r} out of order — chains compose "
+                f"calibrate → sparsify → binarize → pack")
+        seen.append(rank)
+    kinds = {s.kind: s for s in stages}
+    if "binarize" not in kinds:
+        raise ValueError(f"{where}: a chain needs a binarize stage")
+    method = kinds["binarize"].opts.get("method")
+    if method not in _BINARIZERS:
+        raise ValueError(f"{where}: binarize method {method!r} not in "
+                         f"{_BINARIZERS}")
+    if "sparsify" in kinds and method not in _SPARSIFIABLE:
+        raise ValueError(f"{where}: binarize method {method!r} does not "
+                         f"compose with a sparsify stage "
+                         f"(supported: {_SPARSIFIABLE})")
+    if "pack" in kinds:
+        fmt = kinds["pack"].opts.get("format")
+        want = _PACK_FORMATS.get(method)
+        if want is None:
+            raise ValueError(f"{where}: method {method!r} has no packed "
+                             f"serving format")
+        if fmt != want:
+            raise ValueError(f"{where}: pack format {fmt!r} does not match "
+                             f"method {method!r} (expects {want!r})")
+
+
+@dataclass(frozen=True)
+class Recipe:
+    name: str
+    stages: tuple[Stage, ...]
+    bits_budget: float
+    # (family, chain) pairs; families absent here use ``stages``
+    overrides: tuple[tuple[str, tuple[Stage, ...]], ...] = ()
+    tier: str = "default"           # default (bench gate) | full (nightly)
+    description: str = ""
+
+    def __post_init__(self):
+        _validate_chain(tuple(self.stages), f"recipe {self.name!r}")
+        for fam, chain in self.overrides:
+            if fam not in _FAMILIES:
+                raise ValueError(f"recipe {self.name!r}: unknown layer "
+                                 f"family {fam!r} (one of {_FAMILIES})")
+            _validate_chain(tuple(chain), f"recipe {self.name!r}[{fam}]")
+
+    def stages_for(self, family: str) -> tuple[Stage, ...]:
+        for fam, chain in self.overrides:
+            if fam == family:
+                return tuple(chain)
+        return tuple(self.stages)
+
+
+def layer_family(param_name: str) -> str:
+    """Param-tree group family of a quantizable param path."""
+    parts = param_name.split("/")
+    for fam in ("encoder", "xattn", "mixer", "ffn"):
+        if fam in parts:
+            return fam
+    return "other"
+
+
+# --------------------------------------------------------------- resolution
+@dataclass(frozen=True)
+class ResolvedChain:
+    """One family's chain, compiled for the quantize_model executor."""
+    quantizer: Callable            # (w, x, cfg, name) -> result (.deq/.stats)
+    uses_calib: bool
+    nm: tuple[int, int] | None     # pinned by sparsify; None → allocation
+    mask_metric: str | None
+    pack_format: str | None        # "stb" | "codebook" | None
+
+
+def resolve_chain(recipe: Recipe, family: str) -> ResolvedChain:
+    stages = {s.kind: s for s in recipe.stages_for(family)}
+    bin_s = stages["binarize"]
+    method = bin_s.opts["method"]
+    sp = stages.get("sparsify")
+    nm = None
+    if sp is not None and "n" in sp.opts:
+        nm = (int(sp.opts["n"]), int(sp.opts["m"]))
+    metric = sp.opts.get("metric") if sp is not None else None
+    uses_calib = "calibrate" in stages
+    pack_s = stages.get("pack")
+    fmt = pack_s.opts.get("format") if pack_s is not None else None
+
+    def quantizer(w, x, cfg, name):
+        from repro.core.baselines import (
+            _Deq, billm_quantize_layer, btc_quantize_layer,
+            gptq_quantize_layer, pbllm_quantize_layer, rtn_quantize_layer)
+        from repro.core.stbllm import stbllm_quantize_layer
+        if not uses_calib:
+            x = jnp.ones((8, w.shape[1]), jnp.float32)
+        if method == "fp":
+            return _Deq(w, 16.0)
+        if method == "rtn":
+            bits = int(bin_s.opts.get("bits", 1))
+            return _Deq(rtn_quantize_layer(w, bits=bits), float(bits),
+                        storage_bits=bits + 2.0 * 32.0 / cfg.beta)
+        if method == "gptq":
+            bits = int(bin_s.opts.get("bits", 1))
+            return _Deq(gptq_quantize_layer(w, x, bits=bits, beta=cfg.beta),
+                        float(bits), storage_bits=bits + 2.0 * 32.0 / cfg.beta)
+        if method == "pbllm":
+            return pbllm_quantize_layer(
+                w, x, salient_frac=float(bin_s.opts.get("salient_frac", 0.1)),
+                beta=cfg.beta)
+        if method == "billm":
+            # sparsify stage → BiLLM-N:M; cfg.n/m already carry the pin or
+            # the model-level allocation
+            return billm_quantize_layer(
+                w, x, nm=(cfg.n, cfg.m) if sp is not None else None,
+                beta=cfg.beta)
+        if method == "stbllm":
+            return stbllm_quantize_layer(w, x, cfg, name)
+        if method == "btc":
+            return btc_quantize_layer(
+                w, x, v=int(bin_s.opts.get("v", 8)),
+                n_codes=int(bin_s.opts.get("n_codes", 16)),
+                iters=int(bin_s.opts.get("iters", 6)),
+                scale_group=cfg.beta, layer_name=name)
+        raise ValueError(method)
+
+    return ResolvedChain(quantizer=quantizer, uses_calib=uses_calib, nm=nm,
+                         mask_metric=metric, pack_format=fmt)
+
+
+# ----------------------------------------------------------------- registry
+_REGISTRY: dict[str, Recipe] = {}
+
+
+def register_recipe(recipe: Recipe, replace: bool = False) -> Recipe:
+    if recipe.name in _REGISTRY and not replace:
+        raise ValueError(f"recipe {recipe.name!r} already registered")
+    _REGISTRY[recipe.name] = recipe
+    return recipe
+
+
+def get_recipe(name: str) -> Recipe:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown recipe {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def registered_recipes(tier: str | None = "default") -> list[Recipe]:
+    """Recipes in registration order. tier="default" → the bench-gate set;
+    tier="full" or None → everything (the nightly matrix)."""
+    if tier in (None, "full"):
+        return list(_REGISTRY.values())
+    return [r for r in _REGISTRY.values() if r.tier == tier]
+
+
+_CAL = Stage("calibrate")
+
+register_recipe(Recipe(
+    "fp16", (Stage("binarize", {"method": "fp"}),), bits_budget=16.0,
+    description="full-precision reference (the PPL floor every gate uses)"))
+register_recipe(Recipe(
+    "rtn", (Stage("binarize", {"method": "rtn", "bits": 1}),),
+    bits_budget=1.0,
+    description="1-bit round-to-nearest, activation-free"))
+register_recipe(Recipe(
+    "gptq", (_CAL, Stage("binarize", {"method": "gptq", "bits": 1})),
+    bits_budget=1.0,
+    description="1-bit GPTQ (OBC error compensation)"))
+register_recipe(Recipe(
+    "pbllm", (_CAL, Stage("binarize", {"method": "pbllm"})),
+    bits_budget=1.85,
+    description="PB-LLM partial binarization (~10% salient at 8-bit)"))
+register_recipe(Recipe(
+    "billm", (_CAL, Stage("binarize", {"method": "billm"})),
+    bits_budget=1.11,
+    description="BiLLM bell-split binarization, measured salient fraction"))
+register_recipe(Recipe(
+    "stbllm",
+    (_CAL, Stage("sparsify", {"metric": "si"}),
+     Stage("binarize", {"method": "stbllm"}),
+     Stage("pack", {"format": "stb"})),
+    # unpinned sparsify: the executor's STBConfig (CLI --nm, bench base_cfg)
+    # picks the N:M operating point; the budget covers up to 6:8 (~0.82 bits)
+    bits_budget=0.85,
+    description="the paper: SI N:M mask + trisection + OBC, packed planes"))
+register_recipe(Recipe(
+    "btc",
+    (_CAL, Stage("binarize", {"method": "btc"}),
+     Stage("pack", {"format": "codebook"})),
+    bits_budget=0.51,
+    description="BTC-LLM learnable transformation + binary codebook (0.5b)"))
+
+# nightly-only rows: the ablated BiLLM-N:M competitor and a mixed
+# per-layer-family chain (FFN kept denser than attention)
+register_recipe(Recipe(
+    "billm-nm",
+    (_CAL, Stage("sparsify", {"metric": "wanda", "n": 4, "m": 8}),
+     Stage("binarize", {"method": "billm"})),
+    bits_budget=0.56, tier="full",
+    description="BiLLM + Wanda 4:8 mask (the paper's ablated baseline)"))
+register_recipe(Recipe(
+    "stbllm-mixed",
+    (_CAL, Stage("sparsify", {"metric": "si", "n": 4, "m": 8}),
+     Stage("binarize", {"method": "stbllm"}),
+     Stage("pack", {"format": "stb"})),
+    overrides=(
+        ("ffn", (_CAL, Stage("sparsify", {"metric": "si", "n": 6, "m": 8}),
+                 Stage("binarize", {"method": "stbllm"}),
+                 Stage("pack", {"format": "stb"}))),
+    ),
+    bits_budget=0.83, tier="full",
+    description="per-family mix: FFN at 6:8, attention at 4:8"))

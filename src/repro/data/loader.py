@@ -5,6 +5,13 @@ Each host process loads only its shard of the global batch (``host_id`` /
 labels. A background thread keeps ``prefetch`` batches ready. The loader state
 (``step``) is a single int — checkpointable, so restart resumes the stream
 exactly (repro.checkpoint stores it in the manifest).
+
+Resume semantics under prefetch: ``step`` always counts *consumed* batches.
+The worker keeps its own producer cursor and tags every enqueued batch with
+the step it was built for; ``__next__`` advances ``step`` only when a batch is
+handed to the caller, so ``state_dict()`` taken between any two ``next()``
+calls replays the identical stream — batches sitting in the queue at
+checkpoint time are regenerated, never skipped.
 """
 from __future__ import annotations
 
@@ -15,6 +22,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.data.synthetic import SyntheticCorpus, ZipfMarkovConfig
+
+# queue terminator: wakes a consumer blocked in __next__ after stop()
+_SENTINEL = object()
 
 
 @dataclass(frozen=True)
@@ -66,7 +76,18 @@ class DataLoader:
             b = self.batch_at(self.step)
             self.step += 1
             return b
-        return self._q.get()
+        while True:
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration
+                continue
+            if item is _SENTINEL:
+                raise StopIteration
+            step, b = item
+            self.step = step + 1
+            return b
 
     def __iter__(self):
         return self
@@ -74,15 +95,22 @@ class DataLoader:
     # ------------------------------------------------------------- prefetch
     def start_prefetch(self) -> "DataLoader":
         def worker():
+            # producer cursor, local to the worker: self.step stays the
+            # consumed-step so state_dict() never over-counts queued batches
+            step = self.step
             while not self._stop.is_set():
-                b = self.batch_at(self.step)
-                self.step += 1
+                item = (step, self.batch_at(step))
+                step += 1
                 while not self._stop.is_set():
                     try:
-                        self._q.put(b, timeout=0.1)
+                        self._q.put(item, timeout=0.1)
                         break
                     except queue.Full:
                         continue
+            try:   # unblock a consumer waiting in __next__
+                self._q.put_nowait(_SENTINEL)
+            except queue.Full:
+                pass
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
@@ -90,18 +118,46 @@ class DataLoader:
 
     def stop(self) -> None:
         self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
 
     # ----------------------------------------------------------- checkpoint
     def state_dict(self) -> dict:
         return {"step": self.step}
 
     def load_state_dict(self, d: dict) -> None:
+        was_prefetching = self._thread is not None
+        if was_prefetching:
+            # retire the worker and flush its stale queued batches; the
+            # restarted worker regenerates from the restored step
+            self.stop()
+            self._thread = None
+            self._stop = threading.Event()
+            while True:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
         self.step = int(d["step"])
+        if was_prefetching:
+            self.start_prefetch()
 
 
 def calibration_batch(vocab: int, n_samples: int = 16, seq_len: int = 128,
-                      seed: int = 1234) -> np.ndarray:
-    """Calibration token stream for PTQ (the paper uses 128 C4 sequences)."""
-    corpus = SyntheticCorpus(
-        ZipfMarkovConfig(vocab=vocab, seed=seed, doc_len=seq_len))
-    return np.stack([corpus.document(i, "calib") for i in range(n_samples)])
+                      seed: int = 1234, split: str = "calib",
+                      zipf_a: float = 1.2, branch: int = 16,
+                      labels: bool = False):
+    """Calibration token stream for PTQ (the paper uses 128 C4 sequences).
+
+    Routed through ``DataLoader.batch_at`` so calibration and eval streams
+    share one doc-length convention (``seq_len + 1`` docs, sliced to tokens /
+    labels). Document generation is prefix-stable in ``doc_len``, so the
+    token stream is unchanged from the historical direct-corpus path.
+    With ``labels=True`` returns the full ``{"tokens", "labels"}`` batch —
+    the labeled variant the eval harness consumes.
+    """
+    dl = DataLoader(LoaderConfig(
+        global_batch=n_samples, seq_len=seq_len, vocab=vocab, split=split,
+        seed=seed, zipf_a=zipf_a, branch=branch))
+    b = dl.batch_at(0)
+    return b if labels else b["tokens"]

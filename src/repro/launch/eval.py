@@ -1,0 +1,80 @@
+"""Quality eval CLI: perplexity + next-token accuracy, per recipe.
+
+  PYTHONPATH=src python -m repro.launch.eval --arch granite-3-8b --smoke
+  PYTHONPATH=src python -m repro.launch.eval --recipe stbllm --out eval.json
+  PYTHONPATH=src python -m repro.launch.eval --checkpoint experiments/run1
+
+Builds the model (random init unless --checkpoint points at a trained one —
+random-init numbers only order recipes relative to each other), optionally
+runs a registered compression recipe (core.recipes) over it, then scores it
+with core.eval.evaluate_lm on the Zipf-Markov corpus. Prints a JSON metrics
+block; the committed quality gate uses the same harness on the *trained*
+bench substrate (benchmarks/quality_bench.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core.eval import EvalConfig, evaluate_lm
+from repro.core.pipeline import quantize_model
+from repro.core.stbllm import STBConfig
+from repro.data import calibration_batch
+from repro.models.model import build_model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--checkpoint", default=None,
+                    help="load trained params from this checkpoint dir")
+    ap.add_argument("--recipe", default=None,
+                    help="registered compression recipe to apply before eval")
+    ap.add_argument("--split", default="valid")
+    ap.add_argument("--n-batches", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--out", default=None, help="also write the JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, dtype=jnp.float32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.checkpoint:
+        from repro.checkpoint import load_checkpoint
+        params, _ = load_checkpoint(args.checkpoint, params)
+
+    out = {"arch": args.arch, "recipe": args.recipe or "fp (none)",
+           "split": args.split}
+    if args.recipe:
+        calib = calibration_batch(cfg.vocab, n_samples=8,
+                                  seq_len=args.seq_len, seed=args.seed)
+        res = quantize_model(model, params, calib,
+                             STBConfig(beta=min(128, cfg.d_model)),
+                             recipe=args.recipe)
+        params = res.params
+        out["avg_bits"] = res.avg_bits
+        out["storage_bits"] = res.storage_bits
+
+    metrics = evaluate_lm(model, params, EvalConfig(
+        split=args.split, n_batches=args.n_batches, batch=args.batch,
+        seq_len=args.seq_len, seed=args.seed))
+    out.update(metrics)
+    text = json.dumps(out, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -146,6 +146,7 @@ def build_serve_mesh(tp: int | None = None, mesh_shape: str | None = None):
 
 def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           prompt_len: int = 32, gen_len: int = 32, nm: str = "4:8",
+          recipe: str | None = None,
           quantize: bool = True, packed: bool = False, seed: int = 0,
           params=None, dtype=jnp.float32, temperature: float = 0.0,
           legacy_loop: bool = False, prefill_mode: str = "auto",
@@ -244,7 +245,7 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         t0 = time.time()
         res = quantize_model(model, params, calib,
                              STBConfig(n=n, m=m, beta=beta),
-                             pack=packed or speculative)
+                             pack=packed or speculative, recipe=recipe)
         if speculative:
             # self-speculative pair: the original dense params stay the serve
             # target (the reference distribution every emitted token matches),
@@ -263,7 +264,7 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         stats.update({"avg_bits": res.avg_bits,
                       "storage_bits": res.storage_bits,
                       "ptq_seconds": time.time() - t0})
-        log(f"PTQ {nm}: avg_bits={res.avg_bits:.3f} "
+        log(f"PTQ {recipe or nm}: avg_bits={res.avg_bits:.3f} "
             f"({stats['ptq_seconds']:.1f}s"
             f"{', packed' if packed else ''}"
             f"{', speculative draft' if speculative else ''})")
@@ -443,6 +444,11 @@ def main() -> None:
     g.add_argument("--no-smoke", dest="smoke", action="store_false",
                    help="serve the full-size config (not the CPU smoke one)")
     g.add_argument("--nm", default="4:8")
+    g.add_argument("--recipe", default=None,
+                   help="quantize with a registered compression recipe "
+                        "(core.recipes: stbllm, btc, billm, ...) instead of "
+                        "the default STBLLM chain; --packed serves whatever "
+                        "plane format the recipe's pack stage declares")
     g.add_argument("--no-quantize", dest="quantize", action="store_false")
     g.add_argument("--packed", action="store_true",
                    help="serve from PackedLinear planes (sub-1-bit weights)")
@@ -569,6 +575,7 @@ def main() -> None:
     gen_lens = (tuple(int(v) for v in args.gen_lens.split(","))
                 if args.gen_lens else None)
     common = dict(smoke=args.smoke, n_requests=args.n_requests, nm=args.nm,
+                  recipe=args.recipe,
                   quantize=args.quantize, packed=args.packed,
                   seed=args.seed, legacy_loop=args.legacy_loop,
                   gen_lens=gen_lens, tp=args.tp, mesh_shape=args.mesh)

@@ -16,6 +16,7 @@ from contextlib import contextmanager
 import jax
 import jax.numpy as jnp
 
+from repro.quant.codebook import PackedCodebookLinear
 from repro.quant.packing import PackedLinear
 
 
@@ -93,6 +94,9 @@ def dense(params: dict, x: jnp.ndarray, name: str = "dense") -> jnp.ndarray:
     if isinstance(w, PackedLinear):
         from repro.kernels.ops import stb_matmul
         return stb_matmul(x, w, name=name)
+    if isinstance(w, PackedCodebookLinear):
+        from repro.quant.codebook import codebook_matmul
+        return codebook_matmul(x, w)
     _record(name, x)
     return jnp.matmul(x, w.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
 

@@ -1,0 +1,157 @@
+"""Packed binary-codebook storage format (BTC-LLM-style, DESIGN.md §4 sequel).
+
+Proof that the packed-serving abstraction is not STB-shaped only: a second
+plane family for vector-quantized binary weights. A weight ``y = x @ W`` with
+``W: [K, N]`` is stored as length-``v`` binary codeword indices along K plus
+a learnable diagonal input transformation:
+
+  codes     uint8 [K/(2v), N]   two 4-bit codeword indices per byte (vector
+                                g = k//v uses nibble g%2 of byte k//(2v))
+  codebook  uint8 [n_codes]     shared codewords, bit l = sign of element l
+  scales    f32   [K/sg, N]     per-(scale-group, column) magnitude alpha
+  t_diag    f32   [K]           learnable diagonal transformation (BTC's
+                                redistribution of per-input-channel energy)
+
+  W[k, n] = sign(codebook[code(k, n)], bit k%v) * scales[k//sg, n] * t_diag[k]
+
+Value bits per weight = log2(n_codes)/v = 0.5 at the default 16 codewords of
+length 8 — sub-1-bit by codebook rate rather than by N:M structured sparsity.
+``dense()`` dispatches on this leaf type exactly like ``PackedLinear``; the
+decode path is pure jnp (dequantize-in-HLO), shared by every backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CB_VECTOR = 8        # v: codeword length along K
+CB_CODES = 16        # n_codes: 4-bit indices, two per byte
+
+
+@dataclass
+class PackedCodebookLinear:
+    """Packed binary-codebook weight for ``y = x @ W``, W logically [K, N]."""
+    codes: jnp.ndarray      # uint8 [K/(2v), N]
+    codebook: jnp.ndarray   # uint8 [n_codes] bit-packed sign rows
+    scales: jnp.ndarray     # f32  [K/scale_group, N]
+    t_diag: jnp.ndarray     # f32  [K]
+    k: int
+    n: int
+    v: int
+    n_codes: int
+    scale_group: int
+
+    _FIELDS = ("codes", "codebook", "scales", "t_diag")
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, f) for f in self._FIELDS)
+        return leaves, (self.k, self.n, self.v, self.n_codes, self.scale_group)
+
+    def tree_flatten_with_keys(self):
+        import jax.tree_util as jtu
+        leaves = [(jtu.GetAttrKey(f), getattr(self, f)) for f in self._FIELDS]
+        return leaves, (self.k, self.n, self.v, self.n_codes, self.scale_group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, k=aux[0], n=aux[1], v=aux[2], n_codes=aux[3],
+                   scale_group=aux[4])
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            int(np.prod(a.shape)) * a.dtype.itemsize
+            for a in (self.codes, self.codebook, self.scales, self.t_diag))
+
+
+jax.tree_util.register_pytree_with_keys(
+    PackedCodebookLinear,
+    lambda p: p.tree_flatten_with_keys(),
+    PackedCodebookLinear.tree_unflatten,
+)
+
+
+def codebook_packable(k: int, n: int, v: int = CB_VECTOR,
+                      scale_group: int = 128) -> bool:
+    """Whether a [K, N] weight admits the codebook layout (alignment only)."""
+    return k % scale_group == 0 and k % (2 * v) == 0
+
+
+def pack_codebook_layer(ql) -> PackedCodebookLinear:
+    """Pack a ``repro.core.baselines.btc.BTCQuantizedLayer``.
+
+    Quantizer planes are [out, in] = [N, K-granular]: ``codes`` [N, K/v],
+    ``scales`` [N, K/sg], ``codebook`` [n_codes, v] in +-1, ``t`` [K].
+    """
+    codes = np.asarray(ql.codes, np.uint8).T           # [K/v, N]
+    gv, n = codes.shape
+    if gv % 2:
+        raise ValueError(f"K/v={gv} must be even (two codes per byte)")
+    if ql.n_codes > CB_CODES:
+        raise ValueError(f"n_codes={ql.n_codes} exceeds 4-bit indices")
+    lo = codes[0::2, :]
+    hi = codes[1::2, :]
+    packed_codes = (lo | (hi << np.uint8(4))).astype(np.uint8)
+
+    cb = np.asarray(ql.codebook)                       # [n_codes, v] +-1
+    bits = (cb > 0).astype(np.uint8)
+    shifts = (1 << np.arange(cb.shape[1], dtype=np.uint8))[None, :]
+    cb_packed = (bits * shifts).sum(axis=1).astype(np.uint8)  # [n_codes]
+
+    scales = np.asarray(ql.scales, np.float32).T       # [K/sg, N]
+    t = np.asarray(ql.t, np.float32)                   # [K]
+    k = t.shape[0]
+    if not codebook_packable(k, n, v=ql.v, scale_group=ql.scale_group):
+        raise ValueError(f"[K={k}, N={n}] not codebook-packable at "
+                         f"v={ql.v}, scale_group={ql.scale_group}")
+    return PackedCodebookLinear(
+        codes=jnp.asarray(packed_codes), codebook=jnp.asarray(cb_packed),
+        scales=jnp.asarray(scales), t_diag=jnp.asarray(t),
+        k=k, n=n, v=ql.v, n_codes=ql.n_codes, scale_group=ql.scale_group)
+
+
+def unpack_codebook_to_dense(p: PackedCodebookLinear,
+                             dtype=jnp.float32) -> jnp.ndarray:
+    """Reference dequantization to a dense [K, N] matrix (pure jnp).
+
+    The oracle for round-trip tests and the serving decode path — the BTC
+    recipe's dequantized-dense weights are *defined* as this unpack, so the
+    packed and dense forwards share bit-identical floats by construction.
+    """
+    kk = jnp.arange(p.k)
+    byte = p.codes[kk // (2 * p.v), :]                      # [K, N] uint8
+    nib = (((kk // p.v) % 2) * 4).astype(jnp.uint8)
+    idx = (byte >> nib[:, None]) & jnp.uint8(0xF)           # [K, N]
+    cw = p.codebook[idx]                                    # [K, N] uint8
+    bit = (cw >> (kk % p.v).astype(jnp.uint8)[:, None]) & jnp.uint8(1)
+    sign = (2 * bit.astype(jnp.int32) - 1).astype(dtype)
+    alpha = p.scales[kk // p.scale_group, :].astype(dtype)  # [K, N]
+    return sign * alpha * p.t_diag[:, None].astype(dtype)
+
+
+def codebook_matmul(x: jnp.ndarray, p: PackedCodebookLinear) -> jnp.ndarray:
+    """y = x @ W from packed codebook planes (dequantize-in-HLO)."""
+    w = unpack_codebook_to_dense(p, dtype=jnp.float32)
+    return jnp.matmul(x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def stack_codebook(packs: list[PackedCodebookLinear]) -> PackedCodebookLinear:
+    """Stack per-group codebook layers along a new leading axis (mirrors
+    ``packing.stack_packed``: every field gains the [G, ...] dim so per-group
+    tree slicing recovers coherent layers; aux stays shared and static)."""
+    first = packs[0]
+    assert all((p.k, p.n) == (first.k, first.n) for p in packs), "ragged stack"
+    return PackedCodebookLinear(
+        **{f: jnp.stack([getattr(p, f) for p in packs])
+           for f in PackedCodebookLinear._FIELDS},
+        k=first.k, n=first.n, v=first.v, n_codes=first.n_codes,
+        scale_group=first.scale_group)
+
+
+def codebook_format_bits(p: PackedCodebookLinear) -> float:
+    """Honest stored bits per logical weight position."""
+    return p.nbytes * 8.0 / (p.k * p.n)

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.quant.packing import SCALE_GROUP, row_shardable
+from repro.quant.packing import NUM_SCALES, SCALE_GROUP, row_shardable
 from repro.utils.tree import tree_map_with_path
 
 # params that stay replicated: norms, biases, scalar gates, small SSM tensors.
@@ -58,6 +58,12 @@ def _guard(spec: P, shape, mesh: Mesh) -> P:
 
 _PACKED_PLANE = re.compile(
     r"/(mask_bits|sign_bits|sign_res_bits|region_bits|scales)$")
+# binary-codebook plane family (quant.codebook.PackedCodebookLinear): served
+# replicated for now — the jnp decode path has no per-device slicing contract
+# yet, and the planes are tiny next to the bit-planes they replace. The
+# codebook's alpha plane also ends in "/scales" but is 1 rank shallower than
+# the 5-wide STB scale plane; both cases are caught before the STB branch.
+_CODEBOOK_PLANE = re.compile(r"/(codes|codebook|t_diag)$")
 # FFN down-projection packed planes: row-parallel (K = d_ff over 'model')
 # like their dense counterparts, so the fused SwiGLU's gate/up column shard
 # feeds the down kernel's K shard with no resharding in between. Attention
@@ -89,6 +95,9 @@ def param_spec_for(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
         # The per-head rope paths (gqa wq/wk, mla wq_b) are safe: their TP
         # sharding lands on the head axis after the [B,S,H*D] reshape, never
         # on the dim rope splits.
+        return P()
+    if _CODEBOOK_PLANE.search(path) or (
+            path.endswith("/scales") and shape[-1] != NUM_SCALES):
         return P()
     if _PACKED_PLANE.search(path):
         # packed sub-1-bit weight planes [..., K', N(, 5)]: serving is

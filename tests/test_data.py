@@ -1,4 +1,7 @@
 """Data pipeline: determinism, host sharding, resume, calibration."""
+import threading
+import time
+
 import numpy as np
 
 from repro.data import (
@@ -69,7 +72,68 @@ def test_loader_prefetch_matches_sync():
         pre.stop()
 
 
+def test_loader_resume_exact_under_prefetch():
+    """state_dict taken mid-stream with a prefetch worker running replays
+    the identical batch stream: queued-but-unconsumed batches are
+    regenerated, never skipped (step counts *consumed* batches only)."""
+    cfg = LoaderConfig(global_batch=2, seq_len=16, prefetch=3)
+    ref = DataLoader(cfg)
+    stream = [next(ref)["tokens"] for _ in range(8)]
+
+    dl = DataLoader(cfg).start_prefetch()
+    try:
+        got = [next(dl)["tokens"] for _ in range(3)]
+        time.sleep(0.2)        # let the worker fill the queue past step 3
+        state = dl.state_dict()
+    finally:
+        dl.stop()
+    assert state == {"step": 3}
+
+    dl2 = DataLoader(cfg).start_prefetch()
+    try:
+        next(dl2)              # desync: consumed state must override this
+        dl2.load_state_dict(state)
+        got += [next(dl2)["tokens"] for _ in range(5)]
+    finally:
+        dl2.stop()
+    for want, have in zip(stream, got):
+        np.testing.assert_array_equal(want, have)
+
+
+def test_loader_stop_unblocks_consumer():
+    """stop() must wake a consumer blocked in __next__, not hang it."""
+    dl = DataLoader(LoaderConfig(global_batch=2, seq_len=16)).start_prefetch()
+    next(dl)
+    dl.stop()
+    out = {}
+
+    def consume():
+        try:
+            while True:
+                next(dl)
+        except StopIteration:
+            out["stopped"] = True
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and out.get("stopped")
+
+
 def test_calibration_batch_shape():
     x = calibration_batch(256, n_samples=4, seq_len=64)
     assert x.shape == (4, 64)
     assert x.max() < 256
+
+
+def test_calibration_batch_labeled_variant():
+    """labels=True returns the full loader batch; tokens identical to the
+    unlabeled call and to the eval loader's step-0 batch (one doc-length
+    code path for calibration and eval)."""
+    toks = calibration_batch(256, n_samples=4, seq_len=64)
+    b = calibration_batch(256, n_samples=4, seq_len=64, labels=True)
+    np.testing.assert_array_equal(b["tokens"], toks)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    dl = DataLoader(LoaderConfig(global_batch=4, seq_len=64, vocab=256,
+                                 split="calib"))
+    np.testing.assert_array_equal(next(dl)["tokens"], toks)

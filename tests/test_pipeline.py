@@ -34,6 +34,52 @@ def test_calibration_tape_covers_blocks(smoke_model):
     assert len(tape[wq]) == cfg.n_layers
 
 
+def test_calib_for_scoring_and_block_index():
+    """_calib_for regression: candidates are scored, not first-match-wins.
+
+    Two-scope tape — a decoder with per-block self-attn and cross-attn that
+    share leaf names, plus a second block. The old first-match-wins walk
+    returned whichever key dict order offered; now the block index must
+    agree, an exact parent beats a synonym, and d_in prunes shape mismatch.
+    """
+    from repro.core.pipeline import _calib_for
+    x_attn0 = [np.zeros((4, 8), np.float32)]
+    x_xattn0 = [np.ones((4, 8), np.float32)]
+    x_attn1 = [np.full((4, 8), 2.0, np.float32)]
+    tape = {
+        "block0/attn/wq": x_attn0,
+        "block0/xattn/wq": x_xattn0,
+        "block1/attn/wq": x_attn1,
+    }
+    # exact parent (xattn == xattn) outranks the attn synonym of mixer
+    got = _calib_for(tape, "blocks/0/xattn/wq/w")
+    np.testing.assert_array_equal(got[0], x_xattn0[0])
+    # mixer matches self-attn (synonym), never the cross-attn key
+    got = _calib_for(tape, "blocks/0/mixer/wq/w")
+    np.testing.assert_array_equal(got[0], x_attn0[0])
+    # block index is hard: block 1's param gets block 1's activations
+    got = _calib_for(tape, "blocks/1/mixer/wq/w")
+    np.testing.assert_array_equal(got[0], x_attn1[0])
+    # block-less (scan-stacked) params only match block-less keys
+    assert _calib_for({"attn/wq": x_attn0}, "blocks/1/mixer/wq/w") == []
+    got = _calib_for({"attn/wq": x_attn0}, "blocks/mixer/wq/w")
+    np.testing.assert_array_equal(got[0], x_attn0[0])
+    # d_in validation prunes a wrong-width candidate
+    assert _calib_for(tape, "blocks/0/mixer/wq/w", d_in=16) == []
+
+
+def test_calib_for_ambiguity_raises():
+    """Two distinct keys at the winning rank must raise, not pick one."""
+    import pytest as _pytest
+    from repro.core.pipeline import _calib_for
+    tape = {
+        "block0/attn/wq": [np.zeros((4, 8), np.float32)],
+        "block0/mla/wq": [np.ones((4, 8), np.float32)],
+    }
+    with _pytest.raises(ValueError, match="ambiguous calibration match"):
+        _calib_for(tape, "blocks/0/mixer/wq/w")
+
+
 def test_quantize_model_end_to_end(smoke_model):
     cfg, model, params = smoke_model
     toks = np.random.default_rng(0).integers(0, cfg.vocab, (2, 48))
